@@ -1,0 +1,33 @@
+"""Paper Fig. 12: speedup + energy efficiency of LoAS vs SparTen-SNN /
+GoSPA-SNN / Gamma-SNN across AlexNet / VGG16 / ResNet19."""
+from repro.sim import HwConfig, speedup_energy_table
+
+PAPER = {  # (speedup vs sparten, energy-eff vs sparten) for LoAS-FT
+    "alexnet": (6.7, 3.68), "vgg16": (4.08, 3.17), "resnet19": (8.51, 3.54),
+}
+PAPER_AVGS = {"sparten-snn": 6.79, "gospa-snn": 5.99, "gamma-snn": 3.25}
+
+
+def rows():
+    hw = HwConfig()
+    t = speedup_energy_table(hw)
+    out = []
+    avgs = {"sparten-snn": [], "gospa-snn": [], "gamma-snn": []}
+    for net, row in t.items():
+        lf = row["loas-ft"]
+        us = lf["cycles"] / hw.freq_hz * 1e6
+        for base in ("sparten-snn", "gospa-snn", "gamma-snn"):
+            sp = row[base]["cycles"] / lf["cycles"]
+            ee = row[base]["energy_pj"] / lf["energy_pj"]
+            avgs[base].append(sp)
+            out.append((f"fig12/{net}/loas-ft_vs_{base}", us,
+                        f"speedup={sp:.2f}x energy_eff={ee:.2f}x"))
+        out.append((
+            f"fig12/{net}/ft_gain", us,
+            f"ft_speedup_gain={lf['speedup_vs_sparten']/row['loas']['speedup_vs_sparten']:.3f} (paper ~1.20)",
+        ))
+    for base, vals in avgs.items():
+        sim = sum(vals) / len(vals)
+        out.append((f"fig12/avg_speedup_vs_{base}", 0.0,
+                    f"sim={sim:.2f}x paper={PAPER_AVGS[base]:.2f}x"))
+    return out

@@ -1,0 +1,35 @@
+"""Paper Fig. 13 (on-/off-chip traffic per network) and Fig. 14 (off-chip
+traffic breakdown per single-layer workload + compressed-format overhead)."""
+from repro.sim import HwConfig, run_design, run_layer
+from repro.sim.runner import DESIGNS
+
+
+def rows():
+    hw = HwConfig()
+    out = []
+    # Fig 13: network-level traffic ratios vs LoAS-FT
+    for net in ("alexnet", "vgg16", "resnet19"):
+        lo = run_design("loas-ft", net, hw)
+        for d in ("sparten-snn", "gospa-snn", "gamma-snn"):
+            r = run_design(d, net, hw)
+            out.append((
+                f"fig13/{net}/{d}", r.cycles / hw.freq_hz * 1e6,
+                f"offchip_KB={r.dram_total/1024:.0f} onchip_MB={r.sram_bytes/2**20:.1f} "
+                f"dram_ratio_vs_loas={r.dram_total/lo.dram_total:.2f} "
+                f"sram_ratio_vs_loas={r.sram_bytes/lo.sram_bytes:.2f}",
+            ))
+        out.append((f"fig13/{net}/loas-ft", lo.cycles / hw.freq_hz * 1e6,
+                    f"offchip_KB={lo.dram_total/1024:.0f} onchip_MB={lo.sram_bytes/2**20:.1f}"))
+    # Fig 14: single-layer breakdown
+    for lname in ("A-L4", "V-L8", "R-L19", "T-HFF"):
+        lo = run_layer("loas-ft", lname, hw)
+        sp = run_layer("sparten-snn", lname, hw)
+        for d in DESIGNS:
+            r = run_layer(d, lname, hw)
+            br = {k: round(v / 1024, 1) for k, v in r.dram_bytes.items()}
+            out.append((f"fig14/{lname}/{d}", r.cycles / hw.freq_hz * 1e6,
+                        f"offchip_breakdown_KB={br}"))
+        fmt_ratio = lo.dram_bytes["format"] / max(sp.dram_bytes["format"], 1)
+        out.append((f"fig14/{lname}/format_overhead", 0.0,
+                    f"loas_vs_sparten_format={fmt_ratio:.2f}x (paper ~2.1x: extra A bitmasks)"))
+    return out

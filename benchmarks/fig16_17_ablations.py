@@ -1,0 +1,59 @@
+"""Paper Fig. 16 (TPPE temporal scalability + silent-neuron ratio vs T) and
+Fig. 17 (sensitivity to B sparsity, timesteps, layer size)."""
+import dataclasses
+
+from repro.sim import HwConfig, get_layer, get_network, run_design
+from repro.sim.energy import tppe_area_power
+from repro.sim.loas import layer_cost as loas_layer
+from repro.sim.base import run_network
+
+
+def rows():
+    hw = HwConfig()
+    out = []
+    # Fig 16a: TPPE area/power vs T (paper: 1.37x / 1.25x at T=16)
+    a4, p4 = tppe_area_power(4)
+    for T in (4, 8, 16):
+        a, p = tppe_area_power(T)
+        out.append((f"fig16a/tppe_T{T}", 0.0,
+                    f"area_x={a/a4:.2f} power_x={p/p4:.2f}"))
+    # Fig 16b: silent-neuron ratio vs T (rate-coded firing model: a neuron is
+    # silent iff it fires at no timestep; per-timestep rate r constant =>
+    # silent(T) = (1-r)^T; FT preprocessing re-silences <2-spike neurons).
+    l = get_layer("V-L8")
+    r_rate = l.d_a
+    for T in (4, 6, 8):
+        silent = (1 - r_rate) ** T
+        silent_ft = silent + T * r_rate * (1 - r_rate) ** (T - 1)  # mask 1-spike
+        out.append((f"fig16b/silent_T{T}", 0.0,
+                    f"silent={silent:.2f} silent_ft={silent_ft:.2f} "
+                    f"(norm_to_T4_ft={silent_ft/((1-r_rate)**4 + 4*r_rate*(1-r_rate)**3):.2f})"))
+    # Fig 17a: sensitivity to B sparsity on VGG16 (paper: ~88% perf drop
+    # from 98.2% to 25% sparse)
+    net = get_network("vgg16")
+    base_cycles = None
+    for sp_b in (0.982, 0.684, 0.25):
+        layers = [dataclasses.replace(x, d_b=min(1 - sp_b, 1.0)) for x in net.layers]
+        tot = run_network(lambda ll, h: loas_layer(ll, h, preprocessed=True),
+                          dataclasses.replace(net, layers=tuple(layers)), hw)
+        if base_cycles is None:
+            base_cycles = tot.cycles
+        out.append((f"fig17a/spB_{sp_b:.3f}", tot.cycles / hw.freq_hz * 1e6,
+                    f"rel_perf={base_cycles/tot.cycles:.3f}"))
+    # Fig 17b: timestep scaling (paper: ~14% perf loss at 2x T)
+    for T in (4, 8):
+        layers = [dataclasses.replace(x, T=T) for x in net.layers]
+        tot = run_network(lambda ll, h: loas_layer(ll, h, preprocessed=True),
+                          dataclasses.replace(net, layers=tuple(layers)), hw)
+        if T == 4:
+            c4 = tot.cycles
+        out.append((f"fig17b/T{T}", tot.cycles / hw.freq_hz * 1e6,
+                    f"rel_perf={c4/tot.cycles:.3f}"))
+    # Fig 17c: layer-size scaling — V-L8 vs the Spike-Transformer HFF layer
+    for lname in ("V-L8", "T-HFF"):
+        l = get_layer(lname)
+        res = loas_layer(l, hw, preprocessed=True)
+        macs = l.T * l.M * l.N * l.K
+        out.append((f"fig17c/{lname}", res.cycles / hw.freq_hz * 1e6,
+                    f"macs={macs:.2e} cycles_per_Gmac={res.cycles/(macs/1e9):.0f}"))
+    return out

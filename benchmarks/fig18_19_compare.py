@@ -1,0 +1,31 @@
+"""Paper Fig. 18 (dual-sparse SNN on LoAS vs dual-sparse ANN on SparTen /
+Gamma) and Fig. 19 (vs dense-SNN accelerators PTB / Stellar)."""
+from repro.sim import HwConfig, dense_snn_table, snn_vs_ann_table
+
+
+def rows():
+    hw = HwConfig()
+    out = []
+    a = snn_vs_ann_table(hw)
+    out.append(("fig18/energy_vs_sparten_ann", 0.0,
+                f"sim={a['energy_vs_sparten_ann']:.2f}x paper~2.5x"))
+    out.append(("fig18/energy_vs_gamma_ann", 0.0,
+                f"sim={a['energy_vs_gamma_ann']:.2f}x paper~1.2x"))
+    snn_dram = a["loas-snn"]["dram"]
+    ann_dram = a["sparten-ann"]["dram"]
+    out.append(("fig18/traffic_saving_vs_sparten_ann", 0.0,
+                f"snn_dram/ann_dram={snn_dram/ann_dram:.2f} (paper ~0.4: '60% less')"))
+    d = dense_snn_table(hw)
+    out.append(("fig19/speedup_vs_ptb",
+                d["loas"]["cycles"] / hw.freq_hz * 1e6,
+                f"sim={d['speedup_vs_ptb']:.1f}x paper~46.9x"))
+    out.append(("fig19/speedup_vs_stellar", 0.0,
+                f"sim={d['speedup_vs_stellar']:.1f}x paper~7.1x"))
+    out.append(("fig19/energy_vs_ptb", 0.0,
+                f"sim={d['energy_vs_ptb']:.1f}x paper~6x"))
+    out.append(("fig19/energy_vs_stellar", 0.0,
+                f"sim={d['energy_vs_stellar']:.1f}x paper~2.5x"))
+    out.append(("fig19/dram_vs_ptb", 0.0,
+                f"sim={d['ptb']['dram']/d['loas']['dram']:.1f}x paper~3x; "
+                f"sram {d['ptb']['sram']/d['loas']['sram']:.1f}x paper~12.5x"))
+    return out

@@ -1,0 +1,71 @@
+"""Kernel-level benchmarks: FTP vs timestep-sequential schedules (the
+dataflow the whole paper is about), packed-vs-dense traffic, and the Pallas
+kernel's analytic roofline placement on the v5e target.
+
+Wall-times on this CPU container are schedule-comparison signals, not TPU
+numbers; the derived column carries the analytic (target-hardware) terms.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ftp_spmspm, pack_spikes, sequential_spmspm
+from repro.kernels import ops
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows():
+    out = []
+    rng = np.random.default_rng(0)
+    T, M, K, N = 4, 256, 2304, 512  # V-L8-shaped
+    spikes = (rng.random((T, M, K)) < 0.12).astype(np.float32)
+    packed = np.asarray(pack_spikes(jnp.asarray(spikes)))
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w[rng.random((K, N)) < 0.968] = 0
+
+    f_ftp = jax.jit(lambda a, b: ftp_spmspm(a, b, T))
+    f_seq = jax.jit(lambda a, b: sequential_spmspm(a, b, T))
+    t_ftp = _time(f_ftp, jnp.asarray(packed), jnp.asarray(w))
+    t_seq = _time(f_seq, jnp.asarray(packed), jnp.asarray(w))
+    out.append(("kernels/ftp_vs_sequential_schedule", t_ftp,
+                f"sequential_us={t_seq:.0f} ftp_speedup={t_seq/t_ftp:.2f}x (XLA:CPU)"))
+
+    # traffic model: packed spikes vs bf16 activations for the same GEMM
+    bytes_packed = M * K * 4 + K * N * 2 + M * N * 4  # uint32 words
+    bytes_bf16 = T * M * K * 2 + K * N * 2 + T * M * N * 4
+    out.append(("kernels/packed_traffic", 0.0,
+                f"packed_B={bytes_packed:.3e} dense_bf16_B={bytes_bf16:.3e} "
+                f"saving={bytes_bf16/bytes_packed:.2f}x"))
+
+    # Pallas kernel (interpret) correctness-at-speed + analytic roofline
+    t_pallas = _time(
+        lambda a, b: ops.ftp_spmm(a, b, T), jnp.asarray(packed),
+        jnp.asarray(w), reps=1,
+    )
+    flops = 2 * T * M * K * N
+    t_comp = flops / PEAK_FLOPS
+    t_mem = (M * K * 4 + K * N * 2 + T * M * N * 4) / HBM_BW
+    ai = flops / (M * K * 4 + K * N * 2 + T * M * N * 4)
+    out.append(("kernels/ftp_spmm_pallas_interpret", t_pallas,
+                f"v5e_t_comp_us={t_comp*1e6:.1f} t_mem_us={t_mem*1e6:.1f} "
+                f"AI={ai:.0f} bound={'compute' if t_comp>t_mem else 'memory'}"))
+
+    # fused-LIF output-traffic saving (P-LIF epilogue)
+    out_fused = M * N * 4 + M * N * 4      # packed spikes + potentials
+    out_unfused = T * M * N * 4            # full-sum tensor to HBM
+    out.append(("kernels/fused_lif_output_saving", 0.0,
+                f"unfused_B={out_unfused:.2e} fused_B={out_fused:.2e} "
+                f"saving={out_unfused/out_fused:.2f}x"))
+    return out

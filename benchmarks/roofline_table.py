@@ -1,0 +1,26 @@
+"""§Roofline: per (arch x shape x mesh) roofline terms from the dry-run's
+compiled artifacts (reads experiments/dryrun/*.json written by
+repro.launch.dryrun)."""
+import glob
+import json
+import os
+
+from repro.roofline.report import roofline_from_record
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def rows():
+    out = []
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        return [("roofline/missing", 0.0,
+                 "run `python -m repro.launch.dryrun` first")]
+    for f in files:
+        rec = json.load(open(f))
+        if not rec.get("ok") or rec.get("skipped"):
+            continue
+        rl = roofline_from_record(rec)
+        name = f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']}"
+        out.append((name, rl["t_total_us"], rl["summary"]))
+    return out

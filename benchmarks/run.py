@@ -1,0 +1,49 @@
+"""Benchmark harness — one module per paper table/figure (+ kernel and
+roofline benches).  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig12 ...  # filter by prefix
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (
+        fig12_speedup,
+        fig13_14_traffic,
+        fig16_17_ablations,
+        fig18_19_compare,
+        kernels_bench,
+        roofline_table,
+        table4_area_power,
+    )
+
+    modules = {
+        "fig12": fig12_speedup,
+        "fig13_14": fig13_14_traffic,
+        "table4": table4_area_power,
+        "fig16_17": fig16_17_ablations,
+        "fig18_19": fig18_19_compare,
+        "kernels": kernels_bench,
+        "roofline": roofline_table,
+    }
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    print("name,us_per_call,derived")
+    failed = 0
+    for key, mod in modules.items():
+        if filters and not any(key.startswith(f) for f in filters):
+            continue
+        try:
+            for name, us, derived in mod.rows():
+                print(f'{name},{us:.2f},"{derived}"')
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            print(f'{key}/ERROR,0.00,"{type(e).__name__}: {e}"')
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

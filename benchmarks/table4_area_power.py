@@ -1,0 +1,22 @@
+"""Paper Table IV: area/power breakdown of LoAS and one TPPE (reported from
+the calibrated model; the RTL-synthesis numbers are the paper's)."""
+from repro.sim.energy import TABLE_IV, tppe_area_power
+
+
+def rows():
+    out = []
+    for unit, table in TABLE_IV.items():
+        for comp, (area, power) in table.items():
+            out.append((f"table4/{unit}/{comp}", 0.0,
+                        f"area_mm2={area} power_mW={power}"))
+    a4, p4 = tppe_area_power(4)
+    # headline shares the paper calls out
+    fp_area = TABLE_IV["tppe"]["Fast Prefix"][0] / a4
+    fp_power = TABLE_IV["tppe"]["Fast Prefix"][1] / p4
+    lg_area = TABLE_IV["tppe"]["Laggy Prefix"][0] / a4
+    lg_power = TABLE_IV["tppe"]["Laggy Prefix"][1] / p4
+    out.append(("table4/fast_prefix_share", 0.0,
+                f"area={fp_area*100:.1f}% (paper 66.7%) power={fp_power*100:.1f}% (paper 51.8%)"))
+    out.append(("table4/laggy_prefix_share", 0.0,
+                f"area={lg_area*100:.1f}% (paper 8.3%) power={lg_power*100:.1f}% (paper 11.4%)"))
+    return out

@@ -1,0 +1,64 @@
+"""End-to-end LM training driver with the paper's technique integrated:
+a llama-family decoder whose MLP blocks run as dual-sparse SpikingFFNs
+(direct-coded LIF + FTP spMspM), trained for a few hundred steps on the
+synthetic pipeline — loss must drop.
+
+    PYTHONPATH=src python examples/spiking_ffn_llm.py --steps 200
+    PYTHONPATH=src python examples/spiking_ffn_llm.py --steps 200 --dense
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, smoke_variant
+from repro.data.pipeline import SyntheticLMData
+from repro.models.registry import build_model
+from repro.train.step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dense", action="store_true",
+                    help="baseline: standard dense FFN instead of spiking")
+    ap.add_argument("--weight-density", type=float, default=0.2)
+    args = ap.parse_args()
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg,
+        n_layers=3,
+        d_model=128,
+        d_ff=256,
+        spiking_ffn=not args.dense,
+        spiking_T=4,
+        spiking_weight_density=args.weight_density,
+    )
+    model = build_model(cfg)
+    data = SyntheticLMData(cfg, seq_len=args.seq, global_batch=args.batch)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(state["params"]))
+    print(f"mode={'dense' if args.dense else 'spiking-FFN'} params={n_params/1e6:.1f}M")
+
+    step_fn = jax.jit(make_train_step(model), donate_argnums=(0,))
+    t0, first = time.time(), None
+    for step in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
+        state, metrics = step_fn(state, batch)
+        if first is None:
+            first = float(metrics["loss"])
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f}")
+    last = float(metrics["loss"])
+    print(f"loss {first:.3f} -> {last:.3f} in {time.time()-t0:.0f}s "
+          f"({'PASS' if last < first else 'FAIL'}: learning with "
+          f"{'dense' if args.dense else 'spiking dual-sparse'} FFN)")
+
+
+if __name__ == "__main__":
+    main()

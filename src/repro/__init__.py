@@ -1,0 +1,3 @@
+"""repro: LoAS (fully temporal-parallel dual-sparse SNN) as a production
+JAX/Pallas framework.  See DESIGN.md for the system map."""
+__version__ = "1.0.0"

@@ -1,0 +1,149 @@
+"""Mesh-agnostic sharded checkpointing with atomic commit + async save.
+
+Layout:  <dir>/step_<n>.tmp/ -> (atomic rename) -> <dir>/step_<n>/
+           manifest.json     tree structure, shapes, dtypes, step
+           arr_<i>.npy       one file per leaf (host-gathered)
+
+Fault-tolerance contract:
+  * atomic rename means a crash mid-save never corrupts the latest ckpt;
+  * restore takes a TARGET sharding tree (any mesh!) and device_puts each
+    leaf — checkpoints are mesh-agnostic, which is what makes elastic
+    re-scale (ft/elastic.py) a restore-with-different-mesh;
+  * async mode hands the host-gathered arrays to a writer thread so the TPUs
+    keep stepping (save latency off the critical path);
+  * `keep` bounds disk usage; the newest `keep` checkpoints survive.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree.flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(directory: str, step: int, state, keep: int = 3) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = _tree_paths(state)
+    host = [np.asarray(x) for x in flat]  # gather to host
+    tmp = os.path.join(directory, f"step_{step}.tmp")
+    final = os.path.join(directory, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {
+        "step": int(step),
+        "treedef": str(treedef),
+        "leaves": [
+            {"file": f"arr_{i}.npy", "shape": list(a.shape), "dtype": str(a.dtype)}
+            for i, a in enumerate(host)
+        ],
+    }
+    for i, a in enumerate(host):
+        np.save(os.path.join(tmp, f"arr_{i}.npy"), a)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int):
+    steps = sorted(
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    )
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, f"step_{s}"), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, step: int, like, shardings=None):
+    """Restore into the structure of `like` (pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of
+    NamedShardings — pass the CURRENT mesh's shardings to reshard (elastic)."""
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat_like, treedef = jax.tree.flatten(like)
+    assert len(flat_like) == len(manifest["leaves"]), (
+        f"checkpoint has {len(manifest['leaves'])} leaves, "
+        f"target structure has {len(flat_like)}"
+    )
+    flat_sh = (
+        treedef.flatten_up_to(shardings) if shardings is not None
+        else [None] * len(flat_like)
+    )
+    out = []
+    for i, (lk, sh, meta) in enumerate(zip(flat_like, flat_sh, manifest["leaves"])):
+        a = np.load(os.path.join(path, meta["file"]))
+        assert tuple(a.shape) == tuple(lk.shape), (
+            f"leaf {i}: ckpt shape {a.shape} != target {lk.shape}"
+        )
+        out.append(jax.device_put(a, sh) if sh is not None else jax.device_put(a))
+    return jax.tree.unflatten(treedef, out)
+
+
+@dataclass
+class CheckpointManager:
+    """Periodic + async checkpointing for the trainer loop."""
+
+    directory: str
+    interval: int = 100
+    keep: int = 3
+    async_save: bool = True
+    _thread: threading.Thread | None = field(default=None, repr=False)
+    last_saved: int = -1
+
+    def maybe_save(self, step: int, state, force: bool = False):
+        if not force and (self.interval <= 0 or step % self.interval != 0):
+            return False
+        self.wait()
+        # Host-gather synchronously (cheap vs device step), write async.
+        flat, treedef = jax.tree.flatten(state)
+        host = [np.asarray(x) for x in flat]
+        host_state = jax.tree.unflatten(treedef, host)
+        if self.async_save:
+            self._thread = threading.Thread(
+                target=save_checkpoint,
+                args=(self.directory, step, host_state, self.keep),
+                daemon=True,
+            )
+            self._thread.start()
+        else:
+            save_checkpoint(self.directory, step, host_state, self.keep)
+        self.last_saved = step
+        return True
+
+    def wait(self):
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join()
+        self._thread = None
+
+    def restore_latest(self, like, shardings=None):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return restore_checkpoint(self.directory, step, like, shardings), step

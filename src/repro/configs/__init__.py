@@ -1,0 +1,46 @@
+"""Architecture configs: one module per assigned arch + paper SNN workloads.
+
+`get_config(name)` / `list_archs()` are the public entry points
+(`--arch <id>` in the launchers).
+"""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPES, ArchConfig, ShapeCell, applicable_shapes, skip_reason, smoke_variant
+
+ARCHS = [
+    "gemma_2b",
+    "qwen3_14b",
+    "nemotron_4_340b",
+    "llama3_2_1b",
+    "rwkv6_1_6b",
+    "hubert_xlarge",
+    "llava_next_mistral_7b",
+    "mixtral_8x22b",
+    "phi3_5_moe",
+    "zamba2_7b",
+]
+
+_ALIASES = {
+    "gemma-2b": "gemma_2b",
+    "qwen3-14b": "qwen3_14b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "llama3.2-1b": "llama3_2_1b",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "hubert-xlarge": "hubert_xlarge",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe",
+    "zamba2-7b": "zamba2_7b",
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    mod_name = _ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.CONFIG
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)

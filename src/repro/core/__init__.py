@@ -1,0 +1,41 @@
+"""LoAS core: FTP dataflow, spike compression, LIF dynamics, inner-join."""
+from .ftp import ftp_layer, ftp_spmspm, ftp_spmspm_unpacked, sequential_spmspm
+from .lif import (
+    DEFAULT_TAU,
+    DEFAULT_VTH,
+    direct_encode,
+    lif_forward,
+    plif_packed,
+    rate_decode,
+    spike_fn,
+)
+from .packing import (
+    block_activity_map,
+    block_nonzero_map,
+    compression_efficiency,
+    mask_low_activity,
+    pack_spikes,
+    popcount,
+    silent_fraction,
+    spike_sparsity,
+    unpack_spikes,
+)
+from .snn_layers import (
+    SpikingConfig,
+    init_spiking_ffn,
+    prune_by_magnitude,
+    spiking_ffn_apply,
+    spiking_linear_infer,
+    spiking_linear_train,
+)
+
+__all__ = [
+    "ftp_layer", "ftp_spmspm", "ftp_spmspm_unpacked", "sequential_spmspm",
+    "lif_forward", "plif_packed", "direct_encode", "rate_decode", "spike_fn",
+    "DEFAULT_TAU", "DEFAULT_VTH",
+    "pack_spikes", "unpack_spikes", "silent_fraction", "spike_sparsity",
+    "popcount", "mask_low_activity", "block_activity_map", "block_nonzero_map",
+    "compression_efficiency",
+    "SpikingConfig", "init_spiking_ffn", "spiking_ffn_apply",
+    "spiking_linear_train", "spiking_linear_infer", "prune_by_magnitude",
+]

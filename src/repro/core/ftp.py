@@ -1,0 +1,86 @@
+"""Fully Temporal-Parallel (FTP) spMspM dataflow — paper Algorithm 1.
+
+FTP = inner-product loop nest (m, n, k) with the temporal dimension t placed
+*innermost* and *fully parallelized*:
+
+    for m, for n, for k:                 # IP spMspM
+        parallel-for t:                  # spatially unrolled
+            O[m, n, t] += A[m, k, t] * B[k, n]
+    parallel-for t:
+        C[m, n, t] = LIF(O[m, n, t])
+
+On TPU (DESIGN.md §3) the `parallel-for t` maps to T bit-plane contractions of
+one weight tile resident in VMEM — the tile is fetched once per (m, n, k)
+block and reused across all timesteps, which is the paper's goal (1): zero
+extra data movement along t.  The functions here are the pure-jnp dataflow
+definitions; `repro.kernels` holds the Pallas realization.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .lif import DEFAULT_TAU, DEFAULT_VTH, lif_forward
+from .packing import pack_spikes, unpack_spikes
+
+
+def ftp_spmspm(packed_a: jax.Array, b: jax.Array, T: int) -> jax.Array:
+    """FTP spMspM on packed spikes: (M, K) uint32 x (K, N) -> (T, M, N) f32.
+
+    Reference semantics: O[t] = unpack(A)[t] @ B for all t, computed with the
+    t-dim innermost/parallel (a single batched contraction sharing B).
+    """
+    a = unpack_spikes(packed_a, T, dtype=b.dtype)  # (T, M, K) bit-planes
+    # Fold T into the row dimension: one (T*M, K) x (K, N) contraction — the
+    # MXU-native form of `parallel-for t` (weight fetched once, reused T x).
+    Tm, M, K = a.shape
+    o = jnp.dot(
+        a.reshape(T * M, K), b, preferred_element_type=jnp.float32
+    )
+    return o.reshape(T, M, b.shape[1])
+
+
+def ftp_layer(
+    packed_a: jax.Array,
+    b: jax.Array,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+) -> tuple[jax.Array, jax.Array]:
+    """One full LoAS layer: FTP spMspM followed by the P-LIF epilogue.
+
+    Returns (packed output spikes (M, N) uint32, final potentials (M, N)).
+    """
+    o = ftp_spmspm(packed_a, b, T)
+    spikes, u = lif_forward(o, v_th=v_th, tau=tau, unroll=True)
+    return pack_spikes(spikes), u
+
+
+def ftp_spmspm_unpacked(spikes: jax.Array, b: jax.Array) -> jax.Array:
+    """Training-path FTP spMspM on float {0,1} spikes (differentiable).
+
+    spikes: (T, M, K) float; b: (K, N).  Same t-innermost batched form.
+    """
+    T, M, K = spikes.shape
+    o = jnp.dot(
+        spikes.reshape(T * M, K).astype(b.dtype),
+        b,
+        preferred_element_type=jnp.float32,
+    )
+    return o.reshape(T, M, b.shape[1])
+
+
+def sequential_spmspm(packed_a: jax.Array, b: jax.Array, T: int) -> jax.Array:
+    """Timestep-SEQUENTIAL spMspM — the baseline dataflow of SparTen-SNN /
+    GoSPA-SNN / Gamma-SNN (t-loop outside the spatial loops, one matmul per
+    timestep re-fetching B each time).  Numerically identical to FTP; exists
+    so the benchmark harness can contrast the two schedules on real hardware
+    and so tests can assert the equivalence the paper relies on."""
+    a = unpack_spikes(packed_a, T, dtype=b.dtype)
+
+    def one_t(a_t):
+        return jnp.dot(a_t, b, preferred_element_type=jnp.float32)
+
+    return jax.lax.map(one_t, a)  # sequential over T by construction

@@ -1,0 +1,113 @@
+"""Leaky-Integrate-and-Fire neuron dynamics (paper §II-A) and the P-LIF unit.
+
+Semantics (hard reset, as the paper fixes in footnote 2):
+
+    X[t] = O[t] + U[t-1]                      # integrate
+    C[t] = 1 if X[t] > v_th else 0            # fire       (Eq. 2)
+    U[t] = tau * X[t] * (1 - C[t])            # leak+reset (Eq. 3)
+
+The temporal recurrence is inherently sequential, but T is tiny (<= 8 for
+state-of-the-art direct-coded SNNs), so the P-LIF unit computes all T outputs
+"in one shot" once the full sums O[0..T-1] are available — exactly what the
+fully temporal-parallel dataflow produces.  We unroll the T loop; everything
+is vectorized over the neuron dimensions (the spatial unrolling of Fig. 7).
+
+Training uses BPTT with a surrogate gradient (paper §II-A2): the Heaviside
+firing function gets an ATan surrogate derivative [Fang et al.].
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .packing import pack_spikes
+
+DEFAULT_VTH = 1.0
+DEFAULT_TAU = 0.5
+SURROGATE_ALPHA = 2.0
+
+
+@jax.custom_vjp
+def spike_fn(x: jax.Array) -> jax.Array:
+    """Heaviside step with ATan surrogate gradient: forward 1[x > 0]."""
+    return (x > 0).astype(x.dtype)
+
+
+def _spike_fwd(x):
+    return spike_fn(x), x
+
+
+def _spike_bwd(x, g):
+    # d/dx arctan-surrogate: alpha / (2 * (1 + (pi/2 * alpha * x)^2))
+    s = math.pi / 2 * SURROGATE_ALPHA
+    return (g * SURROGATE_ALPHA / (2.0 * (1.0 + (s * x) ** 2)),)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def lif_forward(
+    o: jax.Array,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    u0: jax.Array | None = None,
+    unroll: bool = True,
+):
+    """Run the LIF recurrence over a (T, ...) input-current tensor.
+
+    Returns (spikes (T, ...), final membrane potential (...)).
+    Differentiable (surrogate gradient); use for BPTT training.
+    """
+    T = o.shape[0]
+    u = jnp.zeros_like(o[0]) if u0 is None else u0
+
+    def step(u, o_t):
+        x = o_t + u
+        c = spike_fn(x - v_th)
+        u_next = tau * x * (1.0 - c)
+        return u_next, c
+
+    if unroll:
+        spikes = []
+        for t in range(T):
+            u, c = step(u, o[t])
+            spikes.append(c)
+        return jnp.stack(spikes), u
+    u, spikes = jax.lax.scan(step, u, o)
+    return spikes, u
+
+
+def plif_packed(
+    o: jax.Array,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+) -> tuple[jax.Array, jax.Array]:
+    """P-LIF unit (paper Fig. 7, purple box): full sums for all T in, packed
+    output spike words out.  Inference-only (no gradient through packing).
+
+    o: (T, ...) full sums.  Returns (packed uint32 (...), final potential).
+    """
+    spikes, u = lif_forward(o, v_th=v_th, tau=tau, unroll=True)
+    return pack_spikes(spikes), u
+
+
+def direct_encode(
+    x: jax.Array,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+) -> jax.Array:
+    """Direct (rate) encoding (paper §II-A2): the analog input is applied as a
+    constant input current for T timesteps through a LIF layer; the resulting
+    spike trains feed the SNN.  Returns (T, ...) spikes."""
+    o = jnp.broadcast_to(x[None], (T,) + x.shape)
+    spikes, _ = lif_forward(o, v_th=v_th, tau=tau)
+    return spikes
+
+
+def rate_decode(spikes: jax.Array) -> jax.Array:
+    """Decode a (T, ...) spike train to an analog value: firing rate."""
+    return jnp.mean(spikes, axis=0)

@@ -1,0 +1,142 @@
+"""FTP-friendly spike compression: packing spikes along the temporal axis.
+
+Paper (LoAS §IV-A): instead of storing one coordinate per 1-bit spike per
+timestep (CSR-style, <25 % compression efficiency), pack the T spikes of one
+presynaptic neuron into a single T-bit word.  Neurons whose packed word is
+zero are *silent neurons* and are dropped entirely from memory; the survivors
+are addressed through a 1-bit-per-position bitmask (see `fibers.py`).
+
+Convention: spike tensors carry time as the LEADING axis, ``spikes[t, ...]``,
+matching the (T, M, K) layout in the paper's Algorithm 1.  Packed words place
+timestep ``t`` at bit ``t`` (LSB = t0), so ``1010`` in the paper's Figure 8
+(fires at t0 and t2, reading left-to-right as t0..t3) is stored as
+``0b0101 = 5``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAX_T = 32  # packed words are uint32
+
+
+def pack_spikes(spikes: jax.Array) -> jax.Array:
+    """Pack a (T, ...) boolean/{0,1} spike tensor into (...) uint32 words.
+
+    Bit ``t`` of the output word equals ``spikes[t]``.
+    """
+    T = spikes.shape[0]
+    if T > MAX_T:
+        raise ValueError(f"T={T} exceeds MAX_T={MAX_T}")
+    bits = spikes.astype(jnp.uint32)
+    weights = (jnp.uint32(1) << jnp.arange(T, dtype=jnp.uint32)).reshape(
+        (T,) + (1,) * (spikes.ndim - 1)
+    )
+    return jnp.sum(bits * weights, axis=0, dtype=jnp.uint32)
+
+
+def unpack_spikes(packed: jax.Array, T: int, dtype=jnp.float32) -> jax.Array:
+    """Unpack (...) uint32 words into a (T, ...) spike tensor of ``dtype``."""
+    if T > MAX_T:
+        raise ValueError(f"T={T} exceeds MAX_T={MAX_T}")
+    shifts = jnp.arange(T, dtype=jnp.uint32).reshape((T,) + (1,) * packed.ndim)
+    return ((packed[None] >> shifts) & jnp.uint32(1)).astype(dtype)
+
+
+def silent_fraction(packed: jax.Array) -> jax.Array:
+    """Fraction of silent neurons (packed word == 0) — paper Table II
+    'AvSpA packed'."""
+    return jnp.mean((packed == 0).astype(jnp.float32))
+
+
+def spike_sparsity(spikes: jax.Array) -> jax.Array:
+    """Original per-timestep spike sparsity — paper Table II 'AvSpA origin'."""
+    return jnp.mean((spikes == 0).astype(jnp.float32))
+
+
+def popcount(packed: jax.Array) -> jax.Array:
+    """Number of timesteps at which each neuron fires."""
+    return jax.lax.population_count(packed.astype(jnp.uint32))
+
+
+def mask_low_activity(packed: jax.Array, min_spikes: int = 2) -> jax.Array:
+    """Silent-neuron preprocessing (paper §V): zero out presynaptic neurons
+    that fire fewer than ``min_spikes`` times across all timesteps.
+
+    The paper masks neurons with exactly one output spike (min_spikes=2) and
+    recovers accuracy with <5 epochs of fine-tuning; during hardware execution
+    the compressor discards these, creating ~1.1x more silent neurons.
+    """
+    keep = popcount(packed) >= min_spikes
+    return jnp.where(keep, packed, jnp.uint32(0))
+
+
+def mask_low_activity_spikes(spikes: jax.Array, min_spikes: int = 2) -> jax.Array:
+    """Same preprocessing applied to an unpacked (T, ...) spike tensor.
+
+    Differentiable-friendly variant used during fine-tuning: the mask is
+    computed from the spike counts and applied multiplicatively (gradients
+    flow through surviving spikes).
+    """
+    count = jnp.sum(spikes, axis=0, keepdims=True)
+    keep = (count >= min_spikes).astype(spikes.dtype)
+    return spikes * keep
+
+
+# ---------------------------------------------------------------------------
+# Block-activity maps: the TPU-granularity analogue of LoAS's silent-neuron
+# skipping (DESIGN.md D1).  A (bm, bk) block of packed words that is entirely
+# silent contributes nothing to any output tile and can be skipped by the
+# block-level inner join.
+# ---------------------------------------------------------------------------
+
+def block_activity_map(packed: jax.Array, bm: int, bk: int) -> jax.Array:
+    """(M, K) packed words -> (M//bm, K//bk) bool, True where the block has at
+    least one non-silent neuron."""
+    M, K = packed.shape
+    if M % bm or K % bk:
+        raise ValueError(f"shape {(M, K)} not divisible by block {(bm, bk)}")
+    blocks = packed.reshape(M // bm, bm, K // bk, bk)
+    return jnp.any(blocks != 0, axis=(1, 3))
+
+
+def block_nonzero_map(w: jax.Array, bk: int, bn: int) -> jax.Array:
+    """(K, N) weights -> (K//bk, N//bn) bool, True where the block has any
+    non-zero weight (block-sparse view of the paper's column fibers)."""
+    K, N = w.shape
+    if K % bk or N % bn:
+        raise ValueError(f"shape {(K, N)} not divisible by block {(bk, bn)}")
+    blocks = w.reshape(K // bk, bk, N // bn, bn)
+    return jnp.any(blocks != 0, axis=(1, 3))
+
+
+def compression_efficiency(spikes: np.ndarray) -> dict:
+    """Report the paper's compression-efficiency metric for a (T, M, K) spike
+    tensor: raw spike bits stored / bits used by each format.
+
+    Efficiency = spike bits conveyed / coordinate-overhead bits (the payload
+    itself is "real data" in both formats).  Paper §IV-A example: CSR spends
+    2x4 coordinate bits for 2 spikes -> 25 %; LoAS spends a 4-bit row bitmask
+    for 5 spikes -> 125 %.
+      * csr:   per non-zero spike, ceil(log2(K)) coordinate bits, per timestep.
+      * loas:  one K-bit bitmask per row, shared by all T timesteps.
+    """
+    T, M, K = spikes.shape
+    nnz_spikes = int(spikes.sum())
+    packed = np.zeros((M, K), dtype=np.uint32)
+    for t in range(T):
+        packed |= (spikes[t].astype(np.uint32) & 1) << t
+    nonsilent = int((packed != 0).sum())
+    coord_bits = max(1, int(np.ceil(np.log2(K))))
+    csr_overhead = nnz_spikes * coord_bits
+    loas_overhead = M * K  # one bitmask bit per (row, position)
+    return {
+        "spike_bits": nnz_spikes,
+        "csr_overhead_bits": csr_overhead,
+        "loas_overhead_bits": loas_overhead,
+        "loas_payload_bits": nonsilent * T,
+        "csr_efficiency": nnz_spikes / max(csr_overhead, 1),
+        "loas_efficiency": nnz_spikes / max(loas_overhead, 1),
+        "silent_fraction": 1.0 - nonsilent / (M * K),
+    }

@@ -1,0 +1,153 @@
+"""Dual-sparse spiking layers built on the FTP dataflow.
+
+Two execution paths, numerically identical in the forward pass:
+
+* **train**: float {0,1} spikes, surrogate-gradient LIF, differentiable —
+  used by BPTT training and LTH pruning (paper §V software configuration).
+* **infer**: packed uint32 spike words through `ftp_layer` / the Pallas
+  kernel — the LoAS execution model.
+
+`SpikingFFN` is the first-class integration point for the LM architecture
+zoo (DESIGN.md §4): a drop-in replacement for a transformer MLP block, with
+the same analog-in/analog-out contract (direct encoding in, rate decoding
+out), exactly the Spike-Transformer hidden-FFN workload (paper Table II,
+T-HFF) the paper itself evaluates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .ftp import ftp_layer, ftp_spmspm, ftp_spmspm_unpacked
+from .lif import (
+    DEFAULT_TAU,
+    DEFAULT_VTH,
+    direct_encode,
+    lif_forward,
+    rate_decode,
+)
+from .packing import mask_low_activity_spikes, pack_spikes
+
+
+@dataclass(frozen=True)
+class SpikingConfig:
+    T: int = 4
+    v_th: float = DEFAULT_VTH
+    tau: float = DEFAULT_TAU
+    # Silent-neuron preprocessing (paper §V): mask neurons firing < 2 times.
+    preprocess_min_spikes: int = 0  # 0 disables; paper uses 2
+    # Fraction of weights kept after LTH pruning (paper: 1.8-3.2 % kept).
+    weight_density: float = 1.0
+
+
+def prune_by_magnitude(w: jax.Array, density: float) -> jax.Array:
+    """Global magnitude pruning to the target density — one LTH round's
+    pruning step.  Returns the pruned weight tensor (hard zeros)."""
+    if density >= 1.0:
+        return w
+    k = max(1, int(w.size * density))
+    topk = jax.lax.top_k(jnp.abs(w).reshape(-1), k)[0]
+    thresh = jax.lax.stop_gradient(topk[k - 1])
+    return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# SpikingLinear: spike-train in, spike-train out (one LoAS layer).
+# ---------------------------------------------------------------------------
+
+def spiking_linear_train(
+    spikes: jax.Array, w: jax.Array, cfg: SpikingConfig
+) -> jax.Array:
+    """(T, M, K) float spikes x (K, N) -> (T, M, N) float spikes.
+
+    Differentiable training path (surrogate-gradient BPTT)."""
+    if cfg.preprocess_min_spikes > 0:
+        spikes = mask_low_activity_spikes(spikes, cfg.preprocess_min_spikes)
+    o = ftp_spmspm_unpacked(spikes, w)
+    out, _ = lif_forward(o, v_th=cfg.v_th, tau=cfg.tau)
+    return out
+
+
+def spiking_linear_infer(
+    packed: jax.Array, w: jax.Array, cfg: SpikingConfig, use_kernel: bool = False
+) -> jax.Array:
+    """(M, K) packed words x (K, N) -> (M, N) packed words (LoAS layer)."""
+    if cfg.preprocess_min_spikes > 0:
+        from .packing import mask_low_activity
+
+        packed = mask_low_activity(packed, cfg.preprocess_min_spikes)
+    if use_kernel:
+        from repro.kernels import ops
+
+        out_packed, _ = ops.ftp_spmm_fused_lif(
+            packed, w, T=cfg.T, v_th=cfg.v_th, tau=cfg.tau
+        )
+        return out_packed
+    out_packed, _ = ftp_layer(packed, w, cfg.T, v_th=cfg.v_th, tau=cfg.tau)
+    return out_packed
+
+
+# ---------------------------------------------------------------------------
+# SpikingFFN: analog in, analog out — drop-in transformer MLP replacement.
+# ---------------------------------------------------------------------------
+
+def init_spiking_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    scale_in = 1.0 / (d_model ** 0.5)
+    scale_out = 1.0 / (d_ff ** 0.5)
+    return {
+        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
+        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
+    }
+
+
+def spiking_ffn_apply(
+    params: dict,
+    x: jax.Array,
+    cfg: SpikingConfig,
+    mode: str = "train",
+    use_kernel: bool = False,
+) -> jax.Array:
+    """x: (..., d_model) analog activations -> (..., d_model).
+
+    Pipeline: direct-encode(x) -> spikes --W_in--> LIF -> spikes --W_out-->
+    potentials -> rate decode.  Both GEMMs are dual-sparse spMspM under the
+    FTP dataflow; weights may carry LTH-pruned hard zeros.
+    """
+    w_in, w_out = params["w_in"], params["w_out"]
+    if cfg.weight_density < 1.0:
+        w_in = prune_by_magnitude(w_in, cfg.weight_density)
+        w_out = prune_by_magnitude(w_out, cfg.weight_density)
+
+    lead = x.shape[:-1]
+    d_model = x.shape[-1]
+    xm = x.reshape(-1, d_model)  # (M, K)
+    spikes_in = direct_encode(xm, cfg.T, v_th=cfg.v_th, tau=cfg.tau)
+
+    if mode == "train":
+        hidden = spiking_linear_train(spikes_in, w_in, cfg)  # (T, M, F)
+        o = ftp_spmspm_unpacked(hidden, w_out)               # (T, M, D)
+        y = rate_decode(o)
+    elif mode == "infer":
+        packed_in = pack_spikes(spikes_in)
+        if cfg.preprocess_min_spikes > 0:
+            from .packing import mask_low_activity
+
+            packed_in = mask_low_activity(packed_in, cfg.preprocess_min_spikes)
+        if use_kernel:
+            from repro.kernels import ops
+
+            packed_h, _ = ops.ftp_spmm_fused_lif(
+                packed_in, w_in, T=cfg.T, v_th=cfg.v_th, tau=cfg.tau
+            )
+            o = ops.ftp_spmm(packed_h, w_out, T=cfg.T)
+        else:
+            packed_h, _ = ftp_layer(packed_in, w_in, cfg.T, cfg.v_th, cfg.tau)
+            o = ftp_spmspm(packed_h, w_out, cfg.T)
+        y = rate_decode(o)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return y.reshape(*lead, -1).astype(x.dtype)

@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMData, batch_shapes
+
+__all__ = ["SyntheticLMData", "batch_shapes"]

@@ -1,0 +1,5 @@
+from .preemption import PreemptionHandler
+from .straggler import StepTimer
+from .elastic import plan_mesh, reshard_state
+
+__all__ = ["PreemptionHandler", "StepTimer", "plan_mesh", "reshard_state"]

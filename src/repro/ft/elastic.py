@@ -1,0 +1,39 @@
+"""Elastic re-scale: choose a new mesh for the surviving chip count and
+reshard the (mesh-agnostic) checkpoint onto it.
+
+Because checkpoints store full logical arrays (ckpt/) and shardings are
+derived from logical axes (sharding.py), scaling from e.g. 512 -> 256 chips
+is: plan_mesh(256) -> rebuild shardings -> restore.  The data pipeline is
+stateless-by-step so the batch schedule continues exactly (global batch is
+kept; per-device batch grows).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.sharding import tree_shardings
+
+
+def plan_mesh(n_chips: int, model_parallel: int = 16, devices=None) -> Mesh:
+    """Largest (pod, data, model) mesh for n_chips with the given TP degree.
+    Drops the pod axis when a single pod remains."""
+    assert n_chips % model_parallel == 0, (n_chips, model_parallel)
+    rest = n_chips // model_parallel
+    devices = devices if devices is not None else jax.devices()[:n_chips]
+    dev = np.asarray(devices)
+    if rest > 16 and rest % 16 == 0:
+        shape, axes = (rest // 16, 16, model_parallel), ("pod", "data", "model")
+    else:
+        shape, axes = (rest, model_parallel), ("data", "model")
+    return Mesh(dev.reshape(shape), axes)
+
+
+def reshard_state(state_host, axes_tree, mesh: Mesh, rules: dict):
+    """Place a host-side state pytree onto `mesh` per the logical axes."""
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), state_host
+    )
+    sh = tree_shardings(shapes, axes_tree, mesh, rules)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), state_host, sh)

@@ -1,0 +1,32 @@
+"""Preemption handling: catch SIGTERM/SIGINT, finish the in-flight step,
+checkpoint, exit cleanly.  On TPU pods the maintenance notice arrives as
+SIGTERM minutes before eviction — the trainer polls `should_stop` each step.
+"""
+from __future__ import annotations
+
+import signal
+
+
+class PreemptionHandler:
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self._flag = False
+        self._old = {}
+        for s in signals:
+            try:
+                self._old[s] = signal.signal(s, self._handler)
+            except ValueError:
+                pass  # non-main thread (tests)
+
+    def _handler(self, signum, frame):
+        self._flag = True
+
+    @property
+    def should_stop(self) -> bool:
+        return self._flag
+
+    def trigger(self):  # for tests
+        self._flag = True
+
+    def restore(self):
+        for s, h in self._old.items():
+            signal.signal(s, h)

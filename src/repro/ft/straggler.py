@@ -1,0 +1,43 @@
+"""Straggler detection for the synchronous-SPMD training loop.
+
+In SPMD data parallelism a slow host stalls every all-reduce, so mitigation
+is: detect (per-step wall time vs a robust running median), log/export, and
+let the orchestrator act (drain + elastic re-mesh via ft.elastic).  The
+in-process part — the detector — lives here; the `on_straggler` callback is
+the integration point for the cluster layer.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+
+
+class StepTimer:
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 on_straggler=None):
+        self.window = deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.events: list[dict] = []
+        self._t0 = None
+
+    def __enter__(self):
+        self._t0 = time.monotonic()
+        return self
+
+    def __exit__(self, *exc):
+        dt = time.monotonic() - self._t0
+        med = self.median()
+        self.window.append(dt)
+        if med is not None and dt > self.threshold * med:
+            ev = {"step_time": dt, "median": med, "ratio": dt / med}
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+        return False
+
+    def median(self):
+        if len(self.window) < 5:
+            return None
+        s = sorted(self.window)
+        return s[len(s) // 2]

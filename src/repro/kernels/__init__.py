@@ -1,0 +1,2 @@
+"""Pallas TPU kernels: FTP spMspM (+fused P-LIF), block-sparse dual-join,
+flash attention.  ops.py has the jit'd wrappers; ref.py the jnp oracles."""

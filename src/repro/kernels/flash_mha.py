@@ -1,0 +1,263 @@
+"""Flash attention (fwd + bwd) Pallas TPU kernels — beyond-paper optimization
+for the LM substrate (DESIGN.md §Perf).
+
+Why it exists here: the dry-run roofline shows XLA-level attention
+materializes (cq, Skv) f32 score tensors in HBM several times per layer per
+direction — the dominant memory-term contributor on every attention arch.
+The flash kernels keep score tiles in VMEM (online softmax fwd; recompute
+bwd), cutting attention HBM traffic to the q/k/v/o tensors themselves.
+
+Layout: q (B, H, S, dh), k/v (B, H, S, dh) — grid over (batch*heads, q
+blocks); the kv loop is the innermost grid dim so one q tile stays resident
+while kv tiles stream.  Causal masking prunes fully-masked kv blocks via
+block-triangular grid trimming (we keep it simple: masked compute, exact).
+
+Validated in interpret mode against ref.mha_ref; on-TPU this compiles to
+Mosaic.  The model integration (`layers.multihead_attention`) keeps the XLA
+path as default because the CPU dry-run cannot compile Mosaic kernels —
+EXPERIMENTS.md reports measured-XLA and modeled-flash numbers side by side.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 256
+DEFAULT_BK = 256
+NEG_INF = -1e30
+
+
+def _mask(iq, jk, *, causal: bool, window: int):
+    m = jnp.ones((iq.shape[0], jk.shape[0]), jnp.bool_)
+    if causal:
+        m = jk[None, :] <= iq[:, None]
+        if window:
+            m &= jk[None, :] > (iq[:, None] - window)
+    return m
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, acc_ref, m_ref, l_ref,
+                *, nkv, bq, bk, scale, causal, window):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    iq = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+    jk = j * bk + jax.lax.iota(jnp.int32, bk)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)            # (bk, dh)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                    # (bq, bk)
+    s = jnp.where(_mask(iq, jk, causal=causal, window=window), s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                       # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(j == nkv - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_ref[...] + jnp.log(l))[:, 0]
+
+
+def flash_mha_fwd(q, k, v, *, causal=True, window=0, bq=DEFAULT_BQ,
+                  bk=DEFAULT_BK, interpret=False):
+    """q, k, v: (BH, S, dh) -> (o (BH, S, dh), lse (BH, S))."""
+    BH, S, dh = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, Skv)
+    assert S % bq == 0 and Skv % bk == 0
+    grid = (BH, S // bq, Skv // bk)
+    scale = dh ** -0.5
+    kern = functools.partial(
+        _fwd_kernel, nkv=Skv // bk, bq=bq, bk=bk, scale=scale,
+        causal=causal, window=window,
+    )
+    o, lse = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((BH, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   acc_ref, *, nkv, bq, bk, scale, causal, window):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    iq = pl.program_id(1) * bq + jax.lax.iota(jnp.int32, bq)
+    jk = j * bk + jax.lax.iota(jnp.int32, bk)
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(iq, jk, causal=causal, window=window), s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])                      # (bq, bk)
+    do = do_ref[0].astype(jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    acc_ref[...] += jax.lax.dot_general(ds, k, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nkv - 1)
+    def _():
+        dq_ref[0] = acc_ref[...].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref, acck_ref, accv_ref,
+                    *, nq, bq, bk, scale, causal, window):
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _():
+        acck_ref[...] = jnp.zeros_like(acck_ref)
+        accv_ref[...] = jnp.zeros_like(accv_ref)
+
+    iq = i * bq + jax.lax.iota(jnp.int32, bq)
+    jk = pl.program_id(1) * bk + jax.lax.iota(jnp.int32, bk)
+    q = q_ref[0].astype(jnp.float32)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(_mask(iq, jk, causal=causal, window=window), s, NEG_INF)
+    p = jnp.exp(s - lse_ref[0][:, None])                      # (bq, bk)
+    do = do_ref[0].astype(jnp.float32)
+    accv_ref[...] += jax.lax.dot_general(p, do, (((0,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_ref[0][:, None]) * scale
+    acck_ref[...] += jax.lax.dot_general(ds, q, (((0,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+
+    @pl.when(i == nq - 1)
+    def _():
+        dk_ref[0] = acck_ref[...].astype(dk_ref.dtype)
+        dv_ref[0] = accv_ref[...].astype(dv_ref.dtype)
+
+
+def flash_mha_bwd(q, k, v, o, lse, do, *, causal=True, window=0,
+                  bq=DEFAULT_BQ, bk=DEFAULT_BK, interpret=False):
+    BH, S, dh = q.shape
+    Skv = k.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, Skv)
+    delta = jnp.sum(o.astype(jnp.float32) * do.astype(jnp.float32), axis=-1)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, nkv=Skv // bk, bq=bq, bk=bk,
+                          scale=dh ** -0.5, causal=causal, window=window),
+        grid=(BH, S // bq, Skv // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, dh), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, nq=S // bq, bq=bq, bk=bk,
+                          scale=dh ** -0.5, causal=causal, window=window),
+        grid=(BH, Skv // bk, S // bq),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bq, dh), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, j, i: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(k.shape, k.dtype),
+            jax.ShapeDtypeStruct(v.shape, v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, dh), jnp.float32),
+            pltpu.VMEM((bk, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_mha(q, k, v, causal=True, window=0, bq=DEFAULT_BQ, bk=DEFAULT_BK,
+              interpret=False):
+    o, _ = flash_mha_fwd(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                         interpret=interpret)
+    return o
+
+
+def _vjp_fwd(q, k, v, causal, window, bq, bk, interpret):
+    o, lse = flash_mha_fwd(q, k, v, causal=causal, window=window, bq=bq,
+                           bk=bk, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(causal, window, bq, bk, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_mha_bwd(q, k, v, o, lse, do, causal=causal,
+                               window=window, bq=bq, bk=bk,
+                               interpret=interpret)
+    return dq, dk, dv
+
+
+flash_mha.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,0 +1,297 @@
+"""Pallas TPU kernels for the FTP dataflow (DESIGN.md §3).
+
+Three kernels:
+
+* ``ftp_spmm``            — packed spikes x dense weights -> (T, M, N) sums.
+* ``ftp_spmm_fused_lif``  — same, with the P-LIF epilogue fused in VMEM;
+                            emits PACKED output spike words (uint32) + final
+                            membrane potentials.  The (T, bm, bn) full-sum
+                            tile never leaves VMEM — the TPU realization of
+                            the paper's IP output reuse + P-LIF "one shot".
+* ``ftp_spmm_bsr``        — dual-sparse: block-CSR weights joined with the
+                            spike block-activity map (block-level inner join,
+                            DESIGN.md D1) via scalar-prefetch index maps.
+
+Dataflow notes (why this is FTP):
+  The grid is (m, n, k) — the inner-product loop nest.  Inside one grid step
+  the T bit-planes of the packed spike block are unpacked in-register (VPU
+  shift+mask) and contracted against the SAME weight tile resident in VMEM,
+  by folding T into the row dimension of a single (T*bm, bk) x (bk, bn) MXU
+  call.  The weight tile is therefore fetched from HBM exactly once per
+  (m, n, k) block regardless of T — the paper's `parallel-for t` (goal 1) —
+  and the accumulator carries (T*bm, bn) in VMEM across k steps (goal 2: no
+  temporal partial sums to memory).  T never appears in the grid (goal 3: no
+  T x latency).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
+
+# Default MXU-aligned tile sizes (v5e MXU is 128x128; 8-sublane f32 tiles).
+BM, BK, BN = 128, 128, 128
+
+
+def _unpack_fold(a_block: jax.Array, T: int, acc_dtype) -> jax.Array:
+    """(bm, bk) uint32 -> (T*bm, bk) {0,1} bit-planes, T-major.
+
+    VPU work: one shift+and per timestep; the fold lets a single MXU call
+    process all T planes with one weight tile (the `parallel-for t`).
+    """
+    bm, bk = a_block.shape
+    planes = [
+        ((a_block >> jnp.uint32(t)) & jnp.uint32(1)).astype(acc_dtype)
+        for t in range(T)
+    ]
+    return jnp.concatenate(planes, axis=0)  # (T*bm, bk)
+
+
+def _lif_epilogue(acc, T: int, v_th: float, tau: float):
+    """LIF over the (T*bm, bn) accumulator; returns packed spikes + final U."""
+    bm = acc.shape[0] // T
+    u = jnp.zeros((bm, acc.shape[1]), dtype=acc.dtype)
+    packed = jnp.zeros((bm, acc.shape[1]), dtype=jnp.uint32)
+    for t in range(T):
+        x = acc[t * bm : (t + 1) * bm] + u
+        c = x > v_th
+        u = tau * x * (1.0 - c.astype(acc.dtype))
+        packed = packed | (c.astype(jnp.uint32) << t)
+    return packed, u
+
+
+# ---------------------------------------------------------------------------
+# Kernel 1: dense-weight FTP spMspM.
+# ---------------------------------------------------------------------------
+
+def _ftp_spmm_kernel(a_ref, b_ref, o_ref, acc_ref, *, T, nk):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _unpack_fold(a_ref[...], T, jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        o_ref[...] = acc_ref[...].reshape(o_ref.shape)
+
+
+def ftp_spmm(
+    a_packed: jax.Array,
+    b: jax.Array,
+    T: int,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = False,
+) -> jax.Array:
+    """(M, K) uint32 x (K, N) -> (T, M, N) f32.  Shapes must be block-aligned
+    (the ops.py wrapper pads)."""
+    M, K = a_packed.shape
+    K2, N = b.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    nm, nn, nk = M // bm, N // bn, K // bk
+    grid = (nm, nn, nk)
+    return pl.pallas_call(
+        functools.partial(_ftp_spmm_kernel, T=T, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((T, bm, bn), lambda i, j, k: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((T, M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((T * bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_packed, b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 2: fused P-LIF epilogue -> packed output spikes.
+# ---------------------------------------------------------------------------
+
+def _ftp_spmm_lif_kernel(
+    a_ref, b_ref, c_ref, u_ref, acc_ref, *, T, nk, v_th, tau
+):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _unpack_fold(a_ref[...], T, jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(k == nk - 1)
+    def _():
+        packed, u = _lif_epilogue(acc_ref[...], T, v_th, tau)
+        c_ref[...] = packed
+        u_ref[...] = u.astype(u_ref.dtype)
+
+
+def ftp_spmm_fused_lif(
+    a_packed: jax.Array,
+    b: jax.Array,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    interpret: bool = False,
+):
+    """(M, K) uint32 x (K, N) -> ((M, N) uint32 packed spikes, (M, N) f32 U).
+
+    Output traffic is T bits + 32 bits per neuron instead of T x f32: the
+    full-sum tensor O is never materialized in HBM (paper goal 2, fused
+    P-LIF)."""
+    M, K = a_packed.shape
+    K2, N = b.shape
+    assert K == K2 and M % bm == 0 and K % bk == 0 and N % bn == 0
+    nm, nn, nk = M // bm, N // bn, K // bk
+    return pl.pallas_call(
+        functools.partial(
+            _ftp_spmm_lif_kernel, T=T, nk=nk, v_th=v_th, tau=tau
+        ),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((M, N), jnp.uint32),
+            jax.ShapeDtypeStruct((M, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((T * bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a_packed, b)
+
+
+# ---------------------------------------------------------------------------
+# Kernel 3: dual-sparse block-CSR weights + block-level inner join.
+# ---------------------------------------------------------------------------
+
+def _ftp_bsr_kernel(
+    kidx_ref, vidx_ref, cnt_ref,  # scalar-prefetch operands
+    a_ref, bv_ref, c_ref, u_ref, acc_ref,
+    *, T, jmax, v_th, tau, fuse_lif,
+):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level inner join: only surviving (A-active AND B-nonzero) k-blocks
+    # appear in the prefetched index list; tail entries are skipped.
+    @pl.when(jj < cnt_ref[i, j])
+    def _():
+        a = _unpack_fold(a_ref[...], T, jnp.float32)
+        b = bv_ref[0].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    @pl.when(jj == jmax - 1)
+    def _():
+        if fuse_lif:
+            packed, u = _lif_epilogue(acc_ref[...], T, v_th, tau)
+            c_ref[...] = packed
+            u_ref[...] = u.astype(u_ref.dtype)
+        else:
+            c_ref[...] = acc_ref[...].reshape(c_ref.shape)
+
+
+def ftp_spmm_bsr(
+    a_packed: jax.Array,
+    b_vals: jax.Array,
+    kidx: jax.Array,
+    vidx: jax.Array,
+    cnt: jax.Array,
+    N: int,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+    fuse_lif: bool = True,
+    interpret: bool = False,
+):
+    """Dual-sparse FTP spMspM.
+
+    a_packed: (M, K) uint32 packed spikes (dense layout; silent blocks are
+              skipped via the join lists).
+    b_vals:   (nnzb, bk, bn) gathered non-zero weight blocks (block-CSR
+              payload; see ops.build_block_join).
+    kidx:     (nm, nn, jmax) int32 — k-block index into A per join step.
+    vidx:     (nm, nn, jmax) int32 — block index into b_vals per join step.
+    cnt:      (nm, nn) int32 — join-list length per output tile.
+    """
+    M, K = a_packed.shape
+    nm, nn, jmax = kidx.shape
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    grid = (nm, nn, jmax)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (bm, bk),
+                lambda i, j, jj, kidx, vidx, cnt: (i, kidx[i, j, jj]),
+            ),
+            pl.BlockSpec(
+                (1, bk, bn),
+                lambda i, j, jj, kidx, vidx, cnt: (vidx[i, j, jj], 0, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec(
+                (bm, bn) if fuse_lif else (T, bm, bn),
+                (lambda i, j, jj, *_: (i, j))
+                if fuse_lif
+                else (lambda i, j, jj, *_: (0, i, j)),
+            ),
+            pl.BlockSpec((bm, bn), lambda i, j, jj, *_: (i, j)),
+        ],
+        scratch_shapes=[pltpu.VMEM((T * bm, bn), jnp.float32)],
+    )
+    out_shape = [
+        jax.ShapeDtypeStruct(
+            (M, N) if fuse_lif else (T, M, N),
+            jnp.uint32 if fuse_lif else jnp.float32,
+        ),
+        jax.ShapeDtypeStruct((M, N), jnp.float32),
+    ]
+    c, u = pl.pallas_call(
+        functools.partial(
+            _ftp_bsr_kernel,
+            T=T,
+            jmax=jmax,
+            v_th=v_th,
+            tau=tau,
+            fuse_lif=fuse_lif,
+        ),
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(kidx, vidx, cnt, a_packed, b_vals)
+    return c, u

@@ -1,0 +1,178 @@
+"""Public jit'd wrappers around the Pallas FTP kernels.
+
+Handles padding to MXU-aligned blocks, block-join construction for the
+dual-sparse path, and backend dispatch (interpret=True off-TPU so the kernels
+are validated everywhere; compiled on real TPUs).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
+from repro.core.packing import block_activity_map, block_nonzero_map
+
+from . import ftp_spmm as _k
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def _pick_blocks(M, K, N, bm, bk, bn):
+    """Shrink default blocks for small problems (still 8/128-aligned when
+    possible; interpret mode accepts anything)."""
+    return min(bm, max(8, M)), min(bk, max(8, K)), min(bn, max(128, N) if N >= 128 else N)
+
+
+@functools.partial(jax.jit, static_argnames=("T", "bm", "bk", "bn", "interpret"))
+def ftp_spmm(
+    a_packed, b, T: int, *, bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None
+):
+    """(M, K) uint32 x (K, N) -> (T, M, N) f32 (dense-weight FTP kernel)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, K = a_packed.shape
+    N = b.shape[1]
+    bm, bk, bn = _pick_blocks(M, K, N, bm, bk, bn)
+    ap = _pad_to(a_packed, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    out = _k.ftp_spmm(ap, bp, T, bm=bm, bk=bk, bn=bn, interpret=interpret)
+    return out[:, :M, :N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("T", "v_th", "tau", "bm", "bk", "bn", "interpret")
+)
+def ftp_spmm_fused_lif(
+    a_packed,
+    b,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm=_k.BM,
+    bk=_k.BK,
+    bn=_k.BN,
+    interpret=None,
+):
+    """(M, K) uint32 x (K, N) -> ((M, N) uint32, (M, N) f32) fused LoAS layer."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, K = a_packed.shape
+    N = b.shape[1]
+    bm, bk, bn = _pick_blocks(M, K, N, bm, bk, bn)
+    ap = _pad_to(a_packed, (bm, bk))
+    bp = _pad_to(b, (bk, bn))
+    c, u = _k.ftp_spmm_fused_lif(
+        ap, bp, T, v_th, tau, bm=bm, bk=bk, bn=bn, interpret=interpret
+    )
+    return c[:M, :N], u[:M, :N]
+
+
+# ---------------------------------------------------------------------------
+# Dual-sparse path: block-CSR construction + block-level inner join.
+# ---------------------------------------------------------------------------
+
+def build_block_csr(b: np.ndarray, bk: int, bn: int):
+    """Compress (K, N) weights into block-CSR: gathered non-zero (bk, bn)
+    blocks + a dense (nkb, nnb)->payload-index map (-1 for zero blocks).
+
+    Host-side (numpy): formats are built once per model at load time, like
+    LoAS's offline weight compression.
+    """
+    K, N = b.shape
+    assert K % bk == 0 and N % bn == 0
+    nkb, nnb = K // bk, N // bn
+    blocks = b.reshape(nkb, bk, nnb, bn).transpose(0, 2, 1, 3)
+    nz = np.any(blocks != 0, axis=(2, 3))  # (nkb, nnb)
+    payload = blocks[nz]  # (nnzb, bk, bn)
+    if payload.shape[0] == 0:  # fully-zero weights: keep one dummy block
+        payload = np.zeros((1, bk, bn), dtype=b.dtype)
+    idx = -np.ones((nkb, nnb), dtype=np.int32)
+    idx[nz] = np.arange(int(nz.sum()), dtype=np.int32)
+    return payload, idx, nz
+
+
+def build_block_join(
+    a_packed: np.ndarray, b: np.ndarray, bm: int, bk: int, bn: int
+):
+    """Block-level inner join (DESIGN.md D1): for every output tile (i, j),
+    the list of k-blocks where A's block is active AND B's block is non-zero.
+
+    Returns (b_vals, kidx, vidx, cnt, jmax) ready for `ftp_spmm_bsr`.
+    """
+    M, K = a_packed.shape
+    N = b.shape[1]
+    payload, idx, bnz = build_block_csr(b, bk, bn)
+    a_act = np.asarray(block_activity_map(jnp.asarray(a_packed), bm, bk))
+    nm, nkb = a_act.shape
+    nnb = N // bn
+
+    # joined[i, j, kb] = a_act[i, kb] & bnz[kb, j]
+    joined = a_act[:, None, :] & bnz.T[None, :, :]  # (nm, nnb, nkb)
+    cnt = joined.sum(axis=2).astype(np.int32)
+    jmax = max(1, int(cnt.max()))
+    kidx = np.zeros((nm, nnb, jmax), dtype=np.int32)
+    vidx = np.zeros((nm, nnb, jmax), dtype=np.int32)
+    for i in range(nm):
+        for j in range(nnb):
+            ks = np.nonzero(joined[i, j])[0]
+            kidx[i, j, : len(ks)] = ks
+            vidx[i, j, : len(ks)] = idx[ks, j]
+    return payload, kidx, vidx, cnt, jmax
+
+
+def ftp_spmm_dual_sparse(
+    a_packed: np.ndarray,
+    b: np.ndarray,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm=_k.BM,
+    bk=_k.BK,
+    bn=_k.BN,
+    fuse_lif: bool = True,
+    interpret: bool | None = None,
+):
+    """End-to-end dual-sparse LoAS layer: join construction + BSR kernel.
+
+    Convenience entry (numpy in, jax out) used by tests/benchmarks; a real
+    serving path builds the weight-side join structures once at load time via
+    `build_block_join` and reuses them across requests.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M, K = a_packed.shape
+    N = b.shape[1]
+    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    ap = np.asarray(_pad_to(jnp.asarray(a_packed), (bm_, bk_)))
+    bp = np.asarray(_pad_to(jnp.asarray(b), (bk_, bn_)))
+    payload, kidx, vidx, cnt, jmax = build_block_join(ap, bp, bm_, bk_, bn_)
+    c, u = _k.ftp_spmm_bsr(
+        jnp.asarray(ap),
+        jnp.asarray(payload),
+        jnp.asarray(kidx),
+        jnp.asarray(vidx),
+        jnp.asarray(cnt),
+        bp.shape[1],
+        T,
+        v_th,
+        tau,
+        bm=bm_,
+        bk=bk_,
+        bn=bn_,
+        fuse_lif=fuse_lif,
+        interpret=interpret,
+    )
+    if fuse_lif:
+        return c[:M, :N], u[:M, :N]
+    return c[:, :M, :N], u[:M, :N]

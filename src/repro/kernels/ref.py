@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package must match its oracle here (assert_allclose in
+tests, over shape/dtype/T sweeps).  The oracles are deliberately naive —
+unpack everything dense and einsum.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
+from repro.core.packing import unpack_spikes
+
+
+def ftp_spmm_ref(a_packed: jax.Array, b: jax.Array, T: int) -> jax.Array:
+    """(M, K) packed x (K, N) -> (T, M, N) f32."""
+    a = unpack_spikes(a_packed, T, dtype=jnp.float32)
+    return jnp.einsum(
+        "tmk,kn->tmn", a, b.astype(jnp.float32)
+    ).astype(jnp.float32)
+
+
+def lif_ref(o: jax.Array, v_th: float = DEFAULT_VTH, tau: float = DEFAULT_TAU):
+    """(T, M, N) full sums -> (packed spikes (M, N) uint32, final U (M, N))."""
+    T = o.shape[0]
+    u = jnp.zeros_like(o[0])
+    packed = jnp.zeros(o.shape[1:], dtype=jnp.uint32)
+    for t in range(T):
+        x = o[t] + u
+        c = x > v_th
+        u = tau * x * (1.0 - c.astype(o.dtype))
+        packed = packed | (c.astype(jnp.uint32) << t)
+    return packed, u
+
+
+def ftp_spmm_fused_lif_ref(
+    a_packed: jax.Array,
+    b: jax.Array,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+):
+    return lif_ref(ftp_spmm_ref(a_packed, b, T), v_th=v_th, tau=tau)
+
+
+def ftp_spmm_bsr_ref(
+    a_packed: jax.Array, b_dense: jax.Array, T: int
+) -> jax.Array:
+    """Block-sparse path oracle == dense result (zero blocks contribute 0)."""
+    return ftp_spmm_ref(a_packed, b_dense, T)
+
+
+def mha_ref(q, k, v, causal=True, window=0):
+    """(BH, S, dh) multi-head attention oracle for the flash kernels."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    iq = jnp.arange(q.shape[1])
+    jk = jnp.arange(k.shape[1])
+    m = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        m = jk[None] <= iq[:, None]
+        if window:
+            m &= jk[None] > (iq[:, None] - window)
+    s = jnp.where(m[None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

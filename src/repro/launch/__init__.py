@@ -1,0 +1,1 @@
+"""Launchers: mesh.py, dryrun.py (multi-pod dry-run), train.py, serve.py."""

@@ -1,0 +1,136 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks the device count at first
+# init).  512 placeholder host devices back both production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, print memory/cost analyses, and dump roofline inputs.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --manifest   # list cells
+
+Results append to experiments/dryrun/<arch>__<shape>__<mesh>.json; failures
+are recorded with the exception text (a sharding mismatch here is a bug in
+the system, per the assignment).
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCHS  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_cell, runnable_cells, skipped_cells  # noqa: E402
+from repro.roofline.hlo_stats import analyze  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        cell = build_cell(arch, shape, mesh)
+        if cell is None:
+            rec.update(skipped=True, ok=True)
+            return rec
+        with mesh:
+            lowered = jax.jit(
+                cell.fn, donate_argnums=cell.donate
+            ).lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+        mem["total_bytes"] = (
+            mem["argument_bytes"] + mem["output_bytes"] + mem["temp_bytes"]
+            - mem["alias_bytes"]
+        )
+        ca = compiled.cost_analysis() or {}
+        cost = {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float)) and k in
+                ("flops", "bytes accessed", "transcendentals")}
+        hlo = compiled.as_text()
+        stats = analyze(hlo)
+        rec.update(
+            ok=True,
+            n_devices=mesh.size,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem,
+            xla_cost_analysis=cost,
+            hlo_stats=stats.asdict(),
+            fallbacks=sorted(set(cell.fallback_log)),
+        )
+        if save_hlo:
+            with open(os.path.join(
+                    out_dir, f"{arch}__{shape}__{mesh_name}.hlo"), "w") as f:
+                f.write(hlo)
+        print(f"[ok] {arch} x {shape} x {mesh_name}: "
+              f"mem/device={mem['total_bytes']/2**30:.2f} GiB, "
+              f"hlo_flops/dev={stats.flops:.3e}, "
+              f"coll_bytes/dev={stats.collective_bytes:.3e}, "
+              f"compile={t_compile:.1f}s")
+    except Exception as e:  # noqa: BLE001 — failures are data here
+        rec.update(error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+        print(f"[FAIL] {arch} x {shape} x {mesh_name}: {type(e).__name__}: {e}")
+    finally:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape}__{mesh_name}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--manifest", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    if args.manifest:
+        for a, s in runnable_cells():
+            print(f"run  {a:24s} {s}")
+        for a, s, r in skipped_cells():
+            print(f"skip {a:24s} {s:12s} ({r})")
+        return
+
+    cells = runnable_cells()
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    if not cells:
+        raise SystemExit("no cells matched")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for a, s in cells:
+        for mp in meshes:
+            results.append(run_cell(a, s, mp, args.out, args.save_hlo))
+    n_ok = sum(r["ok"] for r in results)
+    print(f"\n{n_ok}/{len(results)} cells compiled")
+    if n_ok < len(results):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level state) so importing never touches jax device
+initialization.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
+2 pods x 256 = 512 chips with a leading `pod` axis (DCN between pods, ICI
+within).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+    )
+
+
+def make_mesh_for(n_devices: int, model_parallel: int | None = None):
+    """Smaller meshes for tests/examples on few (possibly fake) devices."""
+    mp = model_parallel or (2 if n_devices % 2 == 0 and n_devices > 1 else 1)
+    return jax.make_mesh(
+        (n_devices // mp, mp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,63 @@
+"""Serving launcher: batched prefill + greedy decode against any arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --batch 4 --prompt-len 32 --gen 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def generate(model, params, tokens, cache, steps: int):
+    """Greedy generation loop (jit'd prefill + decode)."""
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(model.decode, donate_argnums=(2,))
+    logits, cache = prefill(params, {"tokens": tokens}, cache)
+    out = [jnp.argmax(logits[:, -1], axis=-1)[:, None]]
+    for _ in range(steps - 1):
+        logits, cache = decode(params, out[-1], cache)
+        out.append(jnp.argmax(logits[:, -1], axis=-1)[:, None])
+    return jnp.concatenate(out, axis=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, smoke_variant
+    from repro.models.registry import build_model
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    if not cfg.supports_decode:
+        raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(
+        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
+        jnp.int32,
+    )
+    cache = model.init_cache(args.batch, args.prompt_len + args.gen)
+    t0 = time.time()
+    out = generate(model, params, tokens, cache, args.gen)
+    dt = time.time() - t0
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s on this host)")
+    print("sample:", np.asarray(out[0][:12]))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

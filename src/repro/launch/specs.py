@@ -1,0 +1,144 @@
+"""Cell builder: (arch x shape x mesh) -> step fn + fully-sharded input specs.
+
+`input_specs` follows the assignment contract: ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation).
+Training cells lower `train_step`; prefill cells lower `Model.prefill`;
+decode cells (decode_32k / long_500k) lower `Model.decode` — one new token
+against a seq_len-deep cache.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES, ArchConfig, ShapeCell, applicable_shapes, skip_reason
+from repro.data.pipeline import batch_shapes
+from repro.models import layers as model_layers
+from repro.models import transformer
+from repro.models.registry import build_model
+from repro.sharding import (
+    base_rules,
+    batch_specs,
+    make_qkv_hook,
+    make_shard_hook,
+    spec_for,
+    tree_shardings,
+)
+from repro.train.step import init_train_state, make_train_step, train_state_axes
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    fn: Callable
+    args: tuple          # ShapeDtypeStructs with shardings attached
+    cfg: ArchConfig
+    cell: ShapeCell
+    fallback_log: list
+    donate: tuple = ()
+
+
+def _attach(shapes_tree, shardings_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes_tree, shardings_tree,
+    )
+
+
+def _cast_tree(shapes_tree, dtype, min_ndim=2):
+    """Serve-path params are bf16 (inference casts); small vectors stay."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if (s.ndim >= min_ndim and jnp.issubdtype(s.dtype, jnp.floating)) else s.dtype
+        ),
+        shapes_tree,
+    )
+
+
+def build_cell(arch: str, shape: str, mesh) -> Cell | None:
+    """Returns the lowered-ready cell, or None if the shape is skipped for
+    this arch (reason via `configs.base.skip_reason`)."""
+    cfg = get_config(arch)
+    cell = applicable_shapes(cfg)[shape]
+    if cell is None:
+        return None
+    rules = base_rules(cfg.fsdp)
+    log: list = []
+    transformer.set_shard_hook(make_shard_hook(mesh, rules))
+    model_layers.set_qkv_hook(make_qkv_hook(mesh, rules))
+    model = build_model(cfg)
+
+    if cell.kind == "train":
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, jax.random.PRNGKey(0))
+        )
+        axes = train_state_axes(model)
+        state_sh = tree_shardings(state_shapes, axes, mesh, rules, log)
+        state_in = _attach(state_shapes, state_sh)
+        b_shapes = batch_shapes(cfg, cell)
+        b_sh = batch_specs(b_shapes, mesh, rules)
+        batch_in = _attach(b_shapes, b_sh)
+        fn = make_train_step(model)
+        return Cell(arch, shape, fn, (state_in, batch_in), cfg, cell, log,
+                    donate=(0,))
+
+    # serving cells: bf16 params
+    params_shapes = _cast_tree(
+        jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))), jnp.bfloat16
+    )
+    p_sh = tree_shardings(params_shapes, model.axes(), mesh, rules, log)
+    params_in = _attach(params_shapes, p_sh)
+
+    B, S = cell.global_batch, cell.seq_len
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, S))
+    c_sh = tree_shardings(cache_shapes, model.cache_axes(), mesh, rules, log)
+    cache_in = _attach(cache_shapes, c_sh)
+
+    if cell.kind == "prefill":
+        b_shapes = batch_shapes(cfg, cell)
+        b_shapes.pop("labels", None)
+        b_sh = batch_specs(b_shapes, mesh, rules)
+        batch_in = _attach(b_shapes, b_sh)
+        fn = model.prefill
+        return Cell(arch, shape, fn, (params_in, batch_in, cache_in), cfg,
+                    cell, log, donate=(2,))
+
+    # decode: one token step against a seq_len cache
+    tok_spec = spec_for((B, 1), ("batch", None), rules, mesh, log)
+    tokens_in = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32,
+        sharding=jax.sharding.NamedSharding(mesh, tok_spec),
+    )
+    fn = model.decode
+    return Cell(arch, shape, fn, (params_in, tokens_in, cache_in), cfg, cell,
+                log, donate=(2,))
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    """All (arch, shape) pairs that run, in manifest order."""
+    from repro.configs import ARCHS
+
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape, cell in applicable_shapes(cfg).items():
+            if cell is not None:
+                out.append((arch, shape))
+    return out
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    from repro.configs import ARCHS
+
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for shape, cell in applicable_shapes(cfg).items():
+            if cell is None:
+                out.append((arch, shape, skip_reason(cfg, shape)))
+    return out

@@ -1,0 +1,369 @@
+"""Primitive layers shared by the architecture zoo.
+
+Pure-functional: params are plain dict pytrees; a parallel `*_axes` function
+returns the logical sharding axes for every leaf (same tree structure —
+enforced by tests).  Compute in cfg.compute_dtype (bf16), reductions and
+softmax in f32.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def _dt(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _ct(cfg: ArchConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_apply(x, positions, theta):
+    """x: (B, S, H, dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA/MQA, causal/bidir/SWA, chunked-query exact softmax)
+# ---------------------------------------------------------------------------
+
+# Sharding-constraint hook for (B, S, H, dh) q/k/v tensors — installed by the
+# distributed layer (sharding.make_qkv_hook); identity off-mesh.
+_qkv_hook = lambda t: t
+
+
+def set_qkv_hook(fn):
+    global _qkv_hook
+    _qkv_hook = fn
+
+def attn_init(key, cfg: ArchConfig) -> dict:
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    p = {
+        "wq": dense_init(ks[0], (D, H * dh), _dt(cfg)),
+        "wk": dense_init(ks[1], (D, KV * dh), _dt(cfg)),
+        "wv": dense_init(ks[2], (D, KV * dh), _dt(cfg)),
+        "wo": dense_init(ks[3], (H * dh, D), _dt(cfg)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((dh,), _dt(cfg))
+        p["k_norm"] = jnp.zeros((dh,), _dt(cfg))
+    return p
+
+
+def attn_axes(cfg: ArchConfig) -> dict:
+    ax = {
+        "wq": ("d_model", "heads_flat"),
+        "wk": ("d_model", "kv_flat"),
+        "wv": ("d_model", "kv_flat"),
+        "wo": ("heads_flat", "d_model"),
+    }
+    if cfg.qk_norm:
+        ax["q_norm"] = (None,)
+        ax["k_norm"] = (None,)
+    return ax
+
+
+def _attn_mask(iq, jk, mode: str, window: int, kv_len=None):
+    """iq: (cq,) absolute query positions; jk: (Skv,) absolute kv positions
+    (may be a ring buffer's stored positions; -1 = empty slot)."""
+    if mode == "bidir":
+        m = jnp.ones((iq.shape[0], jk.shape[0]), bool)
+    else:
+        m = jk[None, :] <= iq[:, None]
+        if mode == "swa":
+            m &= jk[None, :] > (iq[:, None] - window)
+    m &= jk[None, :] >= 0
+    if kv_len is not None:
+        m &= jk[None, :] < kv_len
+    return m
+
+
+def multihead_attention(
+    q, k, v, cfg: ArchConfig, *, q_offset=0, kv_len=None, mode=None,
+    kv_positions=None,
+):
+    """q: (B, Sq, H, dh); k, v: (B, Skv, KV, dh) -> (B, Sq, H, dh).
+
+    Exact softmax, chunked over queries (cfg.attn_chunk) so the (cq, Skv)
+    score tile bounds live memory — the XLA-level analogue of flash attention
+    for the dry-run memory budget.
+    """
+    mode = mode or cfg.attn
+    B, Sq, H, dh = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scale = dh ** -0.5
+    jk = jnp.arange(Skv) if kv_positions is None else kv_positions
+
+    def chunk_attn(q_c, iq):
+        # q_c: (B, cq, KV, G, dh)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", q_c, k, preferred_element_type=jnp.float32
+        ) * scale
+        m = _attn_mask(iq, jk, mode, cfg.window, kv_len)
+        s = jnp.where(m[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum(
+            "bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )
+        return o.astype(q.dtype)
+
+    cq = cfg.attn_chunk
+    if cq and Sq > cq and Sq % cq == 0:
+        qc = qg.reshape(B, Sq // cq, cq, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+        iqs = (q_offset + jnp.arange(Sq)).reshape(Sq // cq, cq)
+        # remat: without it, differentiating lax.map saves every chunk's
+        # (B, H, cq, Skv) probabilities — 19 GiB/layer on nemotron train_4k
+        # (EXPERIMENTS.md §Perf iteration 3)
+        o = jax.lax.map(jax.remat(lambda args: chunk_attn(*args)), (qc, iqs))
+        o = o.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, dh)
+    else:
+        o = chunk_attn(qg, q_offset + jnp.arange(Sq)).reshape(B, Sq, H, dh)
+    return o
+
+
+def attn_apply(
+    p, x, cfg: ArchConfig, *, positions=None, cache=None, mode=None
+):
+    """Full attention sub-block: projections + RoPE (+qk-norm) + attention.
+
+    cache: None (training/prefill without cache) or dict(k, v, pos) for
+    decode; when given, k/v are written at `pos` and attended with kv_len.
+    Returns (out, new_cache).
+    """
+    B, S, D = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    # projections stay in compute dtype end-to-end: the MXU accumulates in
+    # f32 internally, and an explicit f32 output materializes a 2x-size
+    # tensor per projection before the convert (§Perf iteration 4)
+    xc = x.astype(_ct(cfg))
+    q = jnp.einsum("bsd,dh->bsh", xc, p["wq"].astype(_ct(cfg))).reshape(B, S, H, dh)
+    k = jnp.einsum("bsd,dh->bsh", xc, p["wk"].astype(_ct(cfg))).reshape(B, S, KV, dh)
+    v = jnp.einsum("bsd,dh->bsh", xc, p["wv"].astype(_ct(cfg))).reshape(B, S, KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.attn != "bidir":  # encoders here use absolute embeddings instead
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+
+    def _expand(t, hook=True):
+        # KV-head replication for TP (cfg.expand_kv): (B,S,KV,dh)->(B,S,H,dh)
+        if cfg.expand_kv and t.shape[2] != H:
+            t = jnp.repeat(t, H // t.shape[2], axis=2)
+        # hook only fresh tensors — cached k/v carry cache_seq sharding that
+        # a heads-only constraint would destroy
+        return _qkv_hook(t) if hook else t
+
+    q = _qkv_hook(q)
+    new_cache = None
+    if cache is None:
+        o = multihead_attention(q, _expand(k), _expand(v), cfg, mode=mode)
+    else:
+        # Ring-buffer cache: slot = pos % S_cache (for full attention the
+        # cache is sized to max_len so slot == pos; for SWA it is sized to
+        # the window and wraps).  Per-slot absolute positions drive masking.
+        pos = cache["pos"]  # scalar int32: tokens already generated
+        s_cache = cache["k"].shape[1]
+        slot = pos % s_cache
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)
+        )
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)
+        )
+        kv_pos = jax.lax.dynamic_update_slice(
+            cache["kv_pos"], pos + jnp.arange(S, dtype=jnp.int32), (slot,)
+        )
+        o = multihead_attention(
+            q, _expand(ck.astype(q.dtype), hook=False),
+            _expand(cv.astype(q.dtype), hook=False), cfg,
+            q_offset=pos, mode=mode, kv_positions=kv_pos,
+        )
+        new_cache = {"k": ck, "v": cv, "kv_pos": kv_pos, "pos": pos + S}
+    o = o.reshape(B, S, H * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(_ct(cfg)))
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / sq_relu / gelu) + spiking variant
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ArchConfig, d_ff=None) -> dict:
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(ks[0], (D, F), _dt(cfg)),
+            "wu": dense_init(ks[1], (D, F), _dt(cfg)),
+            "wd": dense_init(ks[2], (F, D), _dt(cfg)),
+        }
+    return {
+        "wu": dense_init(ks[0], (D, F), _dt(cfg)),
+        "wd": dense_init(ks[1], (F, D), _dt(cfg)),
+    }
+
+
+def mlp_axes(cfg: ArchConfig) -> dict:
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wg": ("d_model", "d_ff"),
+            "wu": ("d_model", "d_ff"),
+            "wd": ("d_ff", "d_model"),
+        }
+    return {"wu": ("d_model", "d_ff"), "wd": ("d_ff", "d_model")}
+
+
+def mlp_apply(p, x, cfg: ArchConfig):
+    xc = x.astype(_ct(cfg))
+    if cfg.spiking_ffn:
+        # Paper technique (DESIGN.md §4): dual-sparse spiking FFN under the
+        # FTP dataflow, surrogate-gradient differentiable.
+        from repro.core.snn_layers import SpikingConfig, spiking_ffn_apply
+
+        scfg = SpikingConfig(
+            T=cfg.spiking_T, weight_density=cfg.spiking_weight_density
+        )
+        wu, wd = p["wu"], p["wd"]
+        y = spiking_ffn_apply(
+            {"w_in": wu.astype(_ct(cfg)), "w_out": wd.astype(_ct(cfg))},
+            xc, scfg, mode="train",
+        )
+        return y.astype(x.dtype)
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(xc @ p["wg"].astype(_ct(cfg))) * (xc @ p["wu"].astype(_ct(cfg)))
+    elif cfg.act == "geglu":
+        h = jax.nn.gelu(xc @ p["wg"].astype(_ct(cfg))) * (xc @ p["wu"].astype(_ct(cfg)))
+    elif cfg.act == "sq_relu":
+        h = jnp.square(jax.nn.relu(xc @ p["wu"].astype(_ct(cfg))))
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(xc @ p["wu"].astype(_ct(cfg)))
+    else:
+        raise ValueError(cfg.act)
+    return (h @ p["wd"].astype(_ct(cfg))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k router, capacity-gather dispatch — EP-shardable on `experts`)
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ArchConfig) -> dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    glu = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "wu": dense_init(ks[1], (E, D, F), _dt(cfg), fan_in=D),
+        "wd": dense_init(ks[2], (E, F, D), _dt(cfg), fan_in=F),
+    }
+    if glu:
+        p["wg"] = dense_init(ks[3], (E, D, F), _dt(cfg), fan_in=D)
+    return p
+
+
+def moe_axes(cfg: ArchConfig) -> dict:
+    ax = {
+        "router": ("d_model", None),
+        "wu": ("experts", "d_model", "d_ff"),
+        "wd": ("experts", "d_ff", "d_model"),
+    }
+    if cfg.act in ("swiglu", "geglu"):
+        ax["wg"] = ("experts", "d_model", "d_ff")
+    return ax
+
+
+def moe_apply(p, x, cfg: ArchConfig):
+    """Top-k token-choice MoE with capacity-based gather dispatch.
+
+    x: (B, S, D).  Dispatch/combine are dense gathers/scatters of shape
+    (E, C, D) so the expert dimension is shardable (EP) and everything lowers
+    to einsums (MXU) + all-to-alls under GSPMD.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(B * S, D)
+    T = B * S
+    C = max(1, int(T * K * cfg.capacity_factor / E))
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, K)                    # (T, K)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # position of each (token, k) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)       # (T, K, E)
+    flat = onehot.reshape(T * K, E)
+    pos_flat = jnp.cumsum(flat, axis=0) - flat              # (T*K, E)
+    pos = jnp.sum(pos_flat.reshape(T, K, E) * onehot, axis=-1)  # (T, K)
+    keep = pos < C
+
+    # dispatch: (E, C, D)
+    disp = jnp.zeros((E, C, D), dtype=x.dtype)
+    e_safe = jnp.where(keep, eidx, 0)
+    p_safe = jnp.where(keep, pos, 0)
+    contrib = jnp.where(keep[..., None], xt[:, None, :], 0).astype(x.dtype)
+    disp = disp.at[e_safe, p_safe].add(contrib)
+
+    # expert FFNs: (E, C, D) x (E, D, F)
+    ct = _ct(cfg)
+    h_u = jnp.einsum("ecd,edf->ecf", disp.astype(ct), p["wu"].astype(ct))
+    if "wg" in p:
+        act = jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu
+        h_g = jnp.einsum("ecd,edf->ecf", disp.astype(ct), p["wg"].astype(ct))
+        h = act(h_g) * h_u
+    else:
+        h = jnp.square(jax.nn.relu(h_u)) if cfg.act == "sq_relu" else jax.nn.gelu(h_u)
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["wd"].astype(ct))  # (E, C, D)
+
+    # combine: gather each token's K expert outputs, weight by gates
+    y_tk = y_e[e_safe, p_safe]                               # (T, K, D)
+    y = jnp.sum(
+        y_tk * (gate * keep).astype(y_tk.dtype)[..., None], axis=1
+    )
+    # aux load-balancing loss (Switch): E * sum_e f_e * p_e
+    f = jnp.mean(jnp.sum(onehot[:, 0], axis=0) / T)  # fraction to top-1
+    me = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0) * me)
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,220 @@
+"""Mamba2 (SSD) blocks + the Zamba2 hybrid backbone.
+
+Mamba2 (arXiv:2405.21060, dataflow level): in-proj -> short depthwise conv ->
+selective state space h_t = exp(A dt) h_{t-1} + dt B_t x_t, y = C_t h_t + D x,
+gated by silu(z), out-proj.  Scalar A per head (the SSD restriction).
+
+Zamba2 (arXiv:2411.15242, adapted — DESIGN.md): a backbone of Mamba2 layers
+with ONE weight-shared attention+MLP block applied every
+`shared_attn_every` layers; the shared block sees concat(hidden, original
+embedding) projected back to d_model (the paper uses per-application LoRAs
+on the shared block — we share fully and note the simplification).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _ct, _dt, attn_apply, attn_axes, attn_init, dense_init, \
+    mlp_apply, mlp_axes, mlp_init, rmsnorm
+from .scan_utils import chunked_seq_scan
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    H, dh, St = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    assert H * dh == d_in, (H, dh, d_in)
+    ks = jax.random.split(key, 6)
+    dt = _dt(cfg)
+    return {
+        "ln": jnp.zeros((D,), dt),
+        "in_x": dense_init(ks[0], (D, d_in), dt),
+        "in_z": dense_init(ks[1], (D, d_in), dt),
+        "in_bc": dense_init(ks[2], (D, 2 * St), dt),
+        "in_dt": dense_init(ks[3], (D, H), dt),
+        "dt_bias": jnp.zeros((H,), dt),
+        "a_log": jnp.zeros((H,), jnp.float32),       # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), dt),
+        "conv": dense_init(ks[4], (cfg.conv_width, d_in), dt, fan_in=cfg.conv_width),
+        "out": dense_init(ks[5], (d_in, D), dt),
+    }
+
+
+def mamba_axes(cfg: ArchConfig) -> dict:
+    return {
+        "ln": (None,),
+        "in_x": ("d_model", "d_inner"), "in_z": ("d_model", "d_inner"),
+        # dt / A / D are head-sharded so the SSD recurrence is TP-local
+        "in_bc": ("d_model", None), "in_dt": ("d_model", "heads"),
+        "dt_bias": ("heads",), "a_log": ("heads",), "d_skip": ("heads",),
+        "conv": (None, "d_inner"), "out": ("d_inner", "d_model"),
+    }
+
+
+def _causal_conv(x, w, prev=None):
+    """Depthwise causal conv, width W.  x: (B, S, C); w: (W, C);
+    prev: (B, W-1, C) carry or None (zeros).  Returns (y, new_prev)."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)  # (B, S+W-1, C)
+    y = sum(xp[:, i : i + S, :] * w[i] for i in range(W))
+    return y, xp[:, -(W - 1):, :] if W > 1 else prev
+
+
+def _ssd_chunked(xh, b_t, c_t, decay, dt, ssm0, L):
+    """Chunked-parallel selective state space (SSD, Mamba2 §6).
+
+    xh: (B, S, H, dh) f32; b_t/c_t: (B, S, St); decay: (B, S, H) in (0,1];
+    dt: (B, S, H); ssm0: (B, H, dh, St).  Returns (state (B,H,dh,St),
+    y (B, S, H, dh)).
+
+    Per chunk of length L (log-space cumulative decays for stability):
+      intra: y_t += sum_{s<=t} (A_t/A_s) dt_s (B_s . C_t) x_s   (masked matmul)
+      inter: y_t += C_t . (A_t * h_in);  h_out = A_L h_in + sum_s (A_L/A_s) ...
+    """
+    B, S, H, dh = xh.shape
+    St = b_t.shape[-1]
+    n = S // L
+    xc = xh.reshape(B, n, L, H, dh)
+    bc = b_t.reshape(B, n, L, St)
+    cc = c_t.reshape(B, n, L, St)
+    la = jnp.log(jnp.maximum(decay, 1e-20)).reshape(B, n, L, H)
+    dtc = dt.reshape(B, n, L, H)
+    acum = jnp.cumsum(la, axis=2)                     # log A_t (B,n,L,H)
+
+    def chunk(h, inp):
+        xg, bg, cg, ac, dtg = inp                      # per-chunk slices
+        # intra-chunk: M[t,s] = exp(ac_t - ac_s) * dt_s * (B_s . C_t), s <= t
+        g = jnp.einsum("bts,bls->btl", cg, bg)         # (B, L, L)
+        r = ac[:, :, None, :] - ac[:, None, :, :]      # (B, L, L, H)
+        mask = jnp.tril(jnp.ones((L, L), bool))
+        m = jnp.where(mask[None, :, :, None], jnp.exp(r), 0.0)
+        m = m * g[..., None] * dtg[:, None, :, :]      # (B, t, s, H)
+        y = jnp.einsum("btsh,bshd->bthd", m, xg)
+        # inter-chunk: contribution of the incoming state
+        a_t = jnp.exp(ac)                              # (B, L, H)
+        y = y + jnp.einsum("bls,blh,bhds->blhd", cg, a_t, h)
+        # state update: h' = A_L h + sum_s (A_L / A_s) dt_s x_s B_s^T
+        a_last = jnp.exp(ac[:, -1])                    # (B, H)
+        w = jnp.exp(ac[:, -1][:, None, :] - ac) * dtg  # (B, L, H)
+        dh_new = jnp.einsum("blh,blhd,bls->bhds", w, xg, bg)
+        h = a_last[..., None, None] * h + dh_new
+        return h, y
+
+    xs = tuple(
+        a.transpose(1, 0, *range(2, a.ndim))
+        for a in (xc, bc, cc, acum, dtc)
+    )
+    h, ys = jax.lax.scan(jax.remat(chunk), ssm0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, dh)
+    return h, y
+
+
+def mamba_apply(p, x, cfg: ArchConfig, state=None):
+    """One Mamba2 block.  state: None (train) or dict(conv, ssm).
+    Returns (x, new_state)."""
+    B, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    H, dh, St = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    ct = _ct(cfg)
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps).astype(ct)
+
+    xc = xn @ p["in_x"].astype(ct)                    # (B, S, d_in)
+    z = xn @ p["in_z"].astype(ct)
+    bc = xn @ p["in_bc"].astype(ct)                   # (B, S, 2 St)
+    b_t, c_t = bc[..., :St], bc[..., St:]
+    dt = jax.nn.softplus(
+        (xn @ p["in_dt"].astype(ct)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32)
+    )                                                  # (B, S, H)
+
+    conv_prev = state["conv"] if state is not None else None
+    xc, conv_new = _causal_conv(xc, p["conv"].astype(ct), conv_prev)
+    xc = jax.nn.silu(xc)
+    xh = xc.reshape(B, S, H, dh).astype(jnp.float32)
+
+    a = -jnp.exp(p["a_log"])                          # (H,)
+    decay = jnp.exp(a[None, None] * dt)               # (B, S, H)
+    ssm0 = (
+        state["ssm"] if state is not None
+        else jnp.zeros((B, H, dh, St), jnp.float32)
+    )
+
+    if S > 1 and cfg.ssm_chunk and S % cfg.ssm_chunk == 0:
+        # SSD chunked-parallel form (Mamba2's own blocked algorithm): within
+        # a chunk the recurrence is a masked (L x L) matmul; the state is
+        # touched only at chunk boundaries.  vs the per-step scan this cuts
+        # state HBM traffic by the chunk length (~128x) and turns the VPU
+        # step loop into MXU work — §Perf hillclimb on zamba2 train_4k.
+        ssm_new, y = _ssd_chunked(
+            xh, b_t.astype(jnp.float32), c_t.astype(jnp.float32),
+            decay, dt, ssm0, cfg.ssm_chunk,
+        )
+    else:
+        def step(h, inp):
+            x_t, b_tt, c_tt, dc_t, dt_t = inp  # (B,H,dh),(B,St),(B,St),(B,H),(B,H)
+            dbx = (dt_t[..., None, None] * x_t[..., None]) * b_tt[:, None, None, :]
+            h = dc_t[..., None, None] * h + dbx            # (B, H, dh, St)
+            y = jnp.einsum("bhds,bs->bhd", h, c_tt)
+            return h, y
+
+        xs = (
+            xh.transpose(1, 0, 2, 3),
+            b_t.astype(jnp.float32).transpose(1, 0, 2),
+            c_t.astype(jnp.float32).transpose(1, 0, 2),
+            decay.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2),
+        )
+        ssm_new, y = chunked_seq_scan(step, ssm0, xs, cfg.ssm_chunk)
+        y = y.transpose(1, 0, 2, 3)                    # (B, S, H, dh)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = (y.reshape(B, S, d_in).astype(ct)) * jax.nn.silu(z)
+    x = x + (y @ p["out"].astype(ct)).astype(x.dtype)
+    from .transformer import _shard_hook
+
+    x = _shard_hook(x, "residual")  # SP on the residual carry
+    new_state = {"conv": conv_new, "ssm": ssm_new} if state is not None else None
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid backbone
+# ---------------------------------------------------------------------------
+
+def shared_block_init(key, cfg: ArchConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    return {
+        "in_proj": dense_init(ks[0], (2 * D, D), _dt(cfg)),
+        "ln1": jnp.zeros((D,), _dt(cfg)),
+        "attn": attn_init(ks[1], cfg),
+        "ln2": jnp.zeros((D,), _dt(cfg)),
+        "mlp": mlp_init(ks[2], cfg),
+        "out_proj": dense_init(ks[3], (D, D), _dt(cfg)),
+    }
+
+
+def shared_block_axes(cfg: ArchConfig) -> dict:
+    return {
+        "in_proj": ("d_model2", "d_model"),
+        "ln1": (None,), "attn": attn_axes(cfg), "ln2": (None,),
+        "mlp": mlp_axes(cfg), "out_proj": ("d_model", "d_model"),
+    }
+
+
+def shared_block_apply(p, x, x0, cfg: ArchConfig, cache=None, positions=None):
+    """Weight-shared attention block (Zamba2): sees concat(hidden, embed)."""
+    ct = _ct(cfg)
+    h = jnp.concatenate([x, x0], axis=-1).astype(ct) @ p["in_proj"].astype(ct)
+    a, new_cache = attn_apply(
+        p["attn"], rmsnorm(h, p["ln1"], cfg.norm_eps), cfg, cache=cache,
+        positions=positions,
+    )
+    h = h + a
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["ln2"], cfg.norm_eps), cfg)
+    return x + (h.astype(ct) @ p["out_proj"].astype(ct)).astype(x.dtype), new_cache

@@ -1,0 +1,160 @@
+"""RWKV-6 ("Finch") — attention-free LM with data-dependent decay.
+
+Faithful to arXiv:2404.05892 at the dataflow level: token-shift mixing,
+low-rank data-dependent decay w_t, bonus u, per-head (dh x dh) WKV state,
+squared-ReLU channel mix.  The WKV recurrence runs as a chunked sequential
+scan (see scan_utils); a chunked-parallel form is a §Perf candidate.
+
+The paper's (LoAS) technique does NOT apply to the time-mix (the WKV
+recurrence is not a spike x weight GEMM — DESIGN.md §4); the channel-mix FFN
+is SpikingFFN-swappable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from .layers import _ct, _dt, dense_init, mlp_apply, rmsnorm
+from .scan_utils import chunked_seq_scan, token_shift
+
+
+def _hook(x):
+    from . import transformer
+
+    return transformer._shard_hook(x, "residual")
+
+DECAY_RANK = 64
+
+
+def block_init(key, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    H, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    assert H * dh == D
+    ks = jax.random.split(key, 12)
+    dt = _dt(cfg)
+    return {
+        "ln1": jnp.zeros((D,), dt),
+        "ln2": jnp.zeros((D,), dt),
+        # time-mix interpolation factors (r, k, v, g, w)
+        "mu": 0.5 * jnp.ones((5, D), dt),
+        "wr": dense_init(ks[0], (D, D), dt),
+        "wk": dense_init(ks[1], (D, D), dt),
+        "wv": dense_init(ks[2], (D, D), dt),
+        "wg": dense_init(ks[3], (D, D), dt),
+        "wo": dense_init(ks[4], (D, D), dt),
+        # data-dependent decay: w0 + tanh(x @ a) @ b  (low-rank)
+        "w0": -6.0 * jnp.ones((D,), dt),
+        "wa": dense_init(ks[5], (D, DECAY_RANK), dt),
+        "wb": dense_init(ks[6], (DECAY_RANK, D), dt, fan_in=DECAY_RANK),
+        "u": jnp.zeros((H, dh), dt),  # bonus
+        "ln_x": jnp.zeros((D,), dt),  # per-head group-norm approximated
+        # channel mix
+        "cm_mu": 0.5 * jnp.ones((2, D), dt),
+        "cm_k": dense_init(ks[7], (D, cfg.d_ff), dt),
+        "cm_v": dense_init(ks[8], (cfg.d_ff, D), dt),
+        "cm_r": dense_init(ks[9], (D, D), dt),
+    }
+
+
+def block_axes(cfg: ArchConfig) -> dict:
+    return {
+        "ln1": (None,), "ln2": (None,), "mu": (None, "d_model"),
+        "wr": ("d_model", "heads_flat"), "wk": ("d_model", "heads_flat"),
+        "wv": ("d_model", "heads_flat"), "wg": ("d_model", "heads_flat"),
+        "wo": ("heads_flat", "d_model"),
+        # decay path is head-sharded like r/k/v so the WKV recurrence runs
+        # fully TP-local (w replicated was a 0.5 GiB/layer f32 leak)
+        "w0": ("heads_flat",), "wa": ("d_model", None), "wb": (None, "heads_flat"),
+        "u": ("heads", None), "ln_x": (None,),
+        "cm_mu": (None, "d_model"),
+        "cm_k": ("d_model", "d_ff"), "cm_v": ("d_ff", "d_model"),
+        "cm_r": ("d_model", "d_model"),
+    }
+
+
+def _wkv(r, k, v, w, u, state, chunk: int):
+    """WKV recurrence.  r,k,v,w: (B, S, H, dh); u: (H, dh);
+    state: (B, H, dh, dh) [key x value].  Returns (out (B,S,H,dh), state)."""
+    B, S, H, dh = r.shape
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,dh,dh)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, out
+
+    xs = jax.tree.map(lambda a: a.transpose(1, 0, 2, 3), (r, k, v, w))
+    state, out = chunked_seq_scan(step, state, xs, chunk)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def block_apply(p, x, cfg: ArchConfig, state=None):
+    """One RWKV6 block.  state: None (train, zeros) or dict(tm_prev, cm_prev,
+    wkv).  Returns (x, new_state)."""
+    B, S, D = x.shape
+    H, dh = cfg.ssm_heads, cfg.ssm_head_dim
+    ct = _ct(cfg)
+    if state is None:
+        state = {
+            "tm_prev": jnp.zeros((B, D), x.dtype),
+            "cm_prev": jnp.zeros((B, D), x.dtype),
+            "wkv": jnp.zeros((B, H, dh, dh), jnp.float32),
+        }
+
+    # ---- time mix ----
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    shifted, tm_prev = token_shift(xn, state["tm_prev"])
+    mu = p["mu"].astype(ct)
+    mix = lambda i: (xn + (shifted - xn) * mu[i]).astype(ct)
+    r = (mix(0) @ p["wr"].astype(ct)).reshape(B, S, H, dh)
+    k = (mix(1) @ p["wk"].astype(ct)).reshape(B, S, H, dh)
+    v = (mix(2) @ p["wv"].astype(ct)).reshape(B, S, H, dh)
+    g = jax.nn.silu(mix(3) @ p["wg"].astype(ct))
+    # data-dependent decay in (0, 1): exp(-exp(w0 + tanh(x a) b))
+    dd = jnp.tanh(mix(4) @ p["wa"].astype(ct)) @ p["wb"].astype(ct)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dd.astype(jnp.float32))))
+    w = w.reshape(B, S, H, dh)
+
+    out, wkv = _wkv(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["u"].astype(jnp.float32), state["wkv"], cfg.ssm_chunk,
+    )
+    out = rmsnorm(out.reshape(B, S, D).astype(x.dtype), p["ln_x"], cfg.norm_eps)
+    x = x + (out.astype(ct) * g) @ p["wo"].astype(ct)
+
+    # ---- channel mix ----
+    xn2 = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    shifted2, cm_prev = token_shift(xn2, state["cm_prev"])
+    cmu = p["cm_mu"].astype(ct)
+    xk = (xn2 + (shifted2 - xn2) * cmu[0]).astype(ct)
+    xr = (xn2 + (shifted2 - xn2) * cmu[1]).astype(ct)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_k"].astype(ct)))
+    rr = jax.nn.sigmoid(xr @ p["cm_r"].astype(ct))
+    x = x + rr * (kk @ p["cm_v"].astype(ct))
+    x = _hook(x)  # SP: residual carry sharded (batch, seq->model)
+
+    new_state = {"tm_prev": tm_prev, "cm_prev": cm_prev, "wkv": wkv}
+    return x.astype(jnp.result_type(x)), new_state
+
+
+def state_init(cfg: ArchConfig, batch: int):
+    H, dh, D = cfg.ssm_heads, cfg.ssm_head_dim, cfg.d_model
+    L = cfg.n_layers
+    return {
+        "tm_prev": jnp.zeros((L, batch, D), jnp.bfloat16),
+        "cm_prev": jnp.zeros((L, batch, D), jnp.bfloat16),
+        "wkv": jnp.zeros((L, batch, H, dh, dh), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def state_axes(cfg: ArchConfig) -> dict:
+    return {
+        "tm_prev": ("layers", "batch", "d_model"),
+        "cm_prev": ("layers", "batch", "d_model"),
+        "wkv": ("layers", "batch", "heads", None, None),
+        "pos": (),
+    }

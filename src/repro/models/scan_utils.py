@@ -1,0 +1,37 @@
+"""Chunked sequential scans for recurrent (SSM / RWKV) layers.
+
+BPTT through a 4k–32k step recurrence cannot store per-step residuals; we
+scan over chunks with remat at chunk boundaries: memory is
+O(S/chunk x state + chunk x step), the standard memory/recompute trade for
+linear-recurrence training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_seq_scan(step_fn, state, xs, chunk: int, remat: bool = True):
+    """scan(step_fn, state, xs) with xs leading dim S, rematerialized per
+    chunk of `chunk` steps.  Returns (final_state, ys)."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if not chunk or S <= chunk or S % chunk:
+        return jax.lax.scan(step_fn, state, xs)
+    n = S // chunk
+
+    def outer(state, xc):
+        return jax.lax.scan(step_fn, state, xc)
+
+    outer_fn = jax.remat(outer) if remat else outer
+    xs_c = jax.tree.map(lambda a: a.reshape(n, chunk, *a.shape[1:]), xs)
+    state, ys = jax.lax.scan(outer_fn, state, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(S, *a.shape[2:]), ys)
+    return state, ys
+
+
+def token_shift(x, prev):
+    """RWKV-style token shift: x_{t-1} stream.  x: (B, S, D); prev: (B, D)
+    (state from the previous segment, zeros at sequence start).
+    Returns (shifted (B, S, D), new_prev (B, D))."""
+    shifted = jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted, x[:, -1, :]

@@ -1,0 +1,293 @@
+"""LM assembly for the recurrent backbones: RWKV6 (ssm) and Zamba2 (hybrid).
+
+Shares embed / final-norm / chunked-CE with the transformer module; only the
+layer stack differs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+from . import mamba2, rwkv6
+from .layers import _ct, _dt, dense_init, rmsnorm
+from .transformer import _shard_hook, ce_loss, unembed
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+def rwkv_init(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 3)
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), _dt(cfg), fan_in=cfg.d_model),
+        "layers": jax.vmap(lambda k: rwkv6.block_init(k, cfg))(layer_keys),
+        "final_norm": jnp.zeros((cfg.d_model,), _dt(cfg)),
+        "lm_head": dense_init(ks[2], (cfg.d_model, cfg.vocab), _dt(cfg)),
+    }
+
+
+def rwkv_axes(cfg: ArchConfig) -> dict:
+    stack = jax.tree.map(
+        lambda a: ("layers",) + a, rwkv6.block_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return {
+        "embed": ("vocab", "d_model"),
+        "layers": stack,
+        "final_norm": (None,),
+        "lm_head": ("d_model", "vocab"),
+    }
+
+
+def _rwkv_stack(p, x, cfg: ArchConfig, states=None):
+    """states: None (train: zeros, discarded) or stacked dict (L leading)."""
+    threading = states is not None
+
+    def body(x, inp):
+        lp, st = inp
+        x, new_st = rwkv6.block_apply(lp, x, cfg, state=st)
+        return x, new_st
+
+    if threading:
+        sts = {k: states[k] for k in ("tm_prev", "cm_prev", "wkv")}
+        x, new_sts = jax.lax.scan(body, x, (p["layers"], sts))
+        return x, dict(new_sts, pos=states["pos"] + x.shape[1])
+
+    def body_train(x, lp):
+        x, _ = rwkv6.block_apply(lp, x, cfg, state=None)
+        return x, None
+
+    fn = jax.remat(body_train) if cfg.remat else body_train
+    x, _ = jax.lax.scan(fn, x, p["layers"], unroll=cfg.scan_unroll)
+    return x, None
+
+
+def rwkv_loss(p, cfg: ArchConfig, batch: dict):
+    x = p["embed"][batch["tokens"]].astype(_ct(cfg))
+    x = _shard_hook(x, "residual")
+    x, _ = _rwkv_stack(p, x, cfg)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return ce_loss(p, cfg, x, batch["labels"])
+
+
+def rwkv_prefill(p, cfg: ArchConfig, batch: dict, states):
+    x = p["embed"][batch["tokens"]].astype(_ct(cfg))
+    x = _shard_hook(x, "residual")
+    x, new_states = _rwkv_stack(p, x, cfg, states)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return unembed(p, cfg, x[:, -1:]), new_states
+
+
+def rwkv_decode(p, cfg: ArchConfig, tokens, states):
+    x = p["embed"][tokens].astype(_ct(cfg))
+    x, new_states = _rwkv_stack(p, x, cfg, states)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return unembed(p, cfg, x), new_states
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid
+# ---------------------------------------------------------------------------
+
+def _zamba_groups(cfg: ArchConfig):
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    tail = cfg.n_layers - n_groups * every
+    return every, n_groups, tail
+
+
+def zamba_init(cfg: ArchConfig, key) -> dict:
+    ks = jax.random.split(key, 4)
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), _dt(cfg), fan_in=cfg.d_model),
+        "mamba": jax.vmap(lambda k: mamba2.mamba_init(k, cfg))(layer_keys),
+        "shared": mamba2.shared_block_init(ks[2], cfg),
+        "final_norm": jnp.zeros((cfg.d_model,), _dt(cfg)),
+        "lm_head": dense_init(ks[3], (cfg.d_model, cfg.vocab), _dt(cfg)),
+    }
+
+
+def zamba_axes(cfg: ArchConfig) -> dict:
+    stack = jax.tree.map(
+        lambda a: ("layers",) + a, mamba2.mamba_axes(cfg),
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+    return {
+        "embed": ("vocab", "d_model"),
+        "mamba": stack,
+        "shared": mamba2.shared_block_axes(cfg),
+        "final_norm": (None,),
+        "lm_head": ("d_model", "vocab"),
+    }
+
+
+def _take_group(tree, start, size):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_slice_in_dim(a, start, size, axis=0), tree
+    )
+
+
+def _zamba_stack(p, x, cfg: ArchConfig, x0, states=None, positions=None):
+    """Grouped scan: `every` mamba layers then the weight-shared attn block.
+
+    states: None (train) or dict(conv (L,...), ssm (L,...), attn {k,v:(G,...),
+    kv_pos, pos}).  x0: original embeddings (B, S, D) for the shared block.
+    """
+    every, n_groups, tail = _zamba_groups(cfg)
+    threading = states is not None
+
+    def mamba_group(x, lp_group, st_group):
+        def inner(carry, inp):
+            x = carry
+            lp, st = inp
+            x, new_st = mamba2.mamba_apply(lp, x, cfg, state=st)
+            return x, new_st
+
+        if st_group is not None:
+            x, new_sts = jax.lax.scan(inner, x, (lp_group, st_group))
+            return x, new_sts
+
+        def inner_train(x, lp):
+            x, _ = mamba2.mamba_apply(lp, x, cfg, state=None)
+            return x, None
+
+        fn = jax.remat(inner_train) if cfg.remat else inner_train
+        x, _ = jax.lax.scan(fn, x, lp_group)
+        return x, None
+
+    group_params = jax.tree.map(
+        lambda a: a[: n_groups * every].reshape(n_groups, every, *a.shape[1:]),
+        p["mamba"],
+    )
+    if threading:
+        mamba_sts = {
+            "conv": states["conv"][: n_groups * every].reshape(
+                n_groups, every, *states["conv"].shape[1:]
+            ),
+            "ssm": states["ssm"][: n_groups * every].reshape(
+                n_groups, every, *states["ssm"].shape[1:]
+            ),
+        }
+        attn_st = states["attn"]
+
+        def body(carry, inp):
+            x = carry
+            lp_group, st_group, ck, cv = inp
+            x, new_sts = mamba_group(x, lp_group, st_group)
+            lc = {"k": ck, "v": cv, "kv_pos": attn_st["kv_pos"],
+                  "pos": attn_st["pos"]}
+            x, nc = mamba2.shared_block_apply(
+                p["shared"], x, x0, cfg, cache=lc, positions=positions
+            )
+            return x, (new_sts, nc["k"], nc["v"])
+
+        x, (new_mamba, nk, nv) = jax.lax.scan(
+            body, x, (group_params, mamba_sts, attn_st["k"], attn_st["v"])
+        )
+        flat = lambda a: a.reshape(n_groups * every, *a.shape[2:])
+        new_conv = flat(new_mamba["conv"])
+        new_ssm = flat(new_mamba["ssm"])
+        if tail:
+            tail_params = _take_group(p["mamba"], n_groups * every, tail)
+            tail_sts = {
+                "conv": states["conv"][n_groups * every:],
+                "ssm": states["ssm"][n_groups * every:],
+            }
+            x, new_tail = mamba_group(x, tail_params, tail_sts)
+            new_conv = jnp.concatenate([new_conv, new_tail["conv"]], axis=0)
+            new_ssm = jnp.concatenate([new_ssm, new_tail["ssm"]], axis=0)
+        S = x.shape[1]
+        s_cache = attn_st["k"].shape[2]
+        kv_pos = jax.lax.dynamic_update_slice(
+            attn_st["kv_pos"],
+            attn_st["pos"] + jnp.arange(S, dtype=jnp.int32),
+            (attn_st["pos"] % s_cache,),
+        )
+        new_states = {
+            "conv": new_conv,
+            "ssm": new_ssm,
+            "attn": {"k": nk, "v": nv, "kv_pos": kv_pos,
+                     "pos": attn_st["pos"] + S},
+        }
+        return x, new_states
+
+    def body_train(x, lp_group):
+        x, _ = mamba_group(x, lp_group, None)
+        x, _ = mamba2.shared_block_apply(p["shared"], x, x0, cfg, cache=None,
+                                         positions=positions)
+        return x, None
+
+    fn = jax.remat(body_train) if cfg.remat else body_train
+    x, _ = jax.lax.scan(fn, x, group_params)
+    if tail:
+        tail_params = _take_group(p["mamba"], n_groups * every, tail)
+        x, _ = mamba_group(x, tail_params, None)
+    return x, None
+
+
+def zamba_loss(p, cfg: ArchConfig, batch: dict):
+    x0 = p["embed"][batch["tokens"]].astype(_ct(cfg))
+    x0 = _shard_hook(x0, "residual")
+    x, _ = _zamba_stack(p, x0, cfg, x0)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return ce_loss(p, cfg, x, batch["labels"])
+
+
+def zamba_state_init(cfg: ArchConfig, batch: int, max_len: int):
+    every, n_groups, tail = _zamba_groups(cfg)
+    d_in = cfg.ssm_expand * cfg.d_model
+    S = max_len
+    return {
+        "conv": jnp.zeros(
+            (cfg.n_layers, batch, cfg.conv_width - 1, d_in), jnp.bfloat16
+        ),
+        "ssm": jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+             cfg.ssm_state), jnp.float32,
+        ),
+        "attn": {
+            "k": jnp.zeros((n_groups, batch, S, cfg.n_kv, cfg.head_dim),
+                           jnp.bfloat16),
+            "v": jnp.zeros((n_groups, batch, S, cfg.n_kv, cfg.head_dim),
+                           jnp.bfloat16),
+            "kv_pos": -jnp.ones((S,), jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        },
+    }
+
+
+def zamba_state_axes(cfg: ArchConfig) -> dict:
+    return {
+        "conv": ("layers", "batch", None, "d_inner"),
+        "ssm": ("layers", "batch", "heads", None, None),
+        "attn": {
+            "k": ("layers", "batch", "cache_seq", "kv_heads", None),
+            "v": ("layers", "batch", "cache_seq", "kv_heads", None),
+            "kv_pos": (None,),
+            "pos": (),
+        },
+    }
+
+
+def zamba_prefill(p, cfg: ArchConfig, batch: dict, states):
+    x0 = p["embed"][batch["tokens"]].astype(_ct(cfg))
+    x0 = _shard_hook(x0, "residual")
+    B, S = batch["tokens"].shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, new_states = _zamba_stack(p, x0, cfg, x0, states, positions=positions)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return unembed(p, cfg, x[:, -1:]), new_states
+
+
+def zamba_decode(p, cfg: ArchConfig, tokens, states):
+    x0 = p["embed"][tokens].astype(_ct(cfg))
+    B = tokens.shape[0]
+    positions = jnp.broadcast_to(states["attn"]["pos"][None, None], (B, 1))
+    x, new_states = _zamba_stack(p, x0, cfg, x0, states, positions=positions)
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    return unembed(p, cfg, x), new_states

@@ -1,0 +1,18 @@
+from .adamw import adamw
+from .adafactor import adafactor
+from .schedules import warmup_cosine
+from .common import apply_updates, clip_by_global_norm, global_norm
+from .compress import ErrorFeedbackInt8
+
+__all__ = [
+    "adamw", "adafactor", "warmup_cosine", "apply_updates",
+    "clip_by_global_norm", "global_norm", "ErrorFeedbackInt8",
+]
+
+
+def get_optimizer(name: str, lr_schedule, **kw):
+    if name == "adamw":
+        return adamw(lr_schedule, **kw)
+    if name == "adafactor":
+        return adafactor(lr_schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,76 @@
+"""Adafactor (Shazeer & Stern 2018) — factored second moments.
+
+The nemotron-340B / mixtral / phi3.5 train configs use this: optimizer state
+is O(rows + cols) per matrix instead of O(rows x cols), which is what lets a
+340B-param train step fit 16 GB/chip at 256 chips (DESIGN.md §5 memory plan).
+Factoring applies to the trailing two dims (stacked-layer / expert leading
+dims stay un-factored).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Optimizer, _lr_at
+
+EPS1 = 1e-30
+CLIP = 1.0
+
+
+def _factored(shape) -> bool:
+    # purely rank-based so the (structural) axes tree in train_state_axes
+    # can mirror this decision without knowing dim sizes
+    return len(shape) >= 2
+
+
+def adafactor(lr, decay: float = 0.8, min_dim_size_to_factor: int = 32):
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "v": jax.tree.map(st, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = _lr_at(lr, c)
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + EPS1
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + EPS1)
+                    + EPS1
+                )
+                u = g32 / denom
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 / jnp.sqrt(v + EPS1)
+                ns = {"v": v}
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + EPS1)
+            u = u / jnp.maximum(1.0, rms / CLIP)
+            return -lr_t * u, ns
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_s = tdef.flatten_up_to(state["v"])
+        outs = [upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = tdef.unflatten([o[0] for o in outs])
+        new_v = tdef.unflatten([o[1] for o in outs])
+        return updates, {"v": new_v, "count": c}
+
+    return Optimizer(init=init, update=update)

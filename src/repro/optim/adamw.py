@@ -1,0 +1,52 @@
+"""AdamW with dtype-configurable moments (bf16 moments halve optimizer HBM —
+one of the distributed memory levers for the big archs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import Optimizer, _lr_at
+
+
+def adamw(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype=None,
+):
+    def init(params):
+        dt = lambda p: moment_dtype or p.dtype
+        return {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt(p)), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt(p)), params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        lr_t = _lr_at(lr, c)
+        bc1 = 1.0 - b1 ** c.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m32 / bc1
+            vh = v32 / bc2
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m32.astype(m.dtype), v32.astype(v.dtype)
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda o: o[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"m": m, "v": v, "count": c}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,35 @@
+"""Optimizer plumbing: minimal optax-like (init, update) transforms."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, opt_state, params) -> (updates, opt_state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda t: (t * scale).astype(t.dtype), tree), g
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates
+    )
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)

@@ -1,0 +1,2 @@
+from .hlo_stats import HloStats, analyze
+from .report import model_flops, roofline_from_record

@@ -1,0 +1,100 @@
+"""Roofline-term computation from dry-run records (EXPERIMENTS.md §Roofline).
+
+Hardware constants (TPU v5e target):
+  197 TFLOP/s bf16 per chip; 819 GB/s HBM; ~50 GB/s/link ICI.
+
+All hlo_stats numbers are PER DEVICE (SPMD program), so:
+  t_comp = flops_dev / 197e12
+  t_mem  = bytes_dev / 819e9
+  t_coll = coll_bytes_dev / 50e9      (single-link conservative bound; the
+           2D/3D torus has multiple links per axis — we report the bound and
+           note multi-link headroom rather than guess the axis mapping)
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Analytic MODEL_FLOPS: 6*N*D for training (2 fwd + 4 bwd), 2*N_active*D
+    for inference, D = processed tokens.  MoE uses active params."""
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    n = cfg.active_params()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch
+
+
+def _score_shaped_bytes(rec: dict) -> float:
+    """Measured bytes of attention-score-shaped tensors: output shapes whose
+    trailing dim equals the cell's kv length and whose second-to-last dim is
+    a query-chunk (<= 1024).  These are exactly what the flash kernels keep
+    in VMEM (kernels/flash_mha.py)."""
+    import re as _re
+
+    st = rec["hlo_stats"]
+    shapes = st.get("bytes_by_shape") or {}
+    cell = SHAPES[rec["shape"]]
+    skv = cell.seq_len
+    total = 0.0
+    for key, b in shapes.items():
+        dims = [int(d) for d in _re.search(r"\[([0-9,]*)\]", key).group(1).split(",") if d]
+        if len(dims) >= 3 and dims[-1] == skv and dims[-2] <= 1024:
+            total += b
+    return total
+
+
+def roofline_from_record(rec: dict) -> dict:
+    st = rec["hlo_stats"]
+    chips = rec.get("n_devices", 256)
+    t_comp = st["flops"] / PEAK_FLOPS
+    t_mem = st["bytes_accessed"] / HBM_BW
+    t_coll = st["collective_bytes"] / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_total = max(terms.values())
+    mf = model_flops(rec["arch"], rec["shape"]) / chips
+    useful = mf / max(st["flops"], 1.0)
+    # roofline fraction: useful-compute time / bound-term time
+    frac = (mf / PEAK_FLOPS) / max(t_total, 1e-12)
+    mem_gib = rec["memory"]["total_bytes"] / 2**30
+
+    # flash-attention projection (kernels/flash_mha.py): subtract the
+    # measured score-shaped HBM traffic the kernel keeps in VMEM
+    score_b = _score_shaped_bytes(rec)
+    t_mem_flash = max(st["bytes_accessed"] - score_b, 0.0) / HBM_BW
+    t_total_flash = max(t_comp, t_mem_flash, t_coll)
+    frac_flash = (mf / PEAK_FLOPS) / max(t_total_flash, 1e-12)
+
+    return {
+        "t_comp_s": t_comp,
+        "t_mem_s": t_mem,
+        "t_coll_s": t_coll,
+        "t_total_us": t_total * 1e6,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+        "score_bytes": score_b,
+        "t_mem_flash_s": t_mem_flash,
+        "roofline_fraction_flash": frac_flash,
+        "mem_gib": mem_gib,
+        "summary": (
+            f"comp={t_comp*1e3:.3f}ms mem={t_mem*1e3:.3f}ms "
+            f"coll={t_coll*1e3:.3f}ms bound={bottleneck} "
+            f"useful_ratio={useful:.2f} roofline_frac={frac:.3f} "
+            f"flash_frac={frac_flash:.3f} "
+            f"mem={mem_gib:.1f}GiB fits16G={'Y' if mem_gib <= 16 else 'N'}"
+        ),
+    }

@@ -1,0 +1,2 @@
+"""Serving substrate: prefill/decode steps live on the Model interface
+(repro.models.registry); the batched driver is repro.launch.serve."""

@@ -1,0 +1,3 @@
+from .step import make_train_step, init_train_state, train_state_axes
+
+__all__ = ["make_train_step", "init_train_state", "train_state_axes"]

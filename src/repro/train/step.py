@@ -1,0 +1,96 @@
+"""Train-step factory: loss -> grads -> clip -> (optional int8-EF compress)
+-> optimizer -> params.  State is a plain dict pytree so checkpointing and
+sharding stay structural.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.registry import Model
+from repro.optim import apply_updates, clip_by_global_norm, get_optimizer
+from repro.optim.compress import ErrorFeedbackInt8
+from repro.optim.schedules import warmup_cosine
+
+
+def default_optimizer(cfg: ArchConfig):
+    sched = warmup_cosine(3e-4, 200, 10000)
+    if cfg.optimizer == "adafactor":
+        return get_optimizer("adafactor", sched)
+    # bf16 moments for the bigger adamw archs (memory lever)
+    mdt = jnp.bfloat16 if cfg.fsdp else None
+    return get_optimizer("adamw", sched, moment_dtype=mdt)
+
+
+def init_train_state(model: Model, key, optimizer=None, grad_compress=False):
+    opt = optimizer or default_optimizer(model.cfg)
+    params = model.init(key)
+    state = {
+        "params": params,
+        "opt": opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if grad_compress:
+        state["ef_err"] = ErrorFeedbackInt8().init(params)
+    return state
+
+
+def train_state_axes(model: Model, state_shapes=None, grad_compress=False):
+    """Logical axes for the full train state (params axes propagated into
+    optimizer moments; scalars unsharded)."""
+    p_axes = model.axes()
+    is_ax = lambda x: isinstance(x, tuple)
+
+    def moment_axes_like(tree_axes):
+        return tree_axes
+
+    axes = {
+        "params": p_axes,
+        "opt": None,  # filled below based on optimizer family
+        "step": (),
+    }
+    if model.cfg.optimizer == "adafactor":
+        def fact(a):
+            # vr drops last dim; vc drops second-to-last
+            return {"vr": a[:-1], "vc": a[:-2] + a[-1:]} if len(a) >= 2 else {"v": a}
+        axes["opt"] = {
+            "v": jax.tree.map(fact, p_axes, is_leaf=is_ax),
+            "count": (),
+        }
+    else:
+        axes["opt"] = {
+            "m": moment_axes_like(p_axes),
+            "v": moment_axes_like(p_axes),
+            "count": (),
+        }
+    if grad_compress:
+        axes["ef_err"] = p_axes
+    return axes
+
+
+def make_train_step(model: Model, optimizer=None, clip_norm: float = 1.0,
+                    grad_compress: bool = False):
+    opt = optimizer or default_optimizer(model.cfg)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        if grad_compress:
+            ef = ErrorFeedbackInt8()
+            grads, new_err, _ = ef.compress(grads, state["ef_err"])
+        updates, new_opt = opt.update(grads, state["opt"], state["params"])
+        new_params = apply_updates(state["params"], updates)
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        if grad_compress:
+            new_state["ef_err"] = new_err
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_state, metrics
+
+    return train_step

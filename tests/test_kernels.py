@@ -1,0 +1,117 @@
+"""Pallas kernel tests: shape/dtype/T sweeps against the ref.py oracles
+(interpret mode), plus hypothesis property tests on the packed semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.packing import pack_spikes
+from repro.kernels import ops, ref
+
+
+def _mk(rng, T, M, K, N, density=0.2, w_density=0.05, dtype=np.float32):
+    spikes = rng.random((T, M, K)) < density
+    packed = np.zeros((M, K), np.uint32)
+    for t in range(T):
+        packed |= spikes[t].astype(np.uint32) << t
+    w = rng.normal(size=(K, N)).astype(dtype)
+    w[rng.random((K, N)) > w_density] = 0
+    return packed, w
+
+
+SHAPES = [
+    (1, 8, 16, 8),
+    (4, 16, 64, 32),
+    (4, 160, 300, 200),   # unaligned -> exercises padding
+    (8, 128, 128, 128),   # exactly one block
+    (2, 256, 384, 256),   # multi-block
+]
+
+
+@pytest.mark.parametrize("T,M,K,N", SHAPES)
+def test_ftp_spmm_matches_oracle(T, M, K, N):
+    rng = np.random.default_rng(T * 1000 + M)
+    packed, w = _mk(rng, T, M, K, N)
+    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,M,K,N", SHAPES)
+def test_fused_lif_matches_oracle(T, M, K, N):
+    rng = np.random.default_rng(T * 999 + N)
+    packed, w = _mk(rng, T, M, K, N, w_density=0.2)
+    c, u = ops.ftp_spmm_fused_lif(jnp.asarray(packed), jnp.asarray(w), T)
+    cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(cw))
+    np.testing.assert_allclose(np.asarray(u), np.asarray(uw), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("T,M,K,N", SHAPES[:3])
+@pytest.mark.parametrize("fuse", [True, False])
+def test_bsr_dual_sparse_matches_oracle(T, M, K, N, fuse):
+    rng = np.random.default_rng(T * 31 + K)
+    packed, w = _mk(rng, T, M, K, N, density=0.1, w_density=0.03)
+    out, u = ops.ftp_spmm_dual_sparse(packed, w, T, fuse_lif=fuse)
+    if fuse:
+        cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(cw))
+        np.testing.assert_allclose(np.asarray(u), np.asarray(uw), rtol=1e-5, atol=1e-5)
+    else:
+        want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_bsr_all_zero_weights():
+    rng = np.random.default_rng(7)
+    packed, w = _mk(rng, 4, 32, 64, 32)
+    w[:] = 0
+    c, u = ops.ftp_spmm_dual_sparse(packed, w, 4)
+    assert (np.asarray(c) == 0).all()
+    assert (np.asarray(u) == 0).all()
+
+
+def test_bf16_weights():
+    rng = np.random.default_rng(8)
+    packed, w = _mk(rng, 4, 32, 64, 32, w_density=0.2)
+    wb = jnp.asarray(w).astype(jnp.bfloat16)
+    out = ops.ftp_spmm(jnp.asarray(packed), wb, 4)
+    want = ref.ftp_spmm_ref(jnp.asarray(packed), wb, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-2, atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    T=st.integers(1, 8),
+    M=st.integers(1, 40),
+    K=st.integers(1, 80),
+    N=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_property_kernel_vs_oracle(T, M, K, N, seed):
+    """Property: for ANY shape/T/sparsity, kernel == oracle == einsum of
+    unpacked planes."""
+    rng = np.random.default_rng(seed)
+    packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
+                    w_density=rng.uniform(0.01, 0.5))
+    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), T=st.integers(1, 8))
+def test_property_silent_neurons_contribute_nothing(seed, T):
+    """Property (paper invariant): zeroing silent neurons' columns of W
+    never changes the output — silent neurons are dead weight the format
+    drops for free."""
+    rng = np.random.default_rng(seed)
+    M, K, N = 8, 32, 16
+    packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.3)
+    silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
+    w2 = w.copy()
+    w2[silent_cols] = 0
+    o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)

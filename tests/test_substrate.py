@@ -1,0 +1,252 @@
+"""Distributed-substrate tests: optimizers, schedules, gradient compression,
+checkpointing (atomic/restore/gc), fault-tolerance units, data pipeline
+determinism, sharding rules, HLO stats parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.configs import get_config, smoke_variant
+from repro.data.pipeline import SyntheticLMData
+from repro.ft import PreemptionHandler, StepTimer
+from repro.optim import (
+    ErrorFeedbackInt8,
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    warmup_cosine,
+)
+
+
+# --------------------------- optimizers ------------------------------------
+
+def _quad_losses(opt, steps=120):
+    # minimize ||x - 3||^2 + ||y + 1||^2
+    params = {"x": jnp.zeros((4,)), "y": jnp.ones((3, 5))}
+
+    def loss(p):
+        return jnp.sum((p["x"] - 3.0) ** 2) + jnp.sum((p["y"] + 1.0) ** 2)
+
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return float(loss(params))
+
+
+def test_adamw_converges():
+    assert _quad_losses(adamw(0.1)) < 1e-2
+
+
+def test_adafactor_converges():
+    assert _quad_losses(adafactor(0.3), steps=300) < 5e-2
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(0.1)
+    params = {"w": jnp.zeros((64, 128)), "b": jnp.zeros((7,))}
+    st = opt.init(params)
+    assert st["v"]["w"]["vr"].shape == (64,)
+    assert st["v"]["w"]["vc"].shape == (128,)
+    assert st["v"]["b"]["v"].shape == (7,)
+
+
+def test_warmup_cosine_schedule():
+    lr = warmup_cosine(1e-3, 100, 1000)
+    assert float(lr(jnp.asarray(0))) == 0.0
+    assert float(lr(jnp.asarray(100))) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(jnp.asarray(1000))) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    got = float(jnp.sqrt(jnp.sum(clipped["a"] ** 2)))
+    assert got == pytest.approx(1.0, rel=1e-4)
+
+
+def test_int8_error_feedback_unbiased_over_time():
+    """EF property: accumulated dequantized grads converge to accumulated
+    true grads (error is carried, not lost)."""
+    ef = ErrorFeedbackInt8()
+    rng = np.random.default_rng(0)
+    g_true = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    err = ef.init({"g": g_true})["g"] * 0
+    total_hat = jnp.zeros_like(g_true)
+    for i in range(50):
+        g_hat, err, payload = ef.compress({"g": g_true}, {"g": err})
+        g_hat, err = g_hat["g"], err["g"]
+        total_hat += g_hat
+        assert payload["g"][0].dtype == jnp.int8
+    np.testing.assert_allclose(
+        np.asarray(total_hat / 50), np.asarray(g_true), atol=1e-2
+    )
+
+
+# --------------------------- checkpointing ---------------------------------
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(12.0).reshape(3, 4)},
+        "opt": {"m": jnp.ones((3, 4)), "count": jnp.asarray(7, jnp.int32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path / "ckpt")
+    st = _state()
+    save_checkpoint(d, 7, st)
+    assert latest_step(d) == 7
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+    rest = restore_checkpoint(d, 7, like)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(rest)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_gc_keeps_newest(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2, 3, 4):
+        save_checkpoint(d, s, _state(), keep=2)
+    steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+    assert steps == [3, 4]
+
+
+def test_checkpoint_manager_async(tmp_path):
+    d = str(tmp_path / "ckpt")
+    mgr = CheckpointManager(d, interval=2, keep=2, async_save=True)
+    st = _state()
+    assert not mgr.maybe_save(1, st)
+    assert mgr.maybe_save(2, st)
+    mgr.wait()
+    assert latest_step(d) == 2
+    got, step = mgr.restore_latest(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), st)
+    )
+    assert step == 2
+    np.testing.assert_array_equal(
+        np.asarray(got["params"]["w"]), np.asarray(st["params"]["w"])
+    )
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, _state())
+    bad = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct((9,) + a.shape, a.dtype), _state()
+    )
+    with pytest.raises(AssertionError):
+        restore_checkpoint(d, 1, bad)
+
+
+# --------------------------- fault tolerance --------------------------------
+
+def test_preemption_handler():
+    h = PreemptionHandler(signals=())
+    assert not h.should_stop
+    h.trigger()
+    assert h.should_stop
+
+
+def test_step_timer_flags_stragglers():
+    events = []
+    t = StepTimer(window=50, threshold=2.0, on_straggler=events.append)
+    import time as _t
+
+    for i in range(8):
+        with t:
+            _t.sleep(0.01)
+    with t:
+        _t.sleep(0.08)  # 8x the median -> straggler
+    assert len(events) == 1
+    assert events[0]["ratio"] > 2.0
+
+
+# --------------------------- data pipeline ----------------------------------
+
+def test_data_deterministic_by_step():
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    d1 = SyntheticLMData(cfg, seq_len=32, global_batch=4, seed=1)
+    d2 = SyntheticLMData(cfg, seq_len=32, global_batch=4, seed=1)
+    b1, b2 = d1.batch(17), d2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = d1.batch(18)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+
+
+def test_data_labels_are_shifted_tokens():
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    d = SyntheticLMData(cfg, seq_len=32, global_batch=2, seed=0)
+    b = d.batch(0)
+    assert b["tokens"].shape == (2, 32)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+
+
+# --------------------------- hlo stats parser --------------------------------
+
+def test_hlo_stats_trip_count_and_collectives():
+    from repro.roofline.hlo_stats import analyze
+
+    hlo = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8]{1,0} get-tuple-element(%p), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups=[2,4]<=[8]
+  %one = s32[] constant(1)
+  %ni = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ni, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+  %x = f32[8,8]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%z, %x)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+    s = analyze(hlo)
+    assert s.while_trip_counts == [10]
+    assert s.flops == 10 * 2 * 8 * 8 * 8
+    assert s.collective_bytes == 10 * 8 * 8 * 4
+    assert s.collectives == {"all-reduce": 10 * 256.0}
+
+
+def test_hlo_stats_on_real_lowering():
+    from repro.roofline.hlo_stats import analyze
+
+    def f(ws, x):
+        def body(x, w):
+            return jnp.tanh(x @ w), None
+        x, _ = jax.lax.scan(body, x, ws)
+        return x.sum()
+
+    ws = jnp.ones((6, 16, 16))
+    x = jnp.ones((4, 16))
+    compiled = jax.jit(f).lower(ws, x).compile()
+    s = analyze(compiled.as_text())
+    assert 6 in s.while_trip_counts
+    # 6 layers x 2*4*16*16 flops
+    assert s.flops >= 6 * 2 * 4 * 16 * 16

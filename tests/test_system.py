@@ -1,0 +1,87 @@
+"""System-level behaviour tests: assigned-architecture configs match the
+assignment table exactly, shape-cell applicability follows the rules, and
+the dry-run manifest is coherent."""
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.configs.base import SHAPES, applicable_shapes, skip_reason
+from repro.launch.specs import runnable_cells, skipped_cells
+
+# assignment table: (layers, d_model, heads, kv, d_ff, vocab)
+ASSIGNED = {
+    "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+    "qwen3_14b": (40, 5120, 40, 8, 17408, 151936),
+    "nemotron_4_340b": (96, 18432, 96, 8, 73728, 256000),
+    "llama3_2_1b": (16, 2048, 32, 8, 8192, 128256),
+    "rwkv6_1_6b": (24, 2048, 0, 0, 7168, 65536),
+    "hubert_xlarge": (48, 1280, 16, 16, 5120, 504),
+    "llava_next_mistral_7b": (32, 4096, 32, 8, 14336, 32000),
+    "mixtral_8x22b": (56, 6144, 48, 8, 16384, 32768),
+    "phi3_5_moe": (32, 4096, 32, 8, 6400, 32064),
+    "zamba2_7b": (81, 3584, 32, 32, 14336, 32000),
+}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_config_matches_assignment(arch):
+    cfg = get_config(arch)
+    L, D, H, KV, F, V = ASSIGNED[arch]
+    assert cfg.n_layers == L and cfg.d_model == D and cfg.d_ff == F
+    assert cfg.n_heads == H and cfg.n_kv == KV and cfg.vocab == V
+
+
+def test_special_features():
+    assert get_config("gemma_2b").act == "geglu"
+    assert get_config("gemma_2b").head_dim == 256
+    assert get_config("qwen3_14b").qk_norm
+    assert get_config("nemotron_4_340b").act == "sq_relu"
+    assert get_config("hubert_xlarge").encoder_only
+    assert get_config("mixtral_8x22b").n_experts == 8
+    assert get_config("mixtral_8x22b").attn == "swa"
+    assert get_config("phi3_5_moe").n_experts == 16
+    assert get_config("phi3_5_moe").top_k == 2
+    assert get_config("zamba2_7b").shared_attn_every == 6
+    assert get_config("zamba2_7b").ssm_state == 64
+    assert get_config("rwkv6_1_6b").n_heads == 0  # attention-free
+
+
+def test_shape_cell_rules():
+    # encoder-only: no decode cells
+    h = applicable_shapes(get_config("hubert_xlarge"))
+    assert h["decode_32k"] is None and h["long_500k"] is None
+    assert h["train_4k"] is not None and h["prefill_32k"] is not None
+    # long_500k only for sub-quadratic archs
+    for arch, runs in [
+        ("rwkv6_1_6b", True), ("zamba2_7b", True), ("mixtral_8x22b", True),
+        ("gemma_2b", False), ("qwen3_14b", False), ("nemotron_4_340b", False),
+        ("llama3_2_1b", False), ("llava_next_mistral_7b", False),
+        ("phi3_5_moe", False),
+    ]:
+        cells = applicable_shapes(get_config(arch))
+        assert (cells["long_500k"] is not None) == runs, arch
+    # every skip has a documented reason
+    for a, s, r in skipped_cells():
+        assert r, (a, s)
+
+
+def test_manifest_counts():
+    run = runnable_cells()
+    skip = skipped_cells()
+    assert len(run) + len(skip) == 10 * 4
+    assert len(run) == 32
+
+
+def test_shapes_table():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_active_params_moe():
+    mx = get_config("mixtral_8x22b")
+    assert mx.active_params() < 0.45 * mx.n_params()  # 2-of-8 experts active
+    dense = get_config("llama3_2_1b")
+    assert dense.active_params() == dense.n_params()
