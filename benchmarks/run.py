@@ -16,6 +16,7 @@ def main() -> None:
         fig18_19_compare,
         kernels_bench,
         roofline_table,
+        serve_bench,
         table4_area_power,
     )
 
@@ -27,6 +28,7 @@ def main() -> None:
         "fig18_19": fig18_19_compare,
         "kernels": kernels_bench,
         "roofline": roofline_table,
+        "serve": serve_bench,
     }
     filters = [a for a in sys.argv[1:] if not a.startswith("-")]
     print("name,us_per_call,derived")

@@ -1,0 +1,104 @@
+"""Serve-throughput benchmark: tok/s and TTFT vs batch size through the
+continuous-batching engine, written to BENCH_serve.json so later PRs have a
+perf trajectory to beat.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--arch llama3_2_1b]
+
+Wall-times on the CPU container are schedule-comparison signals (batched vs
+unbatched), not TPU numbers — same caveat as kernels_bench.py.  The point
+the JSON must hold: batched tok/s > batch-1 tok/s, because every decode
+step amortizes one weight fetch over the whole batch (and, for spiking
+layers, over all T timesteps — the paper's FTP argument applied at the
+serving level).
+"""
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                        "BENCH_serve.json")
+
+
+def bench_engine(arch: str, batches=(1, 2, 4, 8), prompt_len=32, gen=16):
+    from repro.configs import get_config, smoke_variant
+    from repro.models.registry import build_model
+    from repro.serve import Engine
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    results = []
+    for B in batches:
+        prompts = [
+            np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+            for _ in range(B)
+        ]
+        engine = Engine(model, params, max_len=prompt_len + gen, max_slots=B)
+        engine.generate_batch(prompts, gen)      # warm-up: jit compiles
+        engine.metrics = EngineMetrics()         # drop warm-up wall time
+        engine.generate_batch(prompts, gen)
+        s = engine.summary()
+        results.append({
+            "batch": B,
+            "tok_s": s["throughput_tok_s"],
+            "ttft_s_p50": s["ttft_s_p50"],
+            "latency_s_p50": s["latency_s_p50"],
+            "mean_decode_batch": s["mean_decode_batch"],
+        })
+        print(f"  batch={B:2d}  {s['throughput_tok_s']:8.1f} tok/s  "
+              f"ttft_p50={s['ttft_s_p50']*1e3:7.1f}ms")
+    return results
+
+
+def rows():
+    """CSV rows for benchmarks.run (reduced sweep; leaves the committed
+    full-sweep BENCH_serve.json untouched)."""
+    rep = main(["--batches", "1,4", "--no-write"])
+    r1 = rep["results"][0]["tok_s"]
+    rb = rep["results"][-1]["tok_s"]
+    return [(
+        "serve/batched_vs_single_tok_s", 0.0,
+        f"tok_s_b1={r1:.1f} tok_s_b{rep['results'][-1]['batch']}={rb:.1f} "
+        f"speedup={rb / r1:.2f}x (XLA:CPU)",
+    )]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--batches", default="1,2,4,8")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--no-write", action="store_true",
+                    help="skip writing BENCH_serve.json")
+    args = ap.parse_args(argv)
+    batches = tuple(int(b) for b in args.batches.split(","))
+
+    print(f"serve bench: {args.arch} prompt={args.prompt_len} gen={args.gen} "
+          f"backend={jax.default_backend()}")
+    results = bench_engine(
+        args.arch, batches=batches, prompt_len=args.prompt_len, gen=args.gen
+    )
+    report = {
+        "arch": args.arch,
+        "backend": jax.default_backend(),
+        "prompt_len": args.prompt_len,
+        "gen": args.gen,
+        "results": results,
+        "batched_speedup_vs_1": results[-1]["tok_s"] / results[0]["tok_s"],
+    }
+    if not args.no_write:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {OUT_PATH}")
+    print(f"batched speedup {report['batched_speedup_vs_1']:.2f}x")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -1,27 +1,36 @@
-"""Batched serving example: prefill + greedy decode on three cache types
-(transformer KV ring buffer, RWKV recurrent state, Zamba2 hybrid state).
+"""Serving example: the continuous-batching engine over three cache types
+(transformer KV ring buffer, RWKV recurrent state, Zamba2 hybrid state),
+with staggered arrivals so prefills merge into in-flight decode.
 
     PYTHONPATH=src python examples/serve_llm.py
 """
-import time
-
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+import jax
+
 from repro.configs import get_config, smoke_variant
-from repro.launch.serve import generate
 from repro.models.registry import build_model
+from repro.serve import Engine
 
 for arch in ("llama3_2_1b", "rwkv6_1_6b", "zamba2_7b"):
     cfg = smoke_variant(get_config(arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    B, P, G = 4, 32, 12
-    tokens = jnp.asarray(rng.integers(0, cfg.vocab, size=(B, P)), jnp.int32)
-    cache = model.init_cache(B, P + G)
-    t0 = time.time()
-    out = generate(model, params, tokens, cache, G)
-    print(f"{arch:14s} generated {tuple(out.shape)} in {time.time()-t0:5.1f}s "
-          f"| first tokens {np.asarray(out[0][:6])}")
+    P, G = 32, 12
+    engine = Engine(model, params, max_len=P + 1 + G, max_slots=4,
+                    batch_align=2)
+
+    # first wave of 3 requests; after one engine step (prefill + 1 decode,
+    # sequence position P+1) a late arrival with a (P+1)-token prompt lands
+    # exactly on the in-flight cohort's position and merges into it
+    reqs = [engine.submit(rng.integers(0, cfg.vocab, size=(P,)), G)
+            for _ in range(3)]
+    engine.step()
+    reqs.append(engine.submit(rng.integers(0, cfg.vocab, size=(P + 1,)), G))
+    out = engine.run()
+    s = engine.summary()
+    print(f"{arch:14s} {s['n_requests']} reqs {s['total_tokens']} toks "
+          f"in {s['wall_s']:5.1f}s | merges={s['cohort_merges']} "
+          f"mean_decode_batch={s['mean_decode_batch']:.1f} "
+          f"| first tokens {out[reqs[0].rid][:6]}")

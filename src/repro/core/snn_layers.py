@@ -104,6 +104,36 @@ def init_spiking_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
     }
 
 
+def spiking_ffn_apply_packed(
+    params: dict, packed_in: jax.Array, cfg: SpikingConfig
+) -> tuple[jax.Array, jax.Array]:
+    """Spike-domain FFN: packed words in, (analog out, packed hidden words).
+
+    ``packed_in``: (..., d_model) uint32 — one spike word per neuron, bit t
+    = timestep t.  Callers that already hold activations as packed words
+    (the serving engine's spike cache, spike-stream pipelines) skip the
+    direct-encode step and keep the hidden activations packed for reuse —
+    nothing is unpacked to (T, ...) float32 between layers.
+    """
+    w_in, w_out = params["w_in"], params["w_out"]
+    if cfg.weight_density < 1.0:
+        w_in = prune_by_magnitude(w_in, cfg.weight_density)
+        w_out = prune_by_magnitude(w_out, cfg.weight_density)
+    lead = packed_in.shape[:-1]
+    pm = packed_in.reshape(-1, packed_in.shape[-1])
+    if cfg.preprocess_min_spikes > 0:
+        from .packing import mask_low_activity
+
+        pm = mask_low_activity(pm, cfg.preprocess_min_spikes)
+    packed_h, _ = ftp_layer(pm, w_in, cfg.T, cfg.v_th, cfg.tau)
+    o = ftp_spmspm(packed_h, w_out, cfg.T)
+    y = rate_decode(o)
+    return (
+        y.reshape(*lead, -1),
+        packed_h.reshape(*lead, -1),
+    )
+
+
 def spiking_ffn_apply(
     params: dict,
     x: jax.Array,

@@ -79,6 +79,53 @@ def ftp_spmm_fused_lif(
 
 
 # ---------------------------------------------------------------------------
+# Batched entry points (serving): a (B, M, K) packed batch is one
+# (B*M, K) x (K, N) problem — the kernels are row-parallel, so folding the
+# batch into the row dimension is exact and keeps the MXU grid dense.  The
+# weight tile is fetched once and reused across the whole batch (and all T
+# timesteps), which is where continuous batching compounds the paper's
+# weight-traffic amortization.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("T", "bm", "bk", "bn", "interpret"))
+def ftp_spmm_batched(
+    a_packed, b, T: int, *, bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None
+):
+    """(B, M, K) uint32 x (K, N) -> (T, B, M, N) f32."""
+    B, M, K = a_packed.shape
+    out = ftp_spmm(
+        a_packed.reshape(B * M, K), b, T,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+    return out.reshape(T, B, M, b.shape[1])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("T", "v_th", "tau", "bm", "bk", "bn", "interpret")
+)
+def ftp_spmm_fused_lif_batched(
+    a_packed,
+    b,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm=_k.BM,
+    bk=_k.BK,
+    bn=_k.BN,
+    interpret=None,
+):
+    """(B, M, K) uint32 x (K, N) -> ((B, M, N) uint32, (B, M, N) f32)."""
+    B, M, K = a_packed.shape
+    c, u = ftp_spmm_fused_lif(
+        a_packed.reshape(B * M, K), b, T, v_th, tau,
+        bm=bm, bk=bk, bn=bn, interpret=interpret,
+    )
+    N = b.shape[1]
+    return c.reshape(B, M, N), u.reshape(B, M, N)
+
+
+# ---------------------------------------------------------------------------
 # Dual-sparse path: block-CSR construction + block-level inner join.
 # ---------------------------------------------------------------------------
 

@@ -1,12 +1,17 @@
-"""Serving launcher: batched prefill + greedy decode against any arch.
+"""Serving launcher: continuous-batching engine over any registered arch.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
+
+Requests (`--batch` of them) are submitted to `repro.serve.Engine`, which
+batches prefills, merges decode cohorts, and reports TTFT / throughput.
+`generate` below is the original single-shot loop, kept as the reference
+oracle the engine is tested token-identical against.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +19,7 @@ import numpy as np
 
 
 def generate(model, params, tokens, cache, steps: int):
-    """Greedy generation loop (jit'd prefill + decode)."""
+    """Greedy generation loop (jit'd prefill + decode) — reference oracle."""
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode, donate_argnums=(2,))
     logits, cache = prefill(params, {"tokens": tokens}, cache)
@@ -25,17 +30,25 @@ def generate(model, params, tokens, cache, steps: int):
     return jnp.concatenate(out, axis=1)
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="number of requests to submit")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
-    args = ap.parse_args()
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="engine slot budget (0 = one slot per request)")
+    ap.add_argument("--batch-align", type=int, default=1,
+                    help="pad prefill batches to a multiple of this")
+    ap.add_argument("--spiking-packed", action="store_true",
+                    help="spiking archs: packed uint32 FFN inference path")
+    args = ap.parse_args(argv)
 
     from repro.configs import get_config, smoke_variant
     from repro.models.registry import build_model
+    from repro.serve import Engine
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -45,17 +58,28 @@ def main():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    tokens = jnp.asarray(
-        rng.integers(0, cfg.vocab, size=(args.batch, args.prompt_len)),
-        jnp.int32,
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(args.prompt_len,)),
+                   np.int32)
+        for _ in range(args.batch)
+    ]
+    engine = Engine(
+        model,
+        params,
+        max_len=args.prompt_len + args.gen,
+        max_slots=args.max_slots or args.batch,
+        batch_align=args.batch_align,
+        spiking_packed=args.spiking_packed,
     )
-    cache = model.init_cache(args.batch, args.prompt_len + args.gen)
-    t0 = time.time()
-    out = generate(model, params, tokens, cache, args.gen)
-    dt = time.time() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s on this host)")
-    print("sample:", np.asarray(out[0][:12]))
+    outs = engine.generate_batch(prompts, args.gen)
+    s = engine.summary()
+    print(f"served {s['n_requests']} requests / {s['total_tokens']} tokens "
+          f"in {s['wall_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
+          f"ttft_p50 {s['ttft_s_p50']*1e3:.0f}ms, "
+          f"mean decode batch {s['mean_decode_batch']:.1f})")
+    print("summary:", json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                                  for k, v in s.items()}))
+    print("sample:", outs[0][:12])
     return 0
 
 

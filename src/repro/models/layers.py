@@ -256,6 +256,25 @@ def mlp_axes(cfg: ArchConfig) -> dict:
     return {"wu": ("d_model", "d_ff"), "wd": ("d_ff", "d_model")}
 
 
+# Spiking-FFN execution mode: "train" keeps the surrogate-gradient float
+# path (differentiable); "infer" routes through the packed uint32 FTP path
+# (identical forward values — spikes are exactly {0, 1} either way and both
+# paths lower to the same folded (T*M, K) contraction).  The serving engine
+# flips this so SNN layers carry packed spike words during engine steps.
+_spiking_ffn_mode = "train"
+
+
+def set_spiking_ffn_mode(mode: str) -> None:
+    if mode not in ("train", "infer"):
+        raise ValueError(f"unknown spiking FFN mode {mode!r}")
+    global _spiking_ffn_mode
+    _spiking_ffn_mode = mode
+
+
+def get_spiking_ffn_mode() -> str:
+    return _spiking_ffn_mode
+
+
 def mlp_apply(p, x, cfg: ArchConfig):
     xc = x.astype(_ct(cfg))
     if cfg.spiking_ffn:
@@ -269,7 +288,8 @@ def mlp_apply(p, x, cfg: ArchConfig):
         wu, wd = p["wu"], p["wd"]
         y = spiking_ffn_apply(
             {"w_in": wu.astype(_ct(cfg)), "w_out": wd.astype(_ct(cfg))},
-            xc, scfg, mode="train",
+            xc, scfg, mode=_spiking_ffn_mode,
+            use_kernel=jax.default_backend() == "tpu",
         )
         return y.astype(x.dtype)
     if cfg.act == "swiglu":

@@ -1,2 +1,29 @@
-"""Serving substrate: prefill/decode steps live on the Model interface
-(repro.models.registry); the batched driver is repro.launch.serve."""
+"""Continuous-batching serving engine (see `engine.py` for the design)."""
+from .batching import (
+    PackedSpikeCache,
+    bucket_key,
+    cache_batch_size,
+    cache_concat,
+    cache_take,
+    pad_batch,
+)
+from .engine import Cohort, Engine
+from .metrics import EngineMetrics, RequestMetrics
+from .scheduler import AdmissionError, Request, RequestState, Scheduler
+
+__all__ = [
+    "AdmissionError",
+    "Cohort",
+    "Engine",
+    "EngineMetrics",
+    "PackedSpikeCache",
+    "Request",
+    "RequestMetrics",
+    "RequestState",
+    "Scheduler",
+    "bucket_key",
+    "cache_batch_size",
+    "cache_concat",
+    "cache_take",
+    "pad_batch",
+]

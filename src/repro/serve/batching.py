@@ -1,0 +1,198 @@
+"""Batch-composition machinery for the continuous-batching engine.
+
+Every model in the registry exposes its serving cache as a pytree plus a
+parallel `cache_axes()` tree of logical-axis tuples (the same trees the
+sharding layer consumes).  The engine never hard-codes a cache layout;
+instead the helpers here locate the ``"batch"`` axis of every leaf and
+concat / gather / pad along it:
+
+* transformer: ``k/v (layers, B, S, kv, dh)`` -> batch axis 1,
+  ``kv_pos (S,)`` / ``pos ()`` -> no batch axis (merge invariant: equal).
+* rwkv6: ``tm_prev/cm_prev/wkv (L, B, ...)`` -> batch axis 1.
+* zamba2 hybrid: nested ``attn`` KV ring inside conv/ssm state.
+
+Leaves without a batch axis are *position-like*: two cohorts may only be
+merged when those leaves are identical, which is exactly the "same sequence
+length" precondition for continuous batching with a shared scalar position.
+
+Also here: `PackedSpikeCache`, the engine-side store that carries SNN
+activations between engine steps as packed uint32 spike words (bit t =
+timestep t, LSB = t0) instead of unpacked ``(T, ...)`` float32 planes — the
+serving-side continuation of the paper's §IV-A compression argument.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _axes_leaves(axes):
+    return jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_axis_tree(cache, axes) -> list[int | None]:
+    """Per-leaf index of the ``"batch"`` axis (None when the leaf has no
+    batch dimension), in `jax.tree.leaves` order of ``cache``."""
+    cl = jax.tree.leaves(cache)
+    al = _axes_leaves(axes)
+    if len(cl) != len(al):
+        raise ValueError(
+            f"cache has {len(cl)} leaves but axes tree has {len(al)}"
+        )
+    out = []
+    for leaf, ax in zip(cl, al):
+        if len(ax) != leaf.ndim:
+            raise ValueError(f"axes {ax} rank != cache leaf shape {leaf.shape}")
+        out.append(ax.index("batch") if "batch" in ax else None)
+    return out
+
+
+def cache_batch_size(cache, axes) -> int:
+    """Batch size of a cache pytree (asserts all batched leaves agree)."""
+    sizes = {
+        leaf.shape[b]
+        for leaf, b in zip(jax.tree.leaves(cache), batch_axis_tree(cache, axes))
+        if b is not None
+    }
+    if len(sizes) != 1:
+        raise ValueError(f"inconsistent cache batch sizes {sizes}")
+    return sizes.pop()
+
+
+def cache_concat(caches: list, axes):
+    """Merge cohort caches along their batch axes.
+
+    Position-like leaves (no batch axis) must be identical across cohorts —
+    the caller guarantees this by only merging cohorts at the same sequence
+    position; we verify cheaply on the host.
+    """
+    if len(caches) == 1:
+        return caches[0]
+    baxes = batch_axis_tree(caches[0], axes)
+    flats = [jax.tree.leaves(c) for c in caches]
+    treedef = jax.tree.structure(caches[0])
+    out = []
+    for i, b in enumerate(baxes):
+        leaves = [f[i] for f in flats]
+        if b is None:
+            first = np.asarray(leaves[0])
+            for other in leaves[1:]:
+                if not np.array_equal(first, np.asarray(other)):
+                    raise ValueError(
+                        "refusing to merge cohorts with differing "
+                        f"position-like cache leaf (shape {first.shape})"
+                    )
+            out.append(leaves[0])
+        else:
+            out.append(jnp.concatenate(leaves, axis=b))
+    return jax.tree.unflatten(treedef, out)
+
+
+def cache_take(cache, axes, idx):
+    """Gather a subset of batch rows (``idx``: host ints) from a cache."""
+    idx = jnp.asarray(idx, jnp.int32)
+    baxes = batch_axis_tree(cache, axes)
+    leaves = [
+        leaf if b is None else jnp.take(leaf, idx, axis=b)
+        for leaf, b in zip(jax.tree.leaves(cache), baxes)
+    ]
+    return jax.tree.unflatten(jax.tree.structure(cache), leaves)
+
+
+def pad_batch(tokens: np.ndarray, align: int) -> tuple[np.ndarray, int]:
+    """Pad the *batch* dimension of a (B, S) prompt batch up to a multiple
+    of ``align`` with dummy rows (token 0).
+
+    Rows are independent in every registered model's prefill/decode (MoE
+    capacity routing excepted — the engine refuses batch padding for MoE),
+    so dummy rows never perturb real rows; their outputs are discarded.
+    Returns (padded tokens, n_dummy).
+    """
+    B = tokens.shape[0]
+    pad = (-B) % max(1, align)
+    if pad == 0:
+        return tokens, 0
+    dummy = np.zeros((pad, tokens.shape[1]), dtype=tokens.dtype)
+    return np.concatenate([tokens, dummy], axis=0), pad
+
+
+def bucket_key(prompt_len: int, align: int = 1) -> int:
+    """Bucket id for a prompt length.
+
+    ``align=1`` buckets by exact length (the engine's default: the models
+    have no pad-token masking, so only same-length prompts may share a
+    prefill batch without changing results).  Larger ``align`` rounds up —
+    an approximate throughput mode for workloads that tolerate pad tokens.
+    """
+    return -(-prompt_len // max(1, align)) * max(1, align)
+
+
+# ---------------------------------------------------------------------------
+# Packed-spike activation cache
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PackedSpikeCache:
+    """Carries per-slot SNN activations between engine steps as packed
+    uint32 spike words.
+
+    One row per active slot, ``(width,)`` uint32 each: bit t of word j is
+    neuron j's spike at timestep t.  Storing the packed word costs 32 bits
+    per neuron regardless of T, vs ``T * 32`` bits for the unpacked float32
+    planes the training path carries — the engine reports both so the
+    saving shows up in serve metrics.  Slot bookkeeping mirrors the KV
+    cache: rows concat on cohort merge and gather on retire.
+    """
+
+    T: int
+    width: int
+    words: np.ndarray = field(init=False)
+
+    def __post_init__(self):
+        self.words = np.zeros((0, self.width), np.uint32)
+
+    def __len__(self) -> int:
+        return self.words.shape[0]
+
+    def append(self, words) -> None:
+        w = np.asarray(words, np.uint32).reshape(-1, self.width)
+        self.words = np.concatenate([self.words, w], axis=0)
+
+    def update(self, words) -> None:
+        """Replace all slots' words with this step's (B, width) batch."""
+        w = np.asarray(words, np.uint32).reshape(-1, self.width)
+        if w.shape[0] != len(self):
+            raise ValueError(f"update of {w.shape[0]} rows into {len(self)} slots")
+        self.words = w
+
+    def merge(self, other: "PackedSpikeCache") -> None:
+        if (other.T, other.width) != (self.T, self.width):
+            raise ValueError("merging incompatible spike caches")
+        self.words = np.concatenate([self.words, other.words], axis=0)
+
+    def take(self, idx) -> None:
+        self.words = self.words[np.asarray(idx, np.int64)]
+
+    def spike_sparsity(self) -> float:
+        """Fraction of (neuron, timestep) positions with no spike."""
+        if self.words.size == 0:
+            return 1.0
+        fired = np.unpackbits(
+            self.words.view(np.uint8), bitorder="little"
+        ).reshape(self.words.shape[0], self.width, 32)[..., : self.T]
+        return float(1.0 - fired.mean())
+
+    def silent_fraction(self) -> float:
+        """Fraction of silent neurons (word == 0) — droppable entirely."""
+        if self.words.size == 0:
+            return 1.0
+        return float((self.words == 0).mean())
+
+    def nbytes_packed(self) -> int:
+        return int(self.words.nbytes)
+
+    def nbytes_unpacked_f32(self) -> int:
+        return int(self.words.shape[0] * self.width * self.T * 4)

@@ -1,0 +1,324 @@
+"""Continuous-batching serving engine over the registry's Model interface.
+
+One engine serves any registered arch (transformer / MoE / rwkv6 / zamba2 /
+spiking-FFN LM): it only touches `model.prefill`, `model.decode`,
+`model.init_cache` and `model.cache_axes`, and manipulates the cache pytree
+through `serve.batching` (per-leaf batch axes located via the logical-axes
+tree).
+
+Execution model — each `step()`:
+
+1. admit waiting requests: prefill groups (same prompt length, FIFO) run
+   as one batched prefill each and emit their first token (TTFT);
+2. cohorts at the same sequence position merge, so new prefills join
+   in-flight decode (continuous batching, preemption-free);
+3. every cohort advances one greedy decode step;
+4. finished requests retire, their cache rows are dropped, and the freed
+   slots admit more prefills on the next step.
+
+Greedy decode through the engine is token-identical to the single-shot
+loop this module replaced (`launch/serve.py`): same jit'd prefill/decode,
+same cache shapes, and rows of a batch are independent in every non-MoE
+arch (MoE capacity routing couples rows, so batch padding and cohort
+merging are disabled for MoE archs).
+
+For spiking-FFN archs, `spiking_packed=True` additionally (a) switches the
+in-model spiking FFN to the packed inference path (scoped to the engine's
+prefill/decode calls; training traces elsewhere in the process keep the
+differentiable float path), so SNN layers carry uint32 spike words (not
+unpacked (T, ...) float32 planes) through every engine step, and (b) keeps
+a `PackedSpikeCache` of each slot's direct-encoded current token between
+steps — spike-domain telemetry (sparsity, packed-vs-unpacked bytes) at the
+cost of one small jit'd encode per decode step; spike-stream pipelines
+consume the same packed format via `snn_layers.spiking_ffn_apply_packed`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lif import direct_encode
+from repro.core.packing import pack_spikes
+
+from .batching import (
+    PackedSpikeCache,
+    cache_concat,
+    cache_take,
+    pad_batch,
+)
+from .metrics import EngineMetrics, RequestMetrics
+from .scheduler import Request, RequestState, Scheduler
+
+
+@dataclass
+class Cohort:
+    """A set of in-flight requests sharing one batched cache.
+
+    Cache rows: the first `len(slots)` batch rows are live requests (in
+    slot order); `n_dummy` alignment rows follow and are dropped at the
+    first membership change.
+    """
+
+    slots: list[RequestState]
+    cache: object
+    length: int                 # tokens written per row (prompt + generated)
+    n_dummy: int = 0
+    spikes: PackedSpikeCache | None = None
+
+
+class Engine:
+    def __init__(
+        self,
+        model,
+        params,
+        *,
+        max_len: int,
+        max_slots: int = 8,
+        max_queue: int = 256,
+        batch_align: int = 1,
+        bucket_align: int = 1,
+        eos_id: int | None = None,
+        merge_cohorts: bool = True,
+        spiking_packed: bool = False,
+    ):
+        cfg = model.cfg
+        if not cfg.supports_decode or cfg.encoder_only:
+            raise ValueError(f"{cfg.name} has no decode path; cannot serve")
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.row_independent = cfg.n_experts == 0
+        self.batch_align = batch_align if self.row_independent else 1
+        self.merge_cohorts = merge_cohorts and self.row_independent
+        self.scheduler = Scheduler(
+            max_slots=max_slots, max_queue=max_queue, max_len=max_len,
+            bucket_align=bucket_align,
+        )
+        self.metrics = EngineMetrics()
+        self.cohorts: list[Cohort] = []
+        self.results: dict[int, RequestState] = {}
+        self._axes = model.cache_axes()
+        self.spiking_packed = bool(spiking_packed and cfg.spiking_ffn)
+        # cache donation: each call consumes its cache and returns the
+        # successor, so the buffer can be updated in place on accelerators
+        self._prefill = self._spiking_scope(
+            jax.jit(model.prefill, donate_argnums=(2,))
+        )
+        self._decode = self._spiking_scope(
+            jax.jit(model.decode, donate_argnums=(2,))
+        )
+        self._last_spike_sparsity = float("nan")
+        if self.spiking_packed:
+            self._encode_pack = jax.jit(
+                lambda p, toks: pack_spikes(
+                    direct_encode(
+                        p["embed"][toks].astype(jnp.float32), cfg.spiking_T
+                    )
+                )
+            )
+
+    def _spiking_scope(self, fn):
+        """Run `fn` with the spiking FFN in packed-inference mode, restoring
+        the previous (training) mode afterwards — the mode is read at trace
+        time, so scoping it to the engine's calls keeps a later train-step
+        trace in the same process on the differentiable float path."""
+        if not self.spiking_packed:
+            return fn
+
+        def scoped(*args):
+            from repro.models import layers as model_layers
+
+            prev = model_layers.get_spiking_ffn_mode()
+            model_layers.set_spiking_ffn_mode("infer")
+            try:
+                return fn(*args)
+            finally:
+                model_layers.set_spiking_ffn_mode(prev)
+
+        return scoped
+
+    # -- request API --------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        """Admit one request (raises AdmissionError when rejected)."""
+        return self.scheduler.submit(prompt, max_new_tokens)
+
+    @property
+    def n_active(self) -> int:
+        return sum(len(c.slots) for c in self.cohorts)
+
+    @property
+    def idle(self) -> bool:
+        return not self.cohorts and self.scheduler.queue_depth == 0
+
+    # -- engine steps -------------------------------------------------------
+    def step(self) -> dict:
+        """One engine iteration: admit+prefill, merge, decode, retire."""
+        t0 = time.perf_counter()
+        self.metrics.queue_depth_samples.append(self.scheduler.queue_depth)
+        for group in self.scheduler.schedule():
+            self._run_prefill(group)
+        self._merge()
+        self._retire()  # requests finished at prefill never enter decode
+        for cohort in self.cohorts:
+            self._run_decode(cohort)
+        self._retire()
+        self.metrics.wall_s += time.perf_counter() - t0
+        return {
+            "active": self.n_active,
+            "queued": self.scheduler.queue_depth,
+            "cohorts": len(self.cohorts),
+        }
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Drive steps until drained; returns {rid: generated tokens}."""
+        while not self.idle:
+            self.step()
+        return {
+            rid: np.asarray(st.generated, np.int32)
+            for rid, st in sorted(self.results.items())
+        }
+
+    def generate_batch(
+        self, prompts, max_new_tokens: int
+    ) -> list[np.ndarray]:
+        """Convenience: submit prompts, drain, return outputs in order."""
+        reqs = [self.submit(p, max_new_tokens) for p in prompts]
+        out = self.run()
+        return [out[r.rid] for r in reqs]
+
+    # -- internals ----------------------------------------------------------
+    def _run_prefill(self, group: list[Request]) -> None:
+        from .batching import bucket_key
+
+        # bucket_align > 1 (approximate mode): right-pad ragged prompts to
+        # the shared bucket length with token 0 — pad tokens are attended,
+        # so outputs are approximate; exact mode (align=1) never pads
+        P = bucket_key(
+            max(r.prompt_len for r in group), self.scheduler.bucket_align
+        )
+        tokens = np.zeros((len(group), P), np.int32)
+        for i, r in enumerate(group):
+            tokens[i, : r.prompt_len] = r.prompt
+        tokens, n_dummy = pad_batch(tokens, self.batch_align)
+        self.metrics.n_padded_rows += n_dummy
+        cache = self.model.init_cache(tokens.shape[0], self.max_len)
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(tokens)}, cache
+        )
+        self.metrics.n_prefill_batches += 1
+        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        slots = [RequestState(r) for r in group]
+        for st, tok in zip(slots, first):
+            st.emit(int(tok), self.eos_id)
+        cohort = Cohort(slots=slots, cache=cache, length=P, n_dummy=n_dummy)
+        if self.spiking_packed:
+            cohort.spikes = PackedSpikeCache(
+                self.cfg.spiking_T, self.cfg.d_model
+            )
+            cohort.spikes.append(self._slot_spikes(cohort))
+        self.cohorts.append(cohort)
+
+    def _slot_spikes(self, cohort: Cohort) -> np.ndarray:
+        toks = jnp.asarray(
+            [st.generated[-1] for st in cohort.slots], jnp.int32
+        )
+        return np.asarray(self._encode_pack(self.params, toks))
+
+    def _merge(self) -> None:
+        if not self.merge_cohorts or len(self.cohorts) < 2:
+            return
+        by_len: dict[int, list[Cohort]] = {}
+        for c in self.cohorts:
+            by_len.setdefault(c.length, []).append(c)
+        merged: list[Cohort] = []
+        for length, group in by_len.items():
+            if len(group) == 1:
+                merged.append(group[0])
+                continue
+            # drop alignment rows so live rows stay a prefix post-merge
+            caches = [self._live_cache(c) for c in group]
+            cache = cache_concat(caches, self._axes)
+            slots = [s for c in group for s in c.slots]
+            cohort = Cohort(slots=slots, cache=cache, length=length)
+            if self.spiking_packed:
+                cohort.spikes = group[0].spikes
+                for c in group[1:]:
+                    cohort.spikes.merge(c.spikes)
+            merged.append(cohort)
+            self.metrics.n_merges += len(group) - 1
+        self.cohorts = merged
+
+    def _live_cache(self, cohort: Cohort):
+        if cohort.n_dummy == 0:
+            return cohort.cache
+        idx = list(range(len(cohort.slots)))
+        cohort.n_dummy = 0
+        return cache_take(cohort.cache, self._axes, idx)
+
+    def _run_decode(self, cohort: Cohort) -> None:
+        last = [st.generated[-1] for st in cohort.slots]
+        last += [0] * cohort.n_dummy
+        tokens = jnp.asarray(last, jnp.int32)[:, None]
+        logits, cohort.cache = self._decode(
+            self.params, tokens, cohort.cache
+        )
+        self.metrics.n_decode_batches += 1
+        self.metrics.n_decode_rows += len(cohort.slots)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for st, tok in zip(cohort.slots, nxt):
+            st.emit(int(tok), self.eos_id)
+        cohort.length += 1
+        if self.spiking_packed:
+            cohort.spikes.update(self._slot_spikes(cohort))
+            self._last_spike_sparsity = cohort.spikes.spike_sparsity()
+
+    def _retire(self) -> None:
+        kept: list[Cohort] = []
+        for cohort in self.cohorts:
+            done = [st for st in cohort.slots if st.done]
+            if not done:
+                kept.append(cohort)
+                continue
+            for st in done:
+                self._finish(st)
+            self.scheduler.release(len(done))
+            alive_idx = [i for i, st in enumerate(cohort.slots) if not st.done]
+            if not alive_idx:
+                continue
+            cohort.cache = cache_take(cohort.cache, self._axes, alive_idx)
+            cohort.slots = [cohort.slots[i] for i in alive_idx]
+            cohort.n_dummy = 0
+            if self.spiking_packed:
+                cohort.spikes.take(alive_idx)
+            kept.append(cohort)
+        self.cohorts = kept
+
+    def _finish(self, st: RequestState) -> None:
+        self.results[st.rid] = st
+        req = st.request
+        self.metrics.record(RequestMetrics(
+            rid=st.rid,
+            prompt_len=req.prompt_len,
+            n_generated=len(st.generated),
+            ttft_s=st.first_token_time - req.submit_time,
+            latency_s=st.finish_time - req.submit_time,
+            finish_reason=st.finish_reason,
+        ))
+
+    # -- reporting ----------------------------------------------------------
+    def summary(self) -> dict:
+        s = self.metrics.summary()
+        s["rejected"] = self.scheduler.n_rejected
+        if self.spiking_packed:
+            s["spike_sparsity"] = self._last_spike_sparsity
+            s["spike_bytes_packed_per_slot"] = self.cfg.d_model * 4
+            s["spike_bytes_unpacked_f32_per_slot"] = (
+                self.cfg.d_model * self.cfg.spiking_T * 4
+            )
+        return s

@@ -1,0 +1,167 @@
+"""Request lifecycle + continuous-batching scheduler.
+
+Policy (preemption-free continuous batching):
+
+* Admission control: a bounded waiting queue; `submit` rejects when the
+  queue is full or the request can never fit (`prompt + max_new > max_len`).
+* Prefill scheduling: requests wait in FIFO order, grouped into prefill
+  batches by prompt-length bucket (exact length by default — the models
+  attend to every token, so only same-length prompts share a batch without
+  changing results).  The bucket of the *oldest* waiting request is always
+  served first, so long-prompt requests cannot be starved by a stream of
+  short ones.
+* Decode merging: cohorts (batches sharing one cache) at the same sequence
+  position are merged, so new prefills join in-flight decode instead of
+  running in their own lane forever.  Running requests are never evicted.
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .batching import bucket_key
+
+
+@dataclass
+class Request:
+    """One generation request (prompt in, greedy tokens out)."""
+
+    rid: int
+    prompt: np.ndarray  # (prompt_len,) int32
+    max_new_tokens: int
+    submit_time: float = field(default_factory=time.perf_counter)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+
+@dataclass
+class RequestState:
+    """Engine-side mutable state for an admitted request."""
+
+    request: Request
+    generated: list[int] = field(default_factory=list)
+    first_token_time: float | None = None
+    finish_time: float | None = None
+    finish_reason: str | None = None  # "length" | "eos"
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def done(self) -> bool:
+        return self.finish_reason is not None
+
+    def emit(self, token: int, eos_id: int | None) -> None:
+        if self.done:  # a finished slot may still ride in a cohort briefly
+            return
+        now = time.perf_counter()
+        if self.first_token_time is None:
+            self.first_token_time = now
+        self.generated.append(token)
+        if eos_id is not None and token == eos_id:
+            self.finish_reason, self.finish_time = "eos", now
+        elif len(self.generated) >= self.request.max_new_tokens:
+            self.finish_reason, self.finish_time = "length", now
+
+
+class AdmissionError(RuntimeError):
+    """Request rejected at submit time (queue full / cannot ever fit)."""
+
+
+class Scheduler:
+    """FIFO waiting queue with bucketed prefill-batch selection."""
+
+    def __init__(
+        self,
+        *,
+        max_slots: int,
+        max_queue: int,
+        max_len: int,
+        bucket_align: int = 1,
+    ):
+        if max_slots < 1:
+            raise ValueError("max_slots must be >= 1")
+        self.max_slots = max_slots
+        self.max_queue = max_queue
+        self.max_len = max_len
+        self.bucket_align = bucket_align
+        self.waiting: deque[Request] = deque()
+        self.active_slots = 0
+        self._ids = itertools.count()
+        self.n_rejected = 0
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] < 1 or max_new_tokens < 1:
+            raise AdmissionError("empty prompt or non-positive max_new_tokens")
+        need = bucket_key(prompt.shape[0], self.bucket_align) + max_new_tokens
+        if need > self.max_len:
+            self.n_rejected += 1
+            raise AdmissionError(
+                f"request needs {need} cache slots > engine max_len {self.max_len}"
+            )
+        if len(self.waiting) >= self.max_queue:
+            self.n_rejected += 1
+            raise AdmissionError(f"queue full ({self.max_queue} waiting)")
+        req = Request(next(self._ids), prompt, max_new_tokens)
+        self.waiting.append(req)
+        return req
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def free_slots(self) -> int:
+        return self.max_slots - self.active_slots
+
+    # -- prefill selection --------------------------------------------------
+    def next_prefill_group(self) -> list[Request]:
+        """Pop the next prefill batch: same-bucket requests, FIFO order,
+        led by the oldest waiting request, capped by free slots.
+
+        Returns [] when nothing can run (empty queue or no free slots).
+        Caller must report slot release via `release()` when requests
+        finish.
+        """
+        if not self.waiting or self.free_slots <= 0:
+            return []
+        lead = self.waiting[0]
+        key = bucket_key(lead.prompt_len, self.bucket_align)
+        group: list[Request] = []
+        kept: deque[Request] = deque()
+        budget = self.free_slots
+        for req in self.waiting:
+            if (
+                len(group) < budget
+                and bucket_key(req.prompt_len, self.bucket_align) == key
+            ):
+                group.append(req)
+            else:
+                kept.append(req)
+        self.waiting = kept
+        self.active_slots += len(group)
+        return group
+
+    def schedule(self) -> list[list[Request]]:
+        """All prefill groups runnable this step (distinct buckets until
+        slots run out)."""
+        groups = []
+        while True:
+            g = self.next_prefill_group()
+            if not g:
+                return groups
+            groups.append(g)
+
+    def release(self, n: int = 1) -> None:
+        self.active_slots -= n
+        if self.active_slots < 0:
+            raise RuntimeError("released more slots than were active")

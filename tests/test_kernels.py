@@ -4,7 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # CI installs hypothesis (pyproject [dev]); property tests skip without
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core.packing import pack_spikes
 from repro.kernels import ops, ref
@@ -81,37 +87,76 @@ def test_bf16_weights():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-2, atol=1e-2)
 
 
-@settings(max_examples=15, deadline=None)
-@given(
-    T=st.integers(1, 8),
-    M=st.integers(1, 40),
-    K=st.integers(1, 80),
-    N=st.integers(1, 48),
-    seed=st.integers(0, 2**16),
-)
-def test_property_kernel_vs_oracle(T, M, K, N, seed):
-    """Property: for ANY shape/T/sparsity, kernel == oracle == einsum of
-    unpacked planes."""
-    rng = np.random.default_rng(seed)
-    packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
-                    w_density=rng.uniform(0.01, 0.5))
-    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-    want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        T=st.integers(1, 8),
+        M=st.integers(1, 40),
+        K=st.integers(1, 80),
+        N=st.integers(1, 48),
+        seed=st.integers(0, 2**16),
+    )
+    def test_property_kernel_vs_oracle(T, M, K, N, seed):
+        """Property: for ANY shape/T/sparsity, kernel == oracle == einsum of
+        unpacked planes."""
+        rng = np.random.default_rng(seed)
+        packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
+                        w_density=rng.uniform(0.01, 0.5))
+        out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+        want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), T=st.integers(1, 8))
+    def test_property_silent_neurons_contribute_nothing(seed, T):
+        """Property (paper invariant): zeroing silent neurons' columns of W
+        never changes the output — silent neurons are dead weight the format
+        drops for free."""
+        rng = np.random.default_rng(seed)
+        M, K, N = 8, 32, 16
+        packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.3)
+        silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
+        w2 = w.copy()
+        w2[silent_cols] = 0
+        o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+        o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e '.[dev]')")
+    def test_property_kernel_vs_oracle():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed (pip install -e '.[dev]')")
+    def test_property_silent_neurons_contribute_nothing():
+        pass
 
 
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 2**16), T=st.integers(1, 8))
-def test_property_silent_neurons_contribute_nothing(seed, T):
-    """Property (paper invariant): zeroing silent neurons' columns of W
-    never changes the output — silent neurons are dead weight the format
-    drops for free."""
-    rng = np.random.default_rng(seed)
-    M, K, N = 8, 32, 16
-    packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.3)
-    silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
-    w2 = w.copy()
-    w2[silent_cols] = 0
-    o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-    o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
-    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+def test_ftp_spmm_batched_matches_per_sample():
+    """Batched serving entry: (B, M, K) folded into rows == per-sample."""
+    rng = np.random.default_rng(11)
+    T, B, M, K, N = 4, 3, 16, 64, 32
+    packed = np.stack([_mk(rng, T, M, K, N)[0] for _ in range(B)])
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    out = ops.ftp_spmm_batched(jnp.asarray(packed), jnp.asarray(w), T)
+    assert out.shape == (T, B, M, N)
+    for i in range(B):
+        want = ref.ftp_spmm_ref(jnp.asarray(packed[i]), jnp.asarray(w), T)
+        np.testing.assert_allclose(
+            np.asarray(out[:, i]), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_ftp_spmm_fused_lif_batched_matches_per_sample():
+    rng = np.random.default_rng(12)
+    T, B, M, K, N = 4, 3, 16, 64, 32
+    packed = np.stack([_mk(rng, T, M, K, N, w_density=0.2)[0] for _ in range(B)])
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    c, u = ops.ftp_spmm_fused_lif_batched(jnp.asarray(packed), jnp.asarray(w), T)
+    assert c.shape == (B, M, N) and u.shape == (B, M, N)
+    for i in range(B):
+        cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed[i]), jnp.asarray(w), T)
+        np.testing.assert_array_equal(np.asarray(c[i]), np.asarray(cw))
+        np.testing.assert_allclose(np.asarray(u[i]), np.asarray(uw), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,321 @@
+"""Serving-engine tests: scheduler policy units, cache batch ops, and
+end-to-end token-identity of continuous-batched greedy decode against the
+single-shot reference loop (`launch.serve.generate`) for multiple archs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.serve import generate
+from repro.models.registry import build_model
+from repro.serve import (
+    AdmissionError,
+    Engine,
+    PackedSpikeCache,
+    Scheduler,
+    bucket_key,
+    cache_batch_size,
+    cache_concat,
+    cache_take,
+    pad_batch,
+)
+
+_MODEL_CACHE: dict = {}
+
+
+def _model(arch, **overrides):
+    key = (arch, tuple(sorted(overrides.items())))
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config(arch))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# scheduler units
+# ---------------------------------------------------------------------------
+
+def test_bucketing_groups_same_length_fifo():
+    s = Scheduler(max_slots=8, max_queue=32, max_len=64)
+    for L in (8, 8, 12, 8, 12):
+        s.submit(np.zeros(L, np.int32), 4)
+    g1 = s.next_prefill_group()
+    assert [r.prompt_len for r in g1] == [8, 8, 8]
+    assert [r.rid for r in g1] == [0, 1, 3]  # FIFO within the bucket
+    g2 = s.next_prefill_group()
+    assert [r.rid for r in g2] == [2, 4]
+    assert s.next_prefill_group() == []
+
+
+def test_oldest_bucket_never_starved():
+    """The bucket containing the oldest request runs first even when a
+    later bucket has more waiting requests."""
+    s = Scheduler(max_slots=2, max_queue=32, max_len=64)
+    s.submit(np.zeros(12, np.int32), 4)          # oldest, lonely bucket
+    for _ in range(5):
+        s.submit(np.zeros(8, np.int32), 4)
+    g = s.next_prefill_group()
+    assert [r.prompt_len for r in g] == [12]
+
+
+def test_slot_cap_and_release():
+    s = Scheduler(max_slots=2, max_queue=32, max_len=64)
+    for _ in range(5):
+        s.submit(np.zeros(8, np.int32), 4)
+    assert len(s.next_prefill_group()) == 2
+    assert s.next_prefill_group() == []          # slots exhausted
+    s.release(1)
+    assert len(s.next_prefill_group()) == 1
+    assert s.queue_depth == 2
+
+
+def test_admission_control():
+    s = Scheduler(max_slots=2, max_queue=2, max_len=16)
+    with pytest.raises(AdmissionError):          # can never fit
+        s.submit(np.zeros(10, np.int32), 8)
+    s.submit(np.zeros(4, np.int32), 4)
+    s.submit(np.zeros(4, np.int32), 4)
+    with pytest.raises(AdmissionError):          # queue full
+        s.submit(np.zeros(4, np.int32), 4)
+    assert s.n_rejected == 2
+
+
+def test_bucket_key_alignment():
+    assert bucket_key(7) == 7                    # exact by default
+    assert bucket_key(7, align=8) == 8
+    assert bucket_key(8, align=8) == 8
+    assert bucket_key(9, align=8) == 16
+
+
+# ---------------------------------------------------------------------------
+# cache batch ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "rwkv6_1_6b", "zamba2_7b"])
+def test_cache_concat_take_roundtrip(arch):
+    cfg, model, params = _model(arch)
+    axes = model.cache_axes()
+    a = model.init_cache(2, 16)
+    b = model.init_cache(3, 16)
+    merged = cache_concat([a, b], axes)
+    assert cache_batch_size(merged, axes) == 5
+    back = cache_take(merged, axes, [0, 1])
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_cache_concat_refuses_mismatched_positions():
+    cfg, model, params = _model("llama3_2_1b")
+    axes = model.cache_axes()
+    a = model.init_cache(2, 16)
+    b = model.init_cache(2, 16)
+    b = dict(b, pos=b["pos"] + 3)  # cohorts at different sequence positions
+    with pytest.raises(ValueError):
+        cache_concat([a, b], axes)
+
+
+def test_pad_batch():
+    t = np.arange(12, dtype=np.int32).reshape(3, 4)
+    padded, n = pad_batch(t, 4)
+    assert padded.shape == (4, 4) and n == 1
+    np.testing.assert_array_equal(padded[:3], t)
+    same, n0 = pad_batch(t, 3)
+    assert n0 == 0 and same is t
+
+
+def test_bucket_align_approximate_mode_serves_ragged_prompts():
+    """bucket_align > 1 pads ragged prompts to one bucket length (token 0,
+    approximate outputs) instead of crashing on np.stack; every request
+    still gets its full token budget."""
+    cfg, model, params = _model("llama3_2_1b")
+    engine = Engine(model, params, max_len=32, max_slots=4, bucket_align=8)
+    prompts = _prompts(cfg, [5, 7, 8], seed=6)  # all bucket to 8
+    outs = engine.generate_batch(prompts, 4)
+    assert [len(o) for o in outs] == [4, 4, 4]
+    assert engine.summary()["prefill_batches"] == 1  # one shared bucket
+
+
+def test_spike_stream_pipeline_packed_api():
+    """spiking_ffn_apply_packed chains layers purely in the spike domain:
+    uint32 words in, uint32 words out, matching mode='infer' exactly —
+    the PackedSpikeCache handoff format between engine steps."""
+    from repro.core.lif import direct_encode
+    from repro.core.packing import pack_spikes
+    from repro.core.snn_layers import (
+        SpikingConfig,
+        spiking_ffn_apply,
+        spiking_ffn_apply_packed,
+    )
+
+    scfg = SpikingConfig(T=4, weight_density=0.5)
+    k = jax.random.split(jax.random.PRNGKey(7), 5)
+    layer1 = {"w_in": jax.random.normal(k[0], (32, 64)) / 6,
+              "w_out": jax.random.normal(k[1], (64, 32)) / 8}
+    layer2 = {"w_in": jax.random.normal(k[2], (64, 64)) / 8,
+              "w_out": jax.random.normal(k[3], (64, 64)) / 8}
+    x = jax.random.normal(k[4], (5, 32))
+
+    y1, hidden = spiking_ffn_apply_packed(layer1, pack_spikes(direct_encode(x, 4)), scfg)
+    assert hidden.dtype == jnp.uint32 and hidden.shape == (5, 64)
+    want = spiking_ffn_apply(layer1, x, scfg, mode="infer")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(want), rtol=1e-6)
+
+    # stage the hidden words through a PackedSpikeCache (the engine-step
+    # boundary) and feed the next layer without ever unpacking to f32
+    cache = PackedSpikeCache(T=4, width=64)
+    cache.append(np.asarray(hidden))
+    y2, _ = spiking_ffn_apply_packed(
+        layer2, jnp.asarray(cache.words), scfg
+    )
+    assert y2.shape == (5, 64)
+    assert np.isfinite(np.asarray(y2)).all()
+
+
+def test_packed_spike_cache_slot_ops():
+    c = PackedSpikeCache(T=4, width=8)
+    c.append(np.full((2, 8), 0b0101, np.uint32))
+    d = PackedSpikeCache(T=4, width=8)
+    d.append(np.zeros((1, 8), np.uint32))
+    c.merge(d)
+    assert len(c) == 3
+    assert c.silent_fraction() == pytest.approx(1 / 3)
+    # rows 0-1 fire 2 of 4 timesteps; row 2 never fires
+    assert c.spike_sparsity() == pytest.approx(1 - (2 * 8 * 2) / (3 * 8 * 4))
+    c.take([2])
+    assert len(c) == 1 and c.silent_fraction() == 1.0
+    assert c.nbytes_unpacked_f32() == 4 * c.nbytes_packed()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: engine == reference single-shot loop
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "rwkv6_1_6b"])
+def test_engine_matches_reference_loop(arch):
+    """Continuous-batched greedy decode must be token-identical to the
+    pre-engine `launch/serve.py` loop (same batch, same cache shapes)."""
+    cfg, model, params = _model(arch)
+    B, P, G = 4, 16, 8
+    prompts = _prompts(cfg, [P] * B, seed=0)
+    cache = model.init_cache(B, P + G)
+    want = np.asarray(
+        generate(model, params, jnp.asarray(np.stack(prompts)), cache, G)
+    )
+    engine = Engine(model, params, max_len=P + G, max_slots=B)
+    got = engine.generate_batch(prompts, G)
+    for i in range(B):
+        np.testing.assert_array_equal(want[i], got[i])
+    s = engine.summary()
+    assert s["n_requests"] == B and s["total_tokens"] == B * G
+    assert s["mean_decode_batch"] == B  # one cohort, fully batched
+
+
+def test_engine_continuous_batching_matches_isolated_runs():
+    """Staggered arrivals, mixed prompt lengths, limited slots, batch
+    padding, cohort merging — every request's tokens still equal a solo
+    (batch-1) reference run."""
+    cfg, model, params = _model("llama3_2_1b")
+    max_len = 48
+    lens = [8, 8, 12, 8, 12, 8, 16]
+    gens = [6, 6, 5, 4, 5, 6, 8]
+    arrivals = [0, 0, 0, 1, 2, 3, 4]
+    prompts = _prompts(cfg, lens, seed=1)
+    refs = []
+    for p, g in zip(prompts, gens):
+        cache = model.init_cache(1, max_len)
+        refs.append(
+            np.asarray(generate(model, params, jnp.asarray(p)[None], cache, g))[0]
+        )
+
+    engine = Engine(model, params, max_len=max_len, max_slots=4, batch_align=2)
+    reqs, i, step = [], 0, 0
+    while not (engine.idle and i == len(prompts)):
+        while i < len(prompts) and arrivals[i] <= step:
+            reqs.append(engine.submit(prompts[i], gens[i]))
+            i += 1
+        engine.step()
+        step += 1
+    for j, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            refs[j], np.asarray(engine.results[r.rid].generated, np.int32)
+        )
+    s = engine.summary()
+    assert s["n_requests"] == len(prompts)
+    assert s["cohort_merges"] >= 1      # prefills joined in-flight decode
+    assert s["padded_rows"] >= 1        # batch alignment exercised
+    assert s["max_queue_depth"] >= 1    # slots were contended
+
+
+def test_engine_spiking_packed_path_token_identical():
+    """Packed uint32 FFN inference (spiking_packed) emits the same tokens
+    as the float training path, and reports spike-cache metrics."""
+    from repro.models import layers as model_layers
+
+    cfg, model, params = _model(
+        "llama3_2_1b", spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=0.5,
+    )
+    prompts = _prompts(cfg, [12, 12, 12], seed=2)
+    try:
+        ref = Engine(model, params, max_len=24, max_slots=4).generate_batch(
+            prompts, 6
+        )
+        engine = Engine(
+            model, params, max_len=24, max_slots=4, spiking_packed=True
+        )
+        got = engine.generate_batch(prompts, 6)
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    s = engine.summary()
+    assert s["spike_bytes_unpacked_f32_per_slot"] == \
+        cfg.spiking_T * s["spike_bytes_packed_per_slot"]
+    assert 0.0 <= s["spike_sparsity"] <= 1.0
+
+
+def test_engine_rejects_encoder_only():
+    cfg, model, params = _model("llama3_2_1b")
+    bad = dataclasses.replace(cfg, supports_decode=False)
+    with pytest.raises(ValueError):
+        Engine(
+            dataclasses.replace(model, cfg=bad), params, max_len=8
+        )
+
+
+def test_engine_max_new_one_never_decodes():
+    """A request satisfied at prefill must emit exactly one token and
+    never enter a decode batch (regression: finished-at-prefill slots
+    used to ride through one decode and over-emit)."""
+    cfg, model, params = _model("llama3_2_1b")
+    prompts = _prompts(cfg, [8, 8, 8], seed=4)
+    engine = Engine(model, params, max_len=16, max_slots=4)
+    outs = engine.generate_batch(prompts, 1)
+    assert all(len(o) == 1 for o in outs)
+    s = engine.summary()
+    assert s["total_tokens"] == 3 and s["decode_batches"] == 0
+
+
+def test_engine_eos_stops_early():
+    cfg, model, params = _model("llama3_2_1b")
+    (p,) = _prompts(cfg, [8], seed=3)
+    cache = model.init_cache(1, 40)
+    ref = np.asarray(generate(model, params, jnp.asarray(p)[None], cache, 32))[0]
+    eos = int(ref[3])  # force an EOS hit mid-stream
+    engine = Engine(model, params, max_len=40, max_slots=1, eos_id=eos)
+    (out,) = engine.generate_batch([p], 32)
+    assert len(out) == 4 and out[-1] == eos
+    assert engine.metrics.completed[0].finish_reason == "eos"
