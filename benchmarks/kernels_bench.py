@@ -1,10 +1,24 @@
 """Kernel-level benchmarks: FTP vs timestep-sequential schedules (the
-dataflow the whole paper is about), packed-vs-dense traffic, and the Pallas
-kernel's analytic roofline placement on the v5e target.
+dataflow the whole paper is about), packed-vs-dense traffic, the Pallas
+kernel's analytic roofline placement on the v5e target, and the dual-sparse
+plan path (load-time weight join + device-side spike join) vs the
+dense-weight kernel.
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench            # full run,
+        # writes BENCH_kernels.json (tracked across PRs)
+    PYTHONPATH=src python -m benchmarks.kernels_bench --smoke    # CI: small
+        # shapes, parity-checked; non-zero exit on any parity error
 
 Wall-times on this CPU container are schedule-comparison signals, not TPU
 numbers; the derived column carries the analytic (target-hardware) terms.
+The dual-sparse row uses BLOCK-structured LTH pruning (whole MXU tiles
+zeroed, `prune_by_magnitude(block=...)`) at paper-like density — the form of
+weight sparsity the block-level inner join can actually skip.
 """
+import argparse
+import json
+import os
+import sys
 import time
 
 import jax
@@ -12,10 +26,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ftp_spmspm, pack_spikes, sequential_spmspm
-from repro.kernels import ops
+from repro.core.snn_layers import prune_by_magnitude
+from repro.kernels import ops, ref
+from repro.kernels.join_plan import build_weight_plan
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
+
+OUT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_kernels.json",
+)
 
 
 def _time(fn, *args, reps=3):
@@ -24,6 +45,70 @@ def _time(fn, *args, reps=3):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _mk_dual_sparse_problem(T, M, K, N, w_density, spike_density, seed=0):
+    """Packed spikes + block-structured LTH-pruned weights + load-time plan."""
+    rng = np.random.default_rng(seed)
+    spikes = (rng.random((T, M, K)) < spike_density).astype(np.float32)
+    packed = np.asarray(pack_spikes(jnp.asarray(spikes)))
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    bk, bn = min(128, K), min(128, N)
+    w = np.asarray(prune_by_magnitude(jnp.asarray(w), w_density, block=(bk, bn)))
+    plan = build_weight_plan(w, bk=bk, bn=bn)
+    return packed, w, plan
+
+
+def dual_sparse_bench(smoke: bool = False) -> dict:
+    """Dual-sparse (plan path) vs dense-weight fused-LIF kernel, parity
+    checked against the jnp oracle.  Returns the BENCH_kernels.json body."""
+    T = 4
+    M, K, N = (64, 512, 256) if smoke else (256, 2304, 512)  # V-L8-shaped
+    w_density = 0.03  # paper LTH keeps 1.8-3.2 %
+    packed, w, plan = _mk_dual_sparse_problem(T, M, K, N, w_density, 0.12)
+    a = jnp.asarray(packed)
+    wj = jnp.asarray(w)
+
+    f_dense = lambda x: ops.ftp_spmm_fused_lif(x, wj, T)[0]
+    f_dual = lambda x: ops.ftp_spmm_bsr(x, plan, T, n_out=N, fuse_lif=True)[0]
+
+    # parity first (and always): the bench is only meaningful if the skip
+    # path is exact
+    c_dense, c_dual = np.asarray(f_dense(a)), np.asarray(f_dual(a))
+    c_ref = np.asarray(ref.ftp_spmm_fused_lif_ref(a, wj, T)[0])
+    parity = {
+        "dense_vs_oracle_exact": bool((c_dense == c_ref).all()),
+        "dual_vs_oracle_exact": bool((c_dual == c_ref).all()),
+    }
+
+    t_dense = _time(f_dense, a, reps=2)
+    t_dual = _time(f_dual, a, reps=2)
+
+    # no-retrace check rides along: a second activity pattern must hit the
+    # jit cache
+    rng = np.random.default_rng(1)
+    a2 = jnp.asarray((rng.random((M, K)) < 0.05).astype(np.uint32))
+    before = ops.BSR_TRACE_COUNT
+    jax.block_until_ready(f_dual(a2))
+    parity["no_retrace_on_new_activity"] = ops.BSR_TRACE_COUNT == before
+
+    nkb, nnb = plan.nkb, plan.nnb
+    return {
+        "backend": jax.default_backend(),
+        "smoke": smoke,
+        "shape": {"T": T, "M": M, "K": K, "N": N},
+        "weight_density": w_density,
+        "block_density": plan.block_density(),
+        "join_width_jmax": plan.jmax,
+        "dense_k_blocks": nkb,
+        "grid_ratio_dense_over_dual": nkb / max(1, plan.jmax),
+        "dense_us": t_dense,
+        "dual_sparse_us": t_dual,
+        "dual_sparse_speedup": t_dense / t_dual,
+        "parity": parity,
+        "note": "wall-times are XLA:CPU interpret-mode schedule signals; "
+                "block-structured LTH pruning (MXU-tile granularity)",
+    }
 
 
 def rows():
@@ -68,4 +153,43 @@ def rows():
     out.append(("kernels/fused_lif_output_saving", 0.0,
                 f"unfused_B={out_unfused:.2e} fused_B={out_fused:.2e} "
                 f"saving={out_unfused/out_fused:.2f}x"))
+
+    # dual-sparse plan path vs dense kernel (small shapes to keep the
+    # harness fast; the full sweep is `python -m benchmarks.kernels_bench`)
+    d = dual_sparse_bench(smoke=True)
+    out.append(("kernels/dual_sparse_vs_dense", d["dual_sparse_us"],
+                f"dense_us={d['dense_us']:.0f} "
+                f"speedup={d['dual_sparse_speedup']:.2f}x "
+                f"jmax={d['join_width_jmax']} vs nk={d['dense_k_blocks']} "
+                f"parity_ok={all(d['parity'].values())} (XLA:CPU)"))
     return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small shapes + parity gate (CI); skips the JSON "
+                         "write unless --write is given")
+    ap.add_argument("--write", action="store_true",
+                    help="write BENCH_kernels.json even in --smoke mode")
+    ap.add_argument("--no-write", action="store_true")
+    args = ap.parse_args(argv)
+
+    report = dual_sparse_bench(smoke=args.smoke)
+    print(json.dumps(report, indent=2))
+    write = (not args.no_write) and (not args.smoke or args.write)
+    if write:
+        with open(OUT_PATH, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"wrote {OUT_PATH}")
+    if not all(report["parity"].values()):
+        print("PARITY FAILURE:", report["parity"], file=sys.stderr)
+        return 1
+    print(f"dual-sparse {report['dual_sparse_speedup']:.2f}x vs dense "
+          f"(jmax={report['join_width_jmax']} of {report['dense_k_blocks']} "
+          f"k-blocks)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

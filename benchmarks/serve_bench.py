@@ -12,6 +12,7 @@ layers, over all T timesteps — the paper's FTP argument applied at the
 serving level).
 """
 import argparse
+import dataclasses
 import json
 import os
 
@@ -55,16 +56,77 @@ def bench_engine(arch: str, batches=(1, 2, 4, 8), prompt_len=32, gen=16):
     return results
 
 
+def bench_spiking_dual_sparse(
+    weight_density=0.3, batch=4, prompt_len=16, gen=8
+) -> dict:
+    """Dual-sparse row: a spiking-FFN arch at paper-like LTH density served
+    through the engine, BSR plan path vs dense-weight packed path.
+
+    Both runs use the SAME pruned params (pruned once at init); the only
+    difference is whether load-time weight join plans route the FFN GEMMs
+    through the dual-sparse kernel.
+    """
+    from repro.configs import get_config, smoke_variant
+    from repro.models import layers as model_layers
+    from repro.models.registry import build_model
+    from repro.serve import Engine
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg, spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=weight_density,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    out = {"arch": "llama3_2_1b+spiking_ffn", "weight_density": weight_density,
+           "batch": batch, "prompt_len": prompt_len, "gen": gen}
+    tokens = {}
+    try:
+        for key, dual in (("dense_weight", False), ("dual_sparse", True)):
+            engine = Engine(
+                model, params, max_len=prompt_len + gen, max_slots=batch,
+                spiking_packed=True, dual_sparse=dual,
+            )
+            engine.generate_batch(prompts, gen)   # warm-up: jit compiles
+            engine.metrics = EngineMetrics()
+            tokens[key] = engine.generate_batch(prompts, gen)
+            out[f"{key}_tok_s"] = engine.summary()["throughput_tok_s"]
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    out["dual_sparse_speedup"] = (
+        out["dual_sparse_tok_s"] / out["dense_weight_tok_s"]
+    )
+    out["token_identical"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(tokens["dense_weight"], tokens["dual_sparse"])
+    )
+    return out
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
-    rep = main(["--batches", "1,4", "--no-write"])
+    rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
+    sp = bench_spiking_dual_sparse()
     return [(
         "serve/batched_vs_single_tok_s", 0.0,
         f"tok_s_b1={r1:.1f} tok_s_b{rep['results'][-1]['batch']}={rb:.1f} "
         f"speedup={rb / r1:.2f}x (XLA:CPU)",
+    ), (
+        "serve/dual_sparse_spiking_tok_s", 0.0,
+        f"dense_w_tok_s={sp['dense_weight_tok_s']:.1f} "
+        f"dual_sparse_tok_s={sp['dual_sparse_tok_s']:.1f} "
+        f"speedup={sp['dual_sparse_speedup']:.2f}x "
+        f"density={sp['weight_density']} "
+        f"token_identical={sp['token_identical']} (XLA:CPU)",
     )]
 
 
@@ -76,6 +138,8 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
+    ap.add_argument("--no-spiking-row", action="store_true",
+                    help="skip the dual-sparse spiking-FFN serving row")
     args = ap.parse_args(argv)
     batches = tuple(int(b) for b in args.batches.split(","))
 
@@ -92,6 +156,14 @@ def main(argv=None):
         "results": results,
         "batched_speedup_vs_1": results[-1]["tok_s"] / results[0]["tok_s"],
     }
+    if not args.no_spiking_row:
+        sp = bench_spiking_dual_sparse()
+        report["dual_sparse_spiking"] = sp
+        print(f"  spiking d={sp['weight_density']}: dual-sparse "
+              f"{sp['dual_sparse_tok_s']:.1f} tok/s vs dense-weight "
+              f"{sp['dense_weight_tok_s']:.1f} tok/s "
+              f"({sp['dual_sparse_speedup']:.2f}x, "
+              f"token_identical={sp['token_identical']})")
     if not args.no_write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)

@@ -46,3 +46,12 @@ print(f"output silent       : {float(silent_fraction(out_packed)):.1%}")
 out_kernel, _ = ops.ftp_spmm_dual_sparse(np.asarray(packed), np.asarray(w), T)
 assert (np.asarray(out_kernel) == np.asarray(out_packed)).all()
 print("pallas kernel       : matches reference ✓")
+
+# 6. the serving form of the same kernel: build the weight join plan ONCE
+#    (model load), then every call is device-only — new spike activity is a
+#    value change, not a new trace
+plan = ops.build_weight_plan(np.asarray(w))
+out_plan, _ = ops.ftp_spmm_bsr(packed, plan, T, n_out=N)
+assert (np.asarray(out_plan) == np.asarray(out_packed)).all()
+print(f"weight join plan    : {plan.block_density():.0%} of blocks live, "
+      f"join width {plan.jmax} of {plan.nkb} k-blocks ✓")

@@ -22,11 +22,15 @@ from .packing import (
 )
 from .snn_layers import (
     SpikingConfig,
+    assert_weight_density,
+    attach_join_plans,
     init_spiking_ffn,
     prune_by_magnitude,
     spiking_ffn_apply,
+    spiking_ffn_apply_packed,
     spiking_linear_infer,
     spiking_linear_train,
+    weight_density,
 )
 
 __all__ = [
@@ -37,5 +41,7 @@ __all__ = [
     "popcount", "mask_low_activity", "block_activity_map", "block_nonzero_map",
     "compression_efficiency",
     "SpikingConfig", "init_spiking_ffn", "spiking_ffn_apply",
-    "spiking_linear_train", "spiking_linear_infer", "prune_by_magnitude",
+    "spiking_ffn_apply_packed", "spiking_linear_train", "spiking_linear_infer",
+    "prune_by_magnitude", "attach_join_plans", "assert_weight_density",
+    "weight_density",
 ]

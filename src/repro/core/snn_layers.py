@@ -43,15 +43,81 @@ class SpikingConfig:
     weight_density: float = 1.0
 
 
-def prune_by_magnitude(w: jax.Array, density: float) -> jax.Array:
-    """Global magnitude pruning to the target density — one LTH round's
-    pruning step.  Returns the pruned weight tensor (hard zeros)."""
+def prune_by_magnitude(
+    w: jax.Array, density: float, block: tuple[int, int] | None = None
+) -> jax.Array:
+    """Magnitude pruning to the target density — one LTH round's pruning
+    step.  Returns the pruned weight tensor (hard zeros).
+
+    ``block=(bk, bn)``: structured variant that keeps/drops whole (bk, bn)
+    blocks ranked by L2 norm — the TPU-tile-aligned form of LTH pruning
+    that the block-level inner join (kernels/join_plan.py) can actually
+    skip.  Unstructured (default) pruning keeps hard zeros but rarely zeroes
+    a whole MXU block.
+    """
     if density >= 1.0:
         return w
-    k = max(1, int(w.size * density))
-    topk = jax.lax.top_k(jnp.abs(w).reshape(-1), k)[0]
-    thresh = jax.lax.stop_gradient(topk[k - 1])
-    return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
+    if block is None:
+        k = max(1, int(w.size * density))
+        topk = jax.lax.top_k(jnp.abs(w).reshape(-1), k)[0]
+        thresh = jax.lax.stop_gradient(topk[k - 1])
+        return jnp.where(jnp.abs(w) >= thresh, w, 0.0)
+    # Two-stage: (1) keep the top ceil(nblocks * density) blocks by L2 norm
+    # — concentrating the budget so the complement blocks are WHOLLY zero
+    # (skippable by the join) — then (2) element-prune within the kept
+    # blocks down to the exact target element count.
+    bk, bn = block
+    K, N = w.shape
+    if K % bk or N % bn:
+        raise ValueError(f"shape {(K, N)} not divisible by block {block}")
+    nkb, nnb = K // bk, N // bn
+    blocks = w.reshape(nkb, bk, nnb, bn)
+    score = jnp.sum(
+        jnp.square(blocks.astype(jnp.float32)), axis=(1, 3)
+    )  # (nkb, nnb)
+    nblocks = nkb * nnb
+    kb = min(nblocks, max(1, -int(-nblocks * density)))
+    topk = jax.lax.top_k(score.reshape(-1), kb)[0]
+    thresh = jax.lax.stop_gradient(topk[kb - 1])
+    keep = (score >= thresh)[:, None, :, None]
+    wb = (blocks * keep.astype(w.dtype)).reshape(K, N)
+    n_keep = max(1, int(w.size * density))
+    if kb * bk * bn > n_keep:
+        topv = jax.lax.top_k(jnp.abs(wb).reshape(-1), n_keep)[0]
+        et = jax.lax.stop_gradient(topv[n_keep - 1])
+        wb = jnp.where(jnp.abs(wb) >= et, wb, 0.0)
+    return wb
+
+
+def sparsity_mask(w: jax.Array) -> jax.Array:
+    """The stored hard-zero pattern as a multiplicative {0,1} mask."""
+    return (w != 0).astype(w.dtype)
+
+
+def freeze_pruned(w: jax.Array) -> jax.Array:
+    """Identity on the forward values, but gradients only flow to the
+    SURVIVING (non-zero) entries — training can never regrow a pruned
+    weight, so the prune-once density contract (and the load-time join
+    plans built from it) survives fine-tuning."""
+    return w * jax.lax.stop_gradient(sparsity_mask(w))
+
+
+def weight_density(w) -> float:
+    """Measured fraction of non-zero weights (host helper)."""
+    return float(jnp.mean((jnp.asarray(w) != 0).astype(jnp.float32)))
+
+
+def assert_weight_density(w, density: float, tol: float = 0.05) -> None:
+    """One-shot load-time check that stored params really carry the hard
+    zeros the config promises (satellite of the prune-once contract: pruning
+    happens at init/load, never per forward)."""
+    got = weight_density(w)
+    if got > density + tol:
+        raise ValueError(
+            f"stored weights have density {got:.3f} > configured "
+            f"{density:.3f}; prune at init/load (prune_by_magnitude) before "
+            "serving the dual-sparse path"
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -94,18 +160,59 @@ def spiking_linear_infer(
 # SpikingFFN: analog in, analog out — drop-in transformer MLP replacement.
 # ---------------------------------------------------------------------------
 
-def init_spiking_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+def init_spiking_ffn(
+    key,
+    d_model: int,
+    d_ff: int,
+    dtype=jnp.float32,
+    weight_density: float = 1.0,
+    prune_block: tuple[int, int] | None = None,
+) -> dict:
+    """Init (and, when ``weight_density < 1``, LTH-prune) the FFN weights.
+
+    Pruning happens HERE, once — the stored params carry hard zeros, and the
+    apply paths below never re-prune (the prune-once/serve-many contract the
+    weight join plans rely on)."""
     k1, k2 = jax.random.split(key)
     scale_in = 1.0 / (d_model ** 0.5)
     scale_out = 1.0 / (d_ff ** 0.5)
-    return {
-        "w_in": (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype),
-        "w_out": (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype),
-    }
+    w_in = (jax.random.normal(k1, (d_model, d_ff)) * scale_in).astype(dtype)
+    w_out = (jax.random.normal(k2, (d_ff, d_model)) * scale_out).astype(dtype)
+    if weight_density < 1.0:
+        w_in = prune_by_magnitude(w_in, weight_density, block=prune_block)
+        w_out = prune_by_magnitude(w_out, weight_density, block=prune_block)
+    return {"w_in": w_in, "w_out": w_out}
+
+
+def attach_join_plans(params: dict, cfg: SpikingConfig) -> dict:
+    """Load-time step of the dual-sparse serving path: build one
+    `WeightJoinPlan` per GEMM from the (already pruned, hard-zero) stored
+    weights and return params with ``plan_in`` / ``plan_out`` attached.
+
+    Host work happens exactly once here; afterwards every forward is
+    device-only (the per-request spike join lives inside the kernel).  Also
+    the single place the configured density is asserted against the stored
+    weights (prune-once contract).
+    """
+    from repro.kernels.join_plan import build_weight_plan
+
+    if cfg.weight_density < 1.0:
+        assert_weight_density(params["w_in"], cfg.weight_density)
+        assert_weight_density(params["w_out"], cfg.weight_density)
+    import numpy as np
+
+    return dict(
+        params,
+        plan_in=build_weight_plan(np.asarray(params["w_in"])),
+        plan_out=build_weight_plan(np.asarray(params["w_out"])),
+    )
 
 
 def spiking_ffn_apply_packed(
-    params: dict, packed_in: jax.Array, cfg: SpikingConfig
+    params: dict,
+    packed_in: jax.Array,
+    cfg: SpikingConfig,
+    plans: tuple | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Spike-domain FFN: packed words in, (analog out, packed hidden words).
 
@@ -114,24 +221,49 @@ def spiking_ffn_apply_packed(
     (the serving engine's spike cache, spike-stream pipelines) skip the
     direct-encode step and keep the hidden activations packed for reuse —
     nothing is unpacked to (T, ...) float32 between layers.
+
+    Weights must already carry their hard zeros (pruned at init/load — this
+    function never prunes).  When join plans are available (``plans`` arg or
+    ``plan_in``/``plan_out`` attached by `attach_join_plans`), both GEMMs run
+    dual-sparse through the BSR kernel: static weight join from the plan,
+    per-request spike join on device.
     """
     w_in, w_out = params["w_in"], params["w_out"]
-    if cfg.weight_density < 1.0:
-        w_in = prune_by_magnitude(w_in, cfg.weight_density)
-        w_out = prune_by_magnitude(w_out, cfg.weight_density)
+    if plans is None:
+        plans = (params.get("plan_in"), params.get("plan_out"))
+    plan_in, plan_out = plans
     lead = packed_in.shape[:-1]
     pm = packed_in.reshape(-1, packed_in.shape[-1])
     if cfg.preprocess_min_spikes > 0:
         from .packing import mask_low_activity
 
         pm = mask_low_activity(pm, cfg.preprocess_min_spikes)
-    packed_h, _ = ftp_layer(pm, w_in, cfg.T, cfg.v_th, cfg.tau)
-    o = ftp_spmspm(packed_h, w_out, cfg.T)
+    if plan_in is not None:
+        packed_h, o = _ffn_dual_sparse(pm, plan_in, plan_out, w_in, w_out, cfg)
+    else:
+        packed_h, _ = ftp_layer(pm, w_in, cfg.T, cfg.v_th, cfg.tau)
+        o = ftp_spmspm(packed_h, w_out, cfg.T)
     y = rate_decode(o)
     return (
         y.reshape(*lead, -1),
         packed_h.reshape(*lead, -1),
     )
+
+
+def _ffn_dual_sparse(pm, plan_in, plan_out, w_in, w_out, cfg: SpikingConfig):
+    """Both FFN GEMMs through the dual-sparse BSR kernel: fused P-LIF on the
+    hidden layer (packed words out), plain full sums on the output layer.
+    Returns (packed hidden words (M, F), full sums (T, M, D))."""
+    from repro.kernels import ops
+
+    packed_h, _ = ops.ftp_spmm_bsr(
+        pm, plan_in, cfg.T, cfg.v_th, cfg.tau,
+        n_out=w_in.shape[1], fuse_lif=True,
+    )
+    o, _ = ops.ftp_spmm_bsr(
+        packed_h, plan_out, cfg.T, n_out=w_out.shape[1], fuse_lif=False,
+    )
+    return packed_h, o
 
 
 def spiking_ffn_apply(
@@ -140,17 +272,23 @@ def spiking_ffn_apply(
     cfg: SpikingConfig,
     mode: str = "train",
     use_kernel: bool = False,
+    plans: tuple | None = None,
 ) -> jax.Array:
     """x: (..., d_model) analog activations -> (..., d_model).
 
     Pipeline: direct-encode(x) -> spikes --W_in--> LIF -> spikes --W_out-->
     potentials -> rate decode.  Both GEMMs are dual-sparse spMspM under the
-    FTP dataflow; weights may carry LTH-pruned hard zeros.
+    FTP dataflow; weights carry their LTH-pruned hard zeros from init/load
+    (this function never prunes — prune-once contract).
+
+    ``plans``: optional (plan_in, plan_out) `WeightJoinPlan` pair (or attach
+    them to ``params`` via `attach_join_plans`); in ``infer`` mode they route
+    both GEMMs through the dual-sparse BSR kernel.
     """
     w_in, w_out = params["w_in"], params["w_out"]
-    if cfg.weight_density < 1.0:
-        w_in = prune_by_magnitude(w_in, cfg.weight_density)
-        w_out = prune_by_magnitude(w_out, cfg.weight_density)
+    if plans is None:
+        plans = (params.get("plan_in"), params.get("plan_out"))
+    plan_in, plan_out = plans
 
     lead = x.shape[:-1]
     d_model = x.shape[-1]
@@ -158,6 +296,10 @@ def spiking_ffn_apply(
     spikes_in = direct_encode(xm, cfg.T, v_th=cfg.v_th, tau=cfg.tau)
 
     if mode == "train":
+        if cfg.weight_density < 1.0:
+            # freeze the stored LTH pattern: gradients reach surviving
+            # weights only, so BPTT fine-tuning never regrows a pruned zero
+            w_in, w_out = freeze_pruned(w_in), freeze_pruned(w_out)
         hidden = spiking_linear_train(spikes_in, w_in, cfg)  # (T, M, F)
         o = ftp_spmspm_unpacked(hidden, w_out)               # (T, M, D)
         y = rate_decode(o)
@@ -167,7 +309,11 @@ def spiking_ffn_apply(
             from .packing import mask_low_activity
 
             packed_in = mask_low_activity(packed_in, cfg.preprocess_min_spikes)
-        if use_kernel:
+        if plan_in is not None:
+            _, o = _ffn_dual_sparse(
+                packed_in, plan_in, plan_out, w_in, w_out, cfg
+            )
+        elif use_kernel:
             from repro.kernels import ops
 
             packed_h, _ = ops.ftp_spmm_fused_lif(

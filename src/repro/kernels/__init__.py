@@ -1,2 +1,3 @@
 """Pallas TPU kernels: FTP spMspM (+fused P-LIF), block-sparse dual-join,
-flash attention.  ops.py has the jit'd wrappers; ref.py the jnp oracles."""
+flash attention.  ops.py has the jit'd wrappers; ref.py the jnp oracles;
+join_plan.py the load-time weight join plans of the dual-sparse path."""

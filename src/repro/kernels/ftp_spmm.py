@@ -10,7 +10,12 @@ Three kernels:
                             the paper's IP output reuse + P-LIF "one shot".
 * ``ftp_spmm_bsr``        — dual-sparse: block-CSR weights joined with the
                             spike block-activity map (block-level inner join,
-                            DESIGN.md D1) via scalar-prefetch index maps.
+                            DESIGN.md D1).  The weight side of the join is a
+                            STATIC load-time plan (kernels/join_plan.py)
+                            driving the grid via scalar-prefetch index maps;
+                            the spike side is a per-request device-computed
+                            activity map consumed in-kernel with @pl.when —
+                            no host join, no recompile across requests.
 
 Dataflow notes (why this is FTP):
   The grid is (m, n, k) — the inner-product loop nest.  Inside one grid step
@@ -185,10 +190,20 @@ def ftp_spmm_fused_lif(
 
 # ---------------------------------------------------------------------------
 # Kernel 3: dual-sparse block-CSR weights + block-level inner join.
+#
+# The join is split by lifetime (kernels/join_plan.py):
+#   * weight side (static, per model load): the grid's jj axis walks ONLY the
+#     weight-non-zero k-blocks of output column j, through the prefetched
+#     kidx/vidx/cnt join lists — zero k-blocks never enter the grid;
+#   * spike side (dynamic, per request): a device-computed block-activity map
+#     rides in as a scalar-prefetch (SMEM) operand and spike-silent blocks
+#     are skipped in-kernel with @pl.when — no host round-trip, no per-call
+#     join construction, and a change in spike activity is a pure value
+#     change (same shapes -> no retrace/recompile).
 # ---------------------------------------------------------------------------
 
 def _ftp_bsr_kernel(
-    kidx_ref, vidx_ref, cnt_ref,  # scalar-prefetch operands
+    kidx_ref, vidx_ref, cnt_ref, act_ref,  # scalar-prefetch operands
     a_ref, bv_ref, c_ref, u_ref, acc_ref,
     *, T, jmax, v_th, tau, fuse_lif,
 ):
@@ -200,9 +215,13 @@ def _ftp_bsr_kernel(
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # Block-level inner join: only surviving (A-active AND B-nonzero) k-blocks
-    # appear in the prefetched index list; tail entries are skipped.
-    @pl.when(jj < cnt_ref[i, j])
+    # Block-level inner join: jj runs over the STATIC weight-non-zero k-block
+    # list of column j (tail slots masked by cnt); the DYNAMIC spike side is
+    # the device-computed activity map — A-silent blocks contribute nothing
+    # and skip the MXU entirely.
+    kb = kidx_ref[j, jj]
+
+    @pl.when(jnp.logical_and(jj < cnt_ref[j], act_ref[i, kb] > 0))
     def _():
         a = _unpack_fold(a_ref[...], T, jnp.float32)
         b = bv_ref[0].astype(jnp.float32)
@@ -216,6 +235,9 @@ def _ftp_bsr_kernel(
             u_ref[...] = u.astype(u_ref.dtype)
         else:
             c_ref[...] = acc_ref[...].reshape(c_ref.shape)
+            # no LIF ran, so there are no membrane potentials; zero-fill
+            # rather than leave the output buffer uninitialized
+            u_ref[...] = jnp.zeros_like(u_ref)
 
 
 def ftp_spmm_bsr(
@@ -224,43 +246,46 @@ def ftp_spmm_bsr(
     kidx: jax.Array,
     vidx: jax.Array,
     cnt: jax.Array,
+    act: jax.Array,
     N: int,
     T: int,
     v_th: float = DEFAULT_VTH,
     tau: float = DEFAULT_TAU,
     *,
     bm: int = BM,
-    bk: int = BK,
-    bn: int = BN,
     fuse_lif: bool = True,
     interpret: bool = False,
 ):
-    """Dual-sparse FTP spMspM.
+    """Dual-sparse FTP spMspM over a load-time weight join plan.
 
     a_packed: (M, K) uint32 packed spikes (dense layout; silent blocks are
-              skipped via the join lists).
+              skipped in-kernel via ``act``).
     b_vals:   (nnzb, bk, bn) gathered non-zero weight blocks (block-CSR
-              payload; see ops.build_block_join).
-    kidx:     (nm, nn, jmax) int32 — k-block index into A per join step.
-    vidx:     (nm, nn, jmax) int32 — block index into b_vals per join step.
-    cnt:      (nm, nn) int32 — join-list length per output tile.
+              payload; see join_plan.build_weight_plan).
+    kidx:     (nnb, jmax) int32 — k-block index into A per join slot of
+              output column block j (weight-side static join list).
+    vidx:     (nnb, jmax) int32 — block index into b_vals per join slot.
+    cnt:      (nnb,) int32 — live join slots per column block.
+    act:      (nm, nkb) int32 — device-computed spike block-activity map
+              (>0 where the (bm, bk) spike block has any non-silent neuron).
     """
     M, K = a_packed.shape
-    nm, nn, jmax = kidx.shape
-    assert M % bm == 0 and K % bk == 0 and N % bn == 0
-    grid = (nm, nn, jmax)
+    nnzb, bk, bn = b_vals.shape
+    nnb, jmax = kidx.shape
+    nm, nkb = act.shape
+    assert M % bm == 0 and K == nkb * bk and N == nnb * bn and nm == M // bm
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=grid,
+        num_scalar_prefetch=4,
+        grid=(nm, nnb, jmax),
         in_specs=[
             pl.BlockSpec(
                 (bm, bk),
-                lambda i, j, jj, kidx, vidx, cnt: (i, kidx[i, j, jj]),
+                lambda i, j, jj, kidx, vidx, cnt, act: (i, kidx[j, jj]),
             ),
             pl.BlockSpec(
                 (1, bk, bn),
-                lambda i, j, jj, kidx, vidx, cnt: (vidx[i, j, jj], 0, 0),
+                lambda i, j, jj, kidx, vidx, cnt, act: (vidx[j, jj], 0, 0),
             ),
         ],
         out_specs=[
@@ -293,5 +318,5 @@ def ftp_spmm_bsr(
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(kidx, vidx, cnt, a_packed, b_vals)
+    )(kidx, vidx, cnt, act, a_packed, b_vals)
     return c, u

@@ -1,0 +1,220 @@
+"""Load-time weight join plans for the dual-sparse FTP serving path.
+
+The block-level inner join of LoAS (DESIGN.md D1) has two sides with very
+different lifetimes:
+
+* **Weight side** — which (k, n) weight blocks are non-zero is a property of
+  the LTH-pruned model and never changes after load.  Like LoAS's offline
+  weight compression (and FireFly-S's dual-side compression), it belongs at
+  model-load time: `build_weight_plan` compresses a (K, N) weight matrix into
+  a `WeightJoinPlan` — block-CSR payload, per-output-column join lists, and
+  the per-(k, n)-block non-zero mask — built ONCE per layer on the host.
+
+* **Spike side** — which (m, k) blocks of packed spikes are active changes
+  per request.  It never touches the host: the kernel wrapper computes a
+  `block_activity_map` on device and the Pallas kernel skips spike-silent
+  blocks in-kernel with ``@pl.when`` on that SMEM operand.
+
+Plan lifecycle::
+
+    load:    w -> prune (hard zeros) -> build_weight_plan(w)   # host, once
+    serve:   ops.ftp_spmm_bsr(packed_spikes, plan, T)          # device, per
+             #   activity map + join skip happen inside the jit'd call; a
+             #   change in spike activity is a plain value change — same
+             #   shapes, zero retrace/recompile.
+
+`WeightJoinPlan` is a pytree whose leaves are ALL arrays (no static aux), so
+plans for a stack of layers can be stacked along a leading axis and scanned
+with `jax.lax.scan` exactly like the weights themselves (`stack_plans`).
+Every geometric attribute (block sizes, join width, padded K/N) is derived
+from array shapes, so `jax.jit` specializes on plan geometry automatically.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Default MXU-aligned weight block (v5e MXU is 128x128); small matrices get
+# shrunk blocks via `pick_plan_blocks` (interpret mode accepts anything).
+BK, BN = 128, 128
+
+
+def pick_plan_blocks(K: int, N: int, bk: int = BK, bn: int = BN) -> tuple[int, int]:
+    """Shrink default weight blocks for small problems — mirrors
+    `ops._pick_blocks` so plans built at load time agree with the kernel
+    wrapper's padding."""
+    return min(bk, max(8, K)), min(bn, max(128, N) if N >= 128 else N)
+
+
+@dataclass(frozen=True)
+class WeightJoinPlan:
+    """Static weight-side half of the block-level inner join.
+
+    All fields are arrays (a valid jax pytree with no static metadata):
+
+    payload: (nnzb, bk, bn)  gathered non-zero weight blocks (block-CSR
+             payload, k-major order; at least one block — all-zero weights
+             keep a single dummy zero block).
+    kidx:    (nnb, jmax) int32 — for output column-block j, the k-block index
+             of the jj-th non-zero weight block (tail slots are 0-filled and
+             masked by ``cnt``).
+    vidx:    (nnb, jmax) int32 — payload index for the same join slot.
+    cnt:     (nnb,) int32 — number of live join slots per column block.
+    bmap:    (nkb, nnb) bool — per-(k, n)-block non-zero mask (the weight
+             side of the join, kept for introspection/telemetry).
+
+    Stacked per-layer plans carry one extra leading axis on every field.
+    """
+
+    payload: jax.Array
+    kidx: jax.Array
+    vidx: jax.Array
+    cnt: jax.Array
+    bmap: jax.Array
+
+    # -- geometry (derived from shapes; valid for stacked plans too) --------
+    @property
+    def bk(self) -> int:
+        return self.payload.shape[-2]
+
+    @property
+    def bn(self) -> int:
+        return self.payload.shape[-1]
+
+    @property
+    def jmax(self) -> int:
+        return self.kidx.shape[-1]
+
+    @property
+    def nkb(self) -> int:
+        return self.bmap.shape[-2]
+
+    @property
+    def nnb(self) -> int:
+        return self.bmap.shape[-1]
+
+    @property
+    def k_padded(self) -> int:
+        return self.nkb * self.bk
+
+    @property
+    def n_padded(self) -> int:
+        return self.nnb * self.bn
+
+    def block_density(self) -> float:
+        """Fraction of weight blocks that are non-zero (host helper)."""
+        return float(np.asarray(self.bmap, bool).mean())
+
+
+def _plan_flatten(p: WeightJoinPlan):
+    return (p.payload, p.kidx, p.vidx, p.cnt, p.bmap), None
+
+
+def _plan_unflatten(_, children):
+    return WeightJoinPlan(*children)
+
+
+jax.tree_util.register_pytree_node(
+    WeightJoinPlan, _plan_flatten, _plan_unflatten
+)
+
+
+def build_block_csr(b: np.ndarray, bk: int, bn: int):
+    """Compress (K, N) weights into block-CSR: gathered non-zero (bk, bn)
+    blocks + a dense (nkb, nnb) -> payload-index map (-1 for zero blocks).
+
+    Host-side (numpy): formats are built once per model at load time, like
+    LoAS's offline weight compression.
+    """
+    K, N = b.shape
+    assert K % bk == 0 and N % bn == 0
+    nkb, nnb = K // bk, N // bn
+    blocks = b.reshape(nkb, bk, nnb, bn).transpose(0, 2, 1, 3)
+    nz = np.asarray(
+        np.any(np.asarray(blocks, dtype=np.float32) != 0, axis=(2, 3))
+    )  # (nkb, nnb)
+    payload = np.ascontiguousarray(blocks[nz])  # (nnzb, bk, bn)
+    if payload.shape[0] == 0:  # fully-zero weights: keep one dummy block
+        payload = np.zeros((1, bk, bn), dtype=b.dtype)
+    idx = -np.ones((nkb, nnb), dtype=np.int32)
+    idx[nz] = np.arange(int(nz.sum()), dtype=np.int32)
+    return payload, idx, nz
+
+
+def build_weight_plan(
+    w: np.ndarray, *, bk: int | None = None, bn: int | None = None
+) -> WeightJoinPlan:
+    """Build the load-time join plan for one (K, N) weight matrix.
+
+    Pads K/N up to block multiples, compresses to block-CSR, and derives the
+    per-column-block join lists with vectorized numpy (no Python loop over
+    blocks) — offline plan building stays linear in the number of non-zero
+    blocks even for big layers.
+    """
+    w = np.asarray(w)
+    K, N = w.shape
+    if bk is None or bn is None:
+        pbk, pbn = pick_plan_blocks(K, N)
+        bk = bk if bk is not None else pbk
+        bn = bn if bn is not None else pbn
+    pk, pn = (-K) % bk, (-N) % bn
+    if pk or pn:
+        w = np.pad(w, ((0, pk), (0, pn)))
+    payload, idx, nz = build_block_csr(w, bk, bn)
+    nkb, nnb = nz.shape
+    cnt = nz.sum(axis=0).astype(np.int32)  # (nnb,)
+    jmax = max(1, int(cnt.max()))
+    # Vectorized join-list fill: one nonzero() over the whole mask, grouped
+    # by column block via the (j-major) sort order, slotted with a cumsum.
+    jb, kb = np.nonzero(nz.T)  # j-major: sorted by j, then k ascending
+    slot = np.arange(jb.size, dtype=np.int64) - np.repeat(
+        np.cumsum(cnt) - cnt, cnt
+    )
+    kidx = np.zeros((nnb, jmax), dtype=np.int32)
+    vidx = np.zeros((nnb, jmax), dtype=np.int32)
+    kidx[jb, slot] = kb.astype(np.int32)
+    vidx[jb, slot] = idx[kb, jb]
+    return WeightJoinPlan(
+        payload=jnp.asarray(payload),
+        kidx=jnp.asarray(kidx),
+        vidx=jnp.asarray(vidx),
+        cnt=jnp.asarray(cnt),
+        bmap=jnp.asarray(nz),
+    )
+
+
+def stack_plans(plans: list[WeightJoinPlan]) -> WeightJoinPlan:
+    """Stack per-layer plans into one scannable plan (leading layer axis).
+
+    Layers of one stack share (K, N) and block sizes but differ in non-zero
+    structure; payloads are zero-padded to the widest layer's block count and
+    join lists to the widest ``jmax`` so every leaf stacks rectangularly.
+    Padding blocks are never touched: ``cnt`` masks the join tail, and padded
+    payload blocks are unreachable from any live ``vidx`` slot.
+    """
+    if not plans:
+        raise ValueError("stack_plans needs at least one plan")
+    geo = {(p.bk, p.bn, p.nkb, p.nnb) for p in plans}
+    if len(geo) != 1:
+        raise ValueError(f"cannot stack plans with differing geometry {geo}")
+    nnzb = max(p.payload.shape[0] for p in plans)
+    jmax = max(p.jmax for p in plans)
+
+    def pad_to(x, size, axis):
+        pad = size - x.shape[axis]
+        if pad == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        return jnp.pad(x, widths)
+
+    return WeightJoinPlan(
+        payload=jnp.stack([pad_to(p.payload, nnzb, 0) for p in plans]),
+        kidx=jnp.stack([pad_to(p.kidx, jmax, 1) for p in plans]),
+        vidx=jnp.stack([pad_to(p.vidx, jmax, 1) for p in plans]),
+        cnt=jnp.stack([p.cnt for p in plans]),
+        bmap=jnp.stack([p.bmap for p in plans]),
+    )

@@ -1,8 +1,11 @@
 """Public jit'd wrappers around the Pallas FTP kernels.
 
-Handles padding to MXU-aligned blocks, block-join construction for the
-dual-sparse path, and backend dispatch (interpret=True off-TPU so the kernels
-are validated everywhere; compiled on real TPUs).
+Handles padding to MXU-aligned blocks, backend dispatch (interpret=True
+off-TPU so the kernels are validated everywhere; compiled on real TPUs), and
+the dual-sparse serving path: `ftp_spmm_bsr(_batched)` consume a load-time
+`WeightJoinPlan` (kernels/join_plan.py) and compute the per-request spike
+join ON DEVICE — no host work and no retrace across requests
+(`BSR_TRACE_COUNT` counts traces so callers can assert the latter).
 """
 from __future__ import annotations
 
@@ -13,9 +16,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
-from repro.core.packing import block_activity_map, block_nonzero_map
+from repro.core.packing import block_activity_map
 
 from . import ftp_spmm as _k
+from .join_plan import (
+    WeightJoinPlan,
+    build_block_csr,
+    build_weight_plan,
+    stack_plans,
+)
 
 
 def _on_tpu() -> bool:
@@ -126,40 +135,141 @@ def ftp_spmm_fused_lif_batched(
 
 
 # ---------------------------------------------------------------------------
-# Dual-sparse path: block-CSR construction + block-level inner join.
+# Dual-sparse path: load-time weight join plan + device-side spike join.
+#
+# The weight side of the block-level inner join is static per model and lives
+# in a `WeightJoinPlan` (kernels/join_plan.py) built ONCE at load; the spike
+# side is a per-request `block_activity_map` computed ON DEVICE inside the
+# jit'd wrapper.  A change in spike activity between calls is a pure value
+# change — same shapes, no host join, no retrace (`BSR_TRACE_COUNT` exposes
+# the trace count so tests/serving can assert this).
 # ---------------------------------------------------------------------------
 
-def build_block_csr(b: np.ndarray, bk: int, bn: int):
-    """Compress (K, N) weights into block-CSR: gathered non-zero (bk, bn)
-    blocks + a dense (nkb, nnb)->payload-index map (-1 for zero blocks).
+# Incremented each time the BSR wrapper is TRACED (not called).  After
+# warm-up, serving steps with changing spike activity must leave it constant.
+BSR_TRACE_COUNT = 0
 
-    Host-side (numpy): formats are built once per model at load time, like
-    LoAS's offline weight compression.
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("T", "v_th", "tau", "bm", "n_out", "fuse_lif", "interpret"),
+)
+def _bsr_call(
+    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret
+):
+    global BSR_TRACE_COUNT
+    BSR_TRACE_COUNT += 1  # trace-time side effect, by design
+    M, K = a_packed.shape
+    if K > plan.k_padded:
+        raise ValueError(
+            f"spike width {K} exceeds plan K {plan.k_padded}"
+        )
+    pads = [(0, (-M) % bm), (0, plan.k_padded - K)]
+    ap = jnp.pad(a_packed, pads) if any(p for _, p in pads) else a_packed
+    # Device-side spike join: the activity map never leaves the accelerator.
+    act = block_activity_map(ap, bm, plan.bk).astype(jnp.int32)
+    c, u = _k.ftp_spmm_bsr(
+        ap,
+        plan.payload,
+        plan.kidx,
+        plan.vidx,
+        plan.cnt,
+        act,
+        plan.n_padded,
+        T,
+        v_th,
+        tau,
+        bm=bm,
+        fuse_lif=fuse_lif,
+        interpret=interpret,
+    )
+    if fuse_lif:
+        return c[:M, :n_out], u[:M, :n_out]
+    return c[:, :M, :n_out], u[:M, :n_out]
+
+
+def ftp_spmm_bsr(
+    a_packed,
+    plan,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm: int | None = None,
+    n_out: int | None = None,
+    fuse_lif: bool = True,
+    interpret: bool | None = None,
+):
+    """Dual-sparse FTP spMspM against a load-time `WeightJoinPlan`.
+
+    a_packed: (M, K) uint32 packed spikes; plan: WeightJoinPlan built once
+    from the pruned weights.  Returns (packed spikes (M, n_out), U) when
+    ``fuse_lif`` else ((T, M, n_out) full sums, zeros) — without the LIF
+    epilogue there are no membrane potentials.  Fully jit'd; per-request
+    work is device-only.
     """
-    K, N = b.shape
-    assert K % bk == 0 and N % bn == 0
-    nkb, nnb = K // bk, N // bn
-    blocks = b.reshape(nkb, bk, nnb, bn).transpose(0, 2, 1, 3)
-    nz = np.any(blocks != 0, axis=(2, 3))  # (nkb, nnb)
-    payload = blocks[nz]  # (nnzb, bk, bn)
-    if payload.shape[0] == 0:  # fully-zero weights: keep one dummy block
-        payload = np.zeros((1, bk, bn), dtype=b.dtype)
-    idx = -np.ones((nkb, nnb), dtype=np.int32)
-    idx[nz] = np.arange(int(nz.sum()), dtype=np.int32)
-    return payload, idx, nz
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    M = a_packed.shape[0]
+    bm = min(_k.BM, max(8, M)) if bm is None else bm
+    n_out = plan.n_padded if n_out is None else n_out
+    return _bsr_call(
+        a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret
+    )
+
+
+def ftp_spmm_bsr_batched(
+    a_packed,
+    plan,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm: int | None = None,
+    n_out: int | None = None,
+    fuse_lif: bool = True,
+    interpret: bool | None = None,
+):
+    """(B, M, K) batched dual-sparse entry — the batch folds into rows (same
+    trick as `ftp_spmm_batched`), so one weight-plan fetch serves the whole
+    batch and all T timesteps."""
+    B, M, K = a_packed.shape
+    out, u = ftp_spmm_bsr(
+        a_packed.reshape(B * M, K), plan, T, v_th, tau,
+        bm=bm, n_out=n_out, fuse_lif=fuse_lif, interpret=interpret,
+    )
+    N = out.shape[-1]
+    if fuse_lif:
+        return out.reshape(B, M, N), u.reshape(B, M, N)
+    return out.reshape(T, B, M, N), u.reshape(B, M, N)
+
+
+def ftp_spmm_bsr_fused_lif(a_packed, plan, T, *args, **kwargs):
+    """Fused P-LIF dual-sparse layer (packed spikes out) — alias for
+    ``ftp_spmm_bsr(..., fuse_lif=True)``."""
+    kwargs["fuse_lif"] = True
+    return ftp_spmm_bsr(a_packed, plan, T, *args, **kwargs)
+
+
+def ftp_spmm_bsr_fused_lif_batched(a_packed, plan, T, *args, **kwargs):
+    kwargs["fuse_lif"] = True
+    return ftp_spmm_bsr_batched(a_packed, plan, T, *args, **kwargs)
 
 
 def build_block_join(
     a_packed: np.ndarray, b: np.ndarray, bm: int, bk: int, bn: int
 ):
-    """Block-level inner join (DESIGN.md D1): for every output tile (i, j),
-    the list of k-blocks where A's block is active AND B's block is non-zero.
+    """Residual host-side join (offline analysis/debug): for every output
+    tile (i, j), the list of k-blocks where A's block is active AND B's block
+    is non-zero.  Vectorized (argsort over the joined mask — no Python loop
+    over tiles); the SERVING path never calls this — it splits the join into
+    `build_weight_plan` (load time) + the in-kernel activity skip.
 
-    Returns (b_vals, kidx, vidx, cnt, jmax) ready for `ftp_spmm_bsr`.
+    Returns (b_vals, kidx, vidx, cnt, jmax) in the fully-joined per-(i, j)
+    layout.
     """
     M, K = a_packed.shape
     N = b.shape[1]
-    payload, idx, bnz = build_block_csr(b, bk, bn)
+    payload, idx, bnz = build_block_csr(np.asarray(b), bk, bn)
     a_act = np.asarray(block_activity_map(jnp.asarray(a_packed), bm, bk))
     nm, nkb = a_act.shape
     nnb = N // bn
@@ -168,13 +278,14 @@ def build_block_join(
     joined = a_act[:, None, :] & bnz.T[None, :, :]  # (nm, nnb, nkb)
     cnt = joined.sum(axis=2).astype(np.int32)
     jmax = max(1, int(cnt.max()))
-    kidx = np.zeros((nm, nnb, jmax), dtype=np.int32)
-    vidx = np.zeros((nm, nnb, jmax), dtype=np.int32)
-    for i in range(nm):
-        for j in range(nnb):
-            ks = np.nonzero(joined[i, j])[0]
-            kidx[i, j, : len(ks)] = ks
-            vidx[i, j, : len(ks)] = idx[ks, j]
+    # Stable argsort over ~joined floats survivors to the front, in ascending
+    # k order per (i, j) tile — the vectorized form of the old double loop.
+    order = np.argsort(~joined, axis=2, kind="stable")[..., :jmax]
+    live = np.arange(jmax)[None, None, :] < cnt[..., None]
+    kidx = np.where(live, order, 0).astype(np.int32)
+    vidx = np.where(
+        live, idx[kidx, np.arange(nnb)[None, :, None]], 0
+    ).astype(np.int32)
     return payload, kidx, vidx, cnt, jmax
 
 
@@ -191,35 +302,19 @@ def ftp_spmm_dual_sparse(
     fuse_lif: bool = True,
     interpret: bool | None = None,
 ):
-    """End-to-end dual-sparse LoAS layer: join construction + BSR kernel.
+    """End-to-end dual-sparse LoAS layer: plan construction + BSR kernel.
 
-    Convenience entry (numpy in, jax out) used by tests/benchmarks; a real
-    serving path builds the weight-side join structures once at load time via
-    `build_block_join` and reuses them across requests.
+    Convenience entry (numpy/dense weights in, jax out) for tests, examples
+    and offline experiments — it builds the `WeightJoinPlan` per call.  A
+    real serving path builds plans once at model load
+    (`snn_layers.attach_join_plans` / `models.layers.attach_spiking_ffn_plans`)
+    and reuses them across requests.
     """
-    interpret = (not _on_tpu()) if interpret is None else interpret
     M, K = a_packed.shape
     N = b.shape[1]
     bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
-    ap = np.asarray(_pad_to(jnp.asarray(a_packed), (bm_, bk_)))
-    bp = np.asarray(_pad_to(jnp.asarray(b), (bk_, bn_)))
-    payload, kidx, vidx, cnt, jmax = build_block_join(ap, bp, bm_, bk_, bn_)
-    c, u = _k.ftp_spmm_bsr(
-        jnp.asarray(ap),
-        jnp.asarray(payload),
-        jnp.asarray(kidx),
-        jnp.asarray(vidx),
-        jnp.asarray(cnt),
-        bp.shape[1],
-        T,
-        v_th,
-        tau,
-        bm=bm_,
-        bk=bk_,
-        bn=bn_,
-        fuse_lif=fuse_lif,
-        interpret=interpret,
+    plan = build_weight_plan(np.asarray(b), bk=bk_, bn=bn_)
+    return ftp_spmm_bsr(
+        jnp.asarray(a_packed), plan, T, v_th, tau,
+        bm=bm_, n_out=N, fuse_lif=fuse_lif, interpret=interpret,
     )
-    if fuse_lif:
-        return c[:M, :N], u[:M, :N]
-    return c[:, :M, :N], u[:M, :N]

@@ -44,7 +44,17 @@ def main(argv=None):
                     help="pad prefill batches to a multiple of this")
     ap.add_argument("--spiking-packed", action="store_true",
                     help="spiking archs: packed uint32 FFN inference path")
+    ap.add_argument("--spiking", action="store_true",
+                    help="swap the arch's MLP blocks for dual-sparse "
+                         "spiking FFNs (paper workload)")
+    ap.add_argument("--weight-density", type=float, default=0.3,
+                    help="LTH density for --spiking (plans built at load)")
+    ap.add_argument("--no-dual-sparse", action="store_true",
+                    help="opt out of the dual-sparse BSR serving path "
+                         "(dense-weight packed kernels instead)")
     args = ap.parse_args(argv)
+
+    import dataclasses
 
     from repro.configs import get_config, smoke_variant
     from repro.models.registry import build_model
@@ -53,6 +63,12 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    if args.spiking:
+        cfg = dataclasses.replace(
+            cfg, spiking_ffn=True,
+            spiking_weight_density=args.weight_density,
+        )
+        args.spiking_packed = True
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
     model = build_model(cfg)
@@ -70,6 +86,7 @@ def main(argv=None):
         max_slots=args.max_slots or args.batch,
         batch_align=args.batch_align,
         spiking_packed=args.spiking_packed,
+        dual_sparse=False if args.no_dual_sparse else None,
     )
     outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()

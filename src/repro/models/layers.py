@@ -234,6 +234,31 @@ def attn_apply(
 def mlp_init(key, cfg: ArchConfig, d_ff=None) -> dict:
     D, F = cfg.d_model, d_ff or cfg.d_ff
     ks = jax.random.split(key, 3)
+    if cfg.spiking_ffn:
+        # Spiking FFN: two GEMMs only (no gate), whatever the host arch's
+        # activation is.  LTH pruning happens ONCE, here: the stored params
+        # carry hard zeros for their whole lifetime (train, serve,
+        # checkpoints) and forward passes never re-prune — the load-time
+        # weight join plans of the dual-sparse serving path are built from
+        # exactly these zeros.  The pattern is rounded to the plan's MXU
+        # block grid (whole zero blocks the join can skip) while keeping the
+        # exact element density; non-divisible shapes fall back to
+        # unstructured hard zeros.
+        from repro.core.snn_layers import prune_by_magnitude
+        from repro.kernels.join_plan import pick_plan_blocks
+
+        p = {
+            "wu": dense_init(ks[0], (D, F), _dt(cfg)),
+            "wd": dense_init(ks[1], (F, D), _dt(cfg)),
+        }
+        if cfg.spiking_weight_density < 1.0:
+            d = cfg.spiking_weight_density
+            for name in ("wu", "wd"):
+                K, N = p[name].shape
+                bk, bn = pick_plan_blocks(K, N)
+                block = (bk, bn) if (K % bk == 0 and N % bn == 0) else None
+                p[name] = prune_by_magnitude(p[name], d, block=block)
+        return p
     if cfg.act in ("swiglu", "geglu"):
         return {
             "wg": dense_init(ks[0], (D, F), _dt(cfg)),
@@ -247,7 +272,7 @@ def mlp_init(key, cfg: ArchConfig, d_ff=None) -> dict:
 
 
 def mlp_axes(cfg: ArchConfig) -> dict:
-    if cfg.act in ("swiglu", "geglu"):
+    if cfg.act in ("swiglu", "geglu") and not cfg.spiking_ffn:
         return {
             "wg": ("d_model", "d_ff"),
             "wu": ("d_model", "d_ff"),
@@ -275,21 +300,73 @@ def get_spiking_ffn_mode() -> str:
     return _spiking_ffn_mode
 
 
+def attach_spiking_ffn_plans(params: dict, cfg: ArchConfig) -> dict:
+    """Load-time step of the dual-sparse serving path for the arch zoo.
+
+    Walks the param tree, finds every spiking-FFN weight pair (stacked
+    (L, K, N) for scanned layer stacks, or plain (K, N)), asserts the
+    prune-once density contract, and attaches per-layer `WeightJoinPlan`s
+    (``plan_in`` / ``plan_out``).  Stacked layers get `stack_plans`-padded
+    plans with a leading layer axis, so they scan with `jax.lax.scan`
+    exactly like the weights.  Host work happens once here; every
+    subsequent forward is device-only.
+    """
+    if not cfg.spiking_ffn:
+        return params
+    import numpy as np
+
+    from repro.core.snn_layers import assert_weight_density
+    from repro.kernels.join_plan import build_weight_plan, stack_plans
+
+    ct = _ct(cfg)
+
+    def plans_for(w):
+        # payload carries the compute-dtype cast the apply path uses, so the
+        # kernel contracts bit-identical values to the dense jnp path
+        w = np.asarray(jnp.asarray(w).astype(ct))
+        if w.ndim == 2:
+            return build_weight_plan(w)
+        return stack_plans([build_weight_plan(w[l]) for l in range(w.shape[0])])
+
+    def prepare(node):
+        wu, wd = node["wu"], node["wd"]
+        if cfg.spiking_weight_density < 1.0:
+            assert_weight_density(wu, cfg.spiking_weight_density)
+            assert_weight_density(wd, cfg.spiking_weight_density)
+        return dict(node, plan_in=plans_for(wu), plan_out=plans_for(wd))
+
+    def walk(node):
+        if isinstance(node, dict):
+            if {"wu", "wd"} <= node.keys() and not {"wg", "router"} & node.keys():
+                return prepare(node)
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
 def mlp_apply(p, x, cfg: ArchConfig):
     xc = x.astype(_ct(cfg))
     if cfg.spiking_ffn:
         # Paper technique (DESIGN.md §4): dual-sparse spiking FFN under the
-        # FTP dataflow, surrogate-gradient differentiable.
+        # FTP dataflow, surrogate-gradient differentiable.  Weights carry
+        # their LTH hard zeros from mlp_init; in packed-inference mode a
+        # serving-time `attach_spiking_ffn_plans` adds per-layer join plans
+        # that route both GEMMs through the dual-sparse BSR kernel.
         from repro.core.snn_layers import SpikingConfig, spiking_ffn_apply
 
         scfg = SpikingConfig(
             T=cfg.spiking_T, weight_density=cfg.spiking_weight_density
         )
         wu, wd = p["wu"], p["wd"]
+        plans = None
+        if _spiking_ffn_mode == "infer" and "plan_in" in p:
+            plans = (p["plan_in"], p["plan_out"])
         y = spiking_ffn_apply(
             {"w_in": wu.astype(_ct(cfg)), "w_out": wd.astype(_ct(cfg))},
             xc, scfg, mode=_spiking_ffn_mode,
             use_kernel=jax.default_backend() == "tpu",
+            plans=plans,
         )
         return y.astype(x.dtype)
     if cfg.act == "swiglu":

@@ -31,6 +31,15 @@ a `PackedSpikeCache` of each slot's direct-encoded current token between
 steps — spike-domain telemetry (sparsity, packed-vs-unpacked bytes) at the
 cost of one small jit'd encode per decode step; spike-stream pipelines
 consume the same packed format via `snn_layers.spiking_ffn_apply_packed`.
+
+When the arch is LTH-pruned (`spiking_weight_density < 1`), the packed path
+defaults to DUAL-sparse: engine construction attaches per-layer weight join
+plans (`models.layers.attach_spiking_ffn_plans` — host work, once) and every
+spiking FFN GEMM runs through the BSR kernel, which joins the static weight
+plan with a device-computed spike activity map in-kernel.  Requests only
+change spike values, never shapes, so serving steps hit the jit cache —
+no per-request host join and no recompilation (`dual_sparse=False` opts
+back into the dense-weight packed path).
 """
 from __future__ import annotations
 
@@ -84,6 +93,7 @@ class Engine:
         eos_id: int | None = None,
         merge_cohorts: bool = True,
         spiking_packed: bool = False,
+        dual_sparse: bool | None = None,
     ):
         cfg = model.cfg
         if not cfg.supports_decode or cfg.encoder_only:
@@ -105,6 +115,17 @@ class Engine:
         self.results: dict[int, RequestState] = {}
         self._axes = model.cache_axes()
         self.spiking_packed = bool(spiking_packed and cfg.spiking_ffn)
+        # Dual-sparse is the DEFAULT packed-spike serving path for pruned
+        # spiking archs: at load time (here, once) the LTH hard zeros in the
+        # stored params become per-layer weight join plans; per-request only
+        # the spike side of the join runs, on device, inside the kernel.
+        if dual_sparse is None:
+            dual_sparse = cfg.spiking_weight_density < 1.0
+        self.spiking_dual_sparse = bool(self.spiking_packed and dual_sparse)
+        if self.spiking_dual_sparse:
+            from repro.models.layers import attach_spiking_ffn_plans
+
+            self.params = attach_spiking_ffn_plans(self.params, cfg)
         # cache donation: each call consumes its cache and returns the
         # successor, so the buffer can be updated in place on accelerators
         self._prefill = self._spiking_scope(
@@ -321,4 +342,5 @@ class Engine:
             s["spike_bytes_unpacked_f32_per_slot"] = (
                 self.cfg.d_model * self.cfg.spiking_T * 4
             )
+            s["dual_sparse"] = self.spiking_dual_sparse
         return s

@@ -69,6 +69,159 @@ def test_bsr_dual_sparse_matches_oracle(T, M, K, N, fuse):
         np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# Dual-sparse plan path: load-time WeightJoinPlan + device-side spike join.
+# ---------------------------------------------------------------------------
+
+W_DENSITIES = [1.0, 0.3, 0.02]
+
+
+@pytest.mark.parametrize("w_density", W_DENSITIES)
+@pytest.mark.parametrize("fuse", [True, False])
+def test_bsr_plan_parity_vs_dense_reference(w_density, fuse):
+    """Plan-based BSR kernel == dense oracle across weight densities
+    (the acceptance sweep: dense, paper-ish, and extreme LTH density)."""
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(int(w_density * 100) + fuse)
+    T, M, K, N = 4, 48, 160, 96
+    packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=w_density)
+    plan = build_weight_plan(w)
+    out, u = ops.ftp_spmm_bsr(
+        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    )
+    uw_ref = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    if fuse:
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(uw_ref[0]))
+        np.testing.assert_allclose(
+            np.asarray(u), np.asarray(uw_ref[1]), rtol=1e-5, atol=1e-5
+        )
+    else:
+        want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
+
+
+@pytest.mark.parametrize("w_density", W_DENSITIES)
+@pytest.mark.parametrize("fuse", [True, False])
+def test_bsr_plan_batched_matches_per_sample(w_density, fuse):
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(int(w_density * 7) + fuse)
+    T, B, M, K, N = 4, 3, 16, 64, 32
+    packed = np.stack(
+        [_mk(rng, T, M, K, N, w_density=w_density)[0] for _ in range(B)]
+    )
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w[rng.random((K, N)) > w_density] = 0
+    plan = build_weight_plan(w)
+    out, u = ops.ftp_spmm_bsr_batched(
+        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    )
+    for i in range(B):
+        if fuse:
+            cw, uw = ref.ftp_spmm_fused_lif_ref(
+                jnp.asarray(packed[i]), jnp.asarray(w), T
+            )
+            np.testing.assert_array_equal(np.asarray(out[i]), np.asarray(cw))
+            np.testing.assert_allclose(
+                np.asarray(u[i]), np.asarray(uw), rtol=1e-5, atol=1e-5
+            )
+        else:
+            want = ref.ftp_spmm_ref(jnp.asarray(packed[i]), jnp.asarray(w), T)
+            np.testing.assert_allclose(
+                np.asarray(out[:, i]), np.asarray(want), rtol=1e-5, atol=1e-5
+            )
+
+
+def test_bsr_plan_all_silent_spikes():
+    """An all-silent packed input (every word zero) must produce exact
+    zeros through the skip path (no block ever fires the MXU)."""
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(13)
+    w = rng.normal(size=(64, 32)).astype(np.float32)
+    w[rng.random((64, 32)) > 0.3] = 0
+    plan = build_weight_plan(w)
+    a = jnp.zeros((16, 64), jnp.uint32)
+    c, u = ops.ftp_spmm_bsr(a, plan, 4, n_out=32)
+    assert (np.asarray(c) == 0).all() and (np.asarray(u) == 0).all()
+    o, u2 = ops.ftp_spmm_bsr(a, plan, 4, n_out=32, fuse_lif=False)
+    assert (np.asarray(o) == 0).all()
+    assert (np.asarray(u2) == 0).all()  # unfused U is defined as zeros
+
+
+def test_bsr_no_retrace_across_spike_activity():
+    """The serving contract: a second call with DIFFERENT spike activity
+    (same shapes) is a pure value change — zero retrace/recompile."""
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(17)
+    w = rng.normal(size=(96, 64)).astype(np.float32)
+    w[rng.random((96, 64)) > 0.3] = 0
+    plan = build_weight_plan(w)
+    shapes = [(16, 96), (3, 8, 96)]  # unbatched + batched entries
+    for shape in shapes:
+        a1 = jnp.asarray((rng.random(shape) < 0.5).astype(np.uint32))
+        a2 = jnp.asarray((rng.random(shape) < 0.05).astype(np.uint32))
+        a3 = jnp.zeros(shape, jnp.uint32)  # even all-silent: same trace
+        call = ops.ftp_spmm_bsr if len(shape) == 2 else ops.ftp_spmm_bsr_batched
+        jax.block_until_ready(call(a1, plan, 4)[0])  # warm-up (may trace)
+        before = ops.BSR_TRACE_COUNT
+        jax.block_until_ready(call(a2, plan, 4)[0])
+        jax.block_until_ready(call(a3, plan, 4)[0])
+        assert ops.BSR_TRACE_COUNT == before, "spike activity caused a retrace"
+
+
+def test_build_block_join_vectorized_matches_bruteforce():
+    """The vectorized residual host join must equal the naive per-tile
+    double loop it replaced."""
+    from repro.core.packing import block_activity_map
+
+    rng = np.random.default_rng(23)
+    T, M, K, N = 4, 32, 96, 64
+    bm, bk, bn = 8, 16, 16
+    packed, w = _mk(rng, T, M, K, N, density=0.05, w_density=0.1)
+    payload, kidx, vidx, cnt, jmax = ops.build_block_join(packed, w, bm, bk, bn)
+
+    _, idx, bnz = ops.build_block_csr(w, bk, bn)
+    a_act = np.asarray(block_activity_map(jnp.asarray(packed), bm, bk))
+    joined = a_act[:, None, :] & bnz.T[None, :, :]
+    assert jmax == max(1, int(joined.sum(axis=2).max()))
+    for i in range(M // bm):
+        for j in range(N // bn):
+            ks = np.nonzero(joined[i, j])[0]
+            assert cnt[i, j] == len(ks)
+            np.testing.assert_array_equal(kidx[i, j, : len(ks)], ks)
+            np.testing.assert_array_equal(vidx[i, j, : len(ks)], idx[ks, j])
+            assert (kidx[i, j, len(ks):] == 0).all()
+            assert (vidx[i, j, len(ks):] == 0).all()
+
+
+def test_stack_plans_scan_roundtrip():
+    """Stacked per-layer plans (ragged nnzb/jmax zero-padded) produce the
+    same kernel results as their unstacked originals."""
+    from repro.kernels.join_plan import build_weight_plan, stack_plans
+
+    rng = np.random.default_rng(29)
+    K, N, T = 64, 32, 4
+    ws = []
+    for d in (0.5, 0.05):
+        w = rng.normal(size=(K, N)).astype(np.float32)
+        w[rng.random((K, N)) > d] = 0
+        ws.append(w)
+    plans = [build_weight_plan(w) for w in ws]
+    stacked = stack_plans(plans)
+    a = jnp.asarray((rng.random((16, K)) < 0.3).astype(np.uint32))
+    for l, (w, plan) in enumerate(zip(ws, plans)):
+        per_layer = jax.tree.map(lambda x: x[l], stacked)
+        c0, u0 = ops.ftp_spmm_bsr(a, plan, T, n_out=N)
+        c1, u1 = ops.ftp_spmm_bsr(a, per_layer, T, n_out=N)
+        np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
+        np.testing.assert_array_equal(np.asarray(u0), np.asarray(u1))
+
+
 def test_bsr_all_zero_weights():
     rng = np.random.default_rng(7)
     packed, w = _mk(rng, 4, 32, 64, 32)

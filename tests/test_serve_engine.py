@@ -287,6 +287,52 @@ def test_engine_spiking_packed_path_token_identical():
     assert 0.0 <= s["spike_sparsity"] <= 1.0
 
 
+def test_engine_dual_sparse_serving_path():
+    """Serving a weight_density=0.3 spiking-FFN arch must (a) prune ONCE at
+    init (stored params carry hard zeros), (b) default to the dual-sparse
+    BSR kernel path with load-time join plans, (c) emit the same tokens as
+    the dense-weight packed path, and (d) never retrace after warm-up even
+    as spike activity changes across requests — the no-per-request-host-join
+    contract."""
+    from repro.kernels import ops
+    from repro.models import layers as model_layers
+
+    cfg, model, params = _model(
+        "llama3_2_1b", spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=0.3,
+    )
+    wu = np.asarray(params["layers"]["mlp"]["wu"])
+    assert abs(float((wu != 0).mean()) - 0.3) < 0.05  # pruned at init
+    prompts = _prompts(cfg, [12, 12, 12], seed=7)
+    try:
+        ref = Engine(
+            model, params, max_len=24, max_slots=4,
+            spiking_packed=True, dual_sparse=False,
+        )
+        got_ref = ref.generate_batch(prompts, 6)
+        assert not ref.spiking_dual_sparse
+
+        engine = Engine(
+            model, params, max_len=24, max_slots=4, spiking_packed=True,
+        )
+        assert engine.spiking_dual_sparse  # default for density < 1
+        assert "plan_in" in engine.params["layers"]["mlp"]
+        got = engine.generate_batch(prompts, 6)
+        warm = ops.BSR_TRACE_COUNT
+        assert warm > 0  # the BSR kernel path actually ran
+        # new requests = new spike activity; shapes are identical -> the
+        # jit cache must be hit (zero new traces)
+        engine.generate_batch(_prompts(cfg, [12, 12, 12], seed=8), 6)
+        assert ops.BSR_TRACE_COUNT == warm
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    for a, b in zip(got_ref, got):
+        np.testing.assert_array_equal(a, b)
+    s = engine.summary()
+    assert s["dual_sparse"] is True
+    assert s["n_requests"] == 6
+
+
 def test_engine_rejects_encoder_only():
     cfg, model, params = _model("llama3_2_1b")
     bad = dataclasses.replace(cfg, supports_decode=False)
