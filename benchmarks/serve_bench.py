@@ -109,10 +109,69 @@ def bench_spiking_dual_sparse(
     return out
 
 
+def bench_sharded_serving(
+    mesh_spec="data,model", weight_density=0.3, batch=4, prompt_len=16, gen=8
+) -> dict:
+    """Sharded-vs-single rows: the dual-sparse spiking engine on a
+    (data, model) device mesh vs the same engine on one device.
+
+    On fake CPU devices wall-time is a plumbing signal, not a speedup claim
+    (every "device" shares the same silicon) — the row the JSON must hold is
+    ``token_identical: true``: mesh serving is bit-for-bit the single-device
+    engine, with the join plans column-sharded across the model axis.
+    """
+    from repro.configs import get_config, smoke_variant
+    from repro.models import layers as model_layers
+    from repro.models.registry import build_model
+    from repro.serve import Engine, make_serve_mesh, mesh_summary
+    from repro.serve.metrics import EngineMetrics
+
+    out = {"mesh_spec": mesh_spec, "weight_density": weight_density,
+           "batch": batch, "prompt_len": prompt_len, "gen": gen,
+           "n_devices": jax.device_count()}
+    mesh = make_serve_mesh(mesh_spec)
+    if mesh is None:
+        out["skipped"] = "single device (run with --fake-devices 8)"
+        return out
+    out.update(mesh_summary(mesh))
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg, spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=weight_density,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    tokens = {}
+    try:
+        for key, m in (("single_device", None), ("sharded", mesh)):
+            engine = Engine(
+                model, params, max_len=prompt_len + gen, max_slots=batch,
+                spiking_packed=True, mesh=m,
+            )
+            engine.generate_batch(prompts, gen)   # warm-up: jit compiles
+            engine.metrics = EngineMetrics()
+            tokens[key] = engine.generate_batch(prompts, gen)
+            out[f"{key}_tok_s"] = engine.summary()["throughput_tok_s"]
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    out["token_identical"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(tokens["single_device"], tokens["sharded"])
+    )
+    return out
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
-    rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row"])
+    rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
+                "--no-sharded-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -140,7 +199,16 @@ def main(argv=None):
                     help="skip writing BENCH_serve.json")
     ap.add_argument("--no-spiking-row", action="store_true",
                     help="skip the dual-sparse spiking-FFN serving row")
+    ap.add_argument("--no-sharded-row", action="store_true",
+                    help="skip the sharded-vs-single mesh serving row")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force N fake XLA host devices (before jax init) "
+                         "so the sharded row runs on CPU")
     args = ap.parse_args(argv)
+    if args.fake_devices:
+        from repro.launch.mesh import force_fake_devices
+
+        force_fake_devices(args.fake_devices)
     batches = tuple(int(b) for b in args.batches.split(","))
 
     print(f"serve bench: {args.arch} prompt={args.prompt_len} gen={args.gen} "
@@ -164,6 +232,16 @@ def main(argv=None):
               f"{sp['dense_weight_tok_s']:.1f} tok/s "
               f"({sp['dual_sparse_speedup']:.2f}x, "
               f"token_identical={sp['token_identical']})")
+    if not args.no_sharded_row:
+        sh = bench_sharded_serving()
+        report["sharded_serving"] = sh
+        if "skipped" in sh:
+            print(f"  sharded row skipped: {sh['skipped']}")
+        else:
+            print(f"  sharded {sh['mesh']}: {sh['sharded_tok_s']:.1f} tok/s "
+                  f"vs single-device {sh['single_device_tok_s']:.1f} tok/s "
+                  f"(token_identical={sh['token_identical']}; fake-device "
+                  "wall times are plumbing signals, not speedups)")
     if not args.no_write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)

@@ -49,6 +49,20 @@ def pick_plan_blocks(K: int, N: int, bk: int = BK, bn: int = BN) -> tuple[int, i
     return min(bk, max(8, K)), min(bn, max(128, N) if N >= 128 else N)
 
 
+def pick_shard_blocks(
+    K: int, N: int, shards: int, bk: int = BK, bn: int = BN
+) -> tuple[int, int]:
+    """Block sizes for a plan that will be column-split over ``shards``
+    model shards: shrink ``bn`` (halving, floor 8) until the column-block
+    count reaches ``shards``, so `split_plan` gets whole blocks to deal out
+    with minimal zero-padding.  Tiny serving models (d_ff < shards * 128)
+    would otherwise collapse to a single column block that cannot shard."""
+    bk, bn = pick_plan_blocks(K, N, bk, bn)
+    while bn > 8 and -(-N // bn) < shards:
+        bn = max(8, bn // 2)
+    return bk, bn
+
+
 @dataclass(frozen=True)
 class WeightJoinPlan:
     """Static weight-side half of the block-level inner join.
@@ -109,16 +123,26 @@ class WeightJoinPlan:
         return float(np.asarray(self.bmap, bool).mean())
 
 
+@dataclass(frozen=True)
+class ShardedWeightJoinPlan(WeightJoinPlan):
+    """Marker type for column-split plans (`shard_plan`): the innermost
+    extra leading axis deals self-contained column slabs out to model
+    shards.  A distinct pytree node (preserved by `lax.scan` slicing and
+    `tree.map`) so the kernel wrapper dispatches on TYPE, not on rank —
+    a layer-stacked plain plan can never be mistaken for a sharded one.
+    """
+
+
 def _plan_flatten(p: WeightJoinPlan):
     return (p.payload, p.kidx, p.vidx, p.cnt, p.bmap), None
 
 
-def _plan_unflatten(_, children):
-    return WeightJoinPlan(*children)
-
-
 jax.tree_util.register_pytree_node(
-    WeightJoinPlan, _plan_flatten, _plan_unflatten
+    WeightJoinPlan, _plan_flatten, lambda _, c: WeightJoinPlan(*c)
+)
+jax.tree_util.register_pytree_node(
+    ShardedWeightJoinPlan, _plan_flatten,
+    lambda _, c: ShardedWeightJoinPlan(*c),
 )
 
 
@@ -144,16 +168,11 @@ def build_block_csr(b: np.ndarray, bk: int, bn: int):
     return payload, idx, nz
 
 
-def build_weight_plan(
+def _build_weight_plan_host(
     w: np.ndarray, *, bk: int | None = None, bn: int | None = None
 ) -> WeightJoinPlan:
-    """Build the load-time join plan for one (K, N) weight matrix.
-
-    Pads K/N up to block multiples, compresses to block-CSR, and derives the
-    per-column-block join lists with vectorized numpy (no Python loop over
-    blocks) — offline plan building stays linear in the number of non-zero
-    blocks even for big layers.
-    """
+    """`build_weight_plan` with NUMPY leaves — the host-side intermediate
+    the sharded builder splits without a device round trip."""
     w = np.asarray(w)
     K, N = w.shape
     if bk is None or bn is None:
@@ -178,12 +197,107 @@ def build_weight_plan(
     kidx[jb, slot] = kb.astype(np.int32)
     vidx[jb, slot] = idx[kb, jb]
     return WeightJoinPlan(
-        payload=jnp.asarray(payload),
-        kidx=jnp.asarray(kidx),
-        vidx=jnp.asarray(vidx),
-        cnt=jnp.asarray(cnt),
-        bmap=jnp.asarray(nz),
+        payload=payload, kidx=kidx, vidx=vidx, cnt=cnt, bmap=nz
     )
+
+
+def build_weight_plan(
+    w: np.ndarray, *, bk: int | None = None, bn: int | None = None
+) -> WeightJoinPlan:
+    """Build the load-time join plan for one (K, N) weight matrix.
+
+    Pads K/N up to block multiples, compresses to block-CSR, and derives the
+    per-column-block join lists with vectorized numpy (no Python loop over
+    blocks) — offline plan building stays linear in the number of non-zero
+    blocks even for big layers.
+    """
+    return jax.tree.map(jnp.asarray, _build_weight_plan_host(w, bk=bk, bn=bn))
+
+
+def build_sharded_weight_plan(w: np.ndarray, shards: int) -> WeightJoinPlan:
+    """Build a plan ready for `split_plan(plan, shards)`: shard-aware block
+    sizes (`pick_shard_blocks`) plus zero-column padding so the column-block
+    count divides ``shards``.  Pad columns become all-zero blocks with
+    ``cnt == 0`` — dealt to the tail shard, they skip the kernel entirely.
+
+    Leaves stay NUMPY (the whole build -> split -> stack pipeline is host
+    work; arrays only move to device when the stacked plan is placed)."""
+    w = np.asarray(w)
+    K, N = w.shape
+    bk, bn = pick_shard_blocks(K, N, shards)
+    nnb = -(-N // bn)
+    nnb += (-nnb) % shards
+    pad = nnb * bn - N
+    if pad:
+        w = np.pad(w, ((0, 0), (0, pad)))
+    return _build_weight_plan_host(w, bk=bk, bn=bn)
+
+
+def split_plan(plan: WeightJoinPlan, parts: int) -> list[WeightJoinPlan]:
+    """Split one plan into ``parts`` self-contained plans over contiguous
+    output-column-block slabs (the model-parallel decomposition of the
+    weight side of the join).
+
+    Each sub-plan carries only the payload blocks its own columns join
+    with, re-indexed locally, so every model shard holds 1/``parts`` of the
+    weight blocks (plus per-slab padding) and can run the BSR kernel on its
+    slab independently — concatenating the slab outputs in order
+    reconstructs the unsplit result exactly (each output column's full-K
+    contraction happens inside exactly one shard; there is no cross-shard
+    reduction, which is what keeps sharded serving token-identical).
+
+    ``plan.nnb`` must be divisible by ``parts`` (build the plan with
+    `pick_shard_blocks` / pad N up so it is).  Host-side numpy, load time.
+    """
+    nnb = plan.nnb
+    if parts < 1 or nnb % parts:
+        raise ValueError(f"cannot split {nnb} column blocks into {parts} slabs")
+    if parts == 1:
+        return [plan]
+    per = nnb // parts
+    kidx = np.asarray(plan.kidx)
+    vidx = np.asarray(plan.vidx)
+    cnt = np.asarray(plan.cnt)
+    bmap = np.asarray(plan.bmap)
+    payload = np.asarray(plan.payload)
+    subs = []
+    for s in range(parts):
+        sl = slice(s * per, (s + 1) * per)
+        k_s, v_s, c_s = kidx[sl], vidx[sl], cnt[sl]
+        live = np.arange(k_s.shape[1])[None, :] < c_s[:, None]
+        used = np.unique(v_s[live])
+        if used.size == 0:  # all-zero slab: keep one dummy payload block
+            pay = np.zeros((1,) + payload.shape[1:], payload.dtype)
+            v_new = np.zeros_like(v_s)
+        else:
+            remap = np.zeros(payload.shape[0], np.int32)
+            remap[used] = np.arange(used.size, dtype=np.int32)
+            pay = payload[used]
+            v_new = np.where(live, remap[v_s], 0).astype(np.int32)
+        jm = max(1, int(c_s.max()))
+        # numpy leaves on purpose: splitting is host work; `stack_plans`
+        # (jnp.stack) moves the final stacked plan to device in one step
+        subs.append(WeightJoinPlan(
+            payload=pay,
+            kidx=np.ascontiguousarray(k_s[:, :jm]),
+            vidx=np.ascontiguousarray(v_new[:, :jm]),
+            cnt=c_s,
+            bmap=np.ascontiguousarray(bmap[:, sl]),
+        ))
+    return subs
+
+
+def shard_plan(plan: WeightJoinPlan, shards: int) -> "ShardedWeightJoinPlan":
+    """`split_plan` + `stack_plans`: one plan whose leading axis deals the
+    column slabs out to ``shards`` model shards (place it with
+    ``NamedSharding(mesh, P('model', ...))`` and consume it through the
+    shard_map entry `ops.ftp_spmm_bsr` dispatches to under a serve mesh).
+
+    Returned as `ShardedWeightJoinPlan` so the shard axis is carried by
+    TYPE: layer-stacking (`stack_plans`) and `lax.scan` slicing preserve
+    the node type, and the kernel wrapper never has to rank-sniff."""
+    p = stack_plans(split_plan(plan, shards))
+    return ShardedWeightJoinPlan(p.payload, p.kidx, p.vidx, p.cnt, p.bmap)
 
 
 def stack_plans(plans: list[WeightJoinPlan]) -> WeightJoinPlan:
@@ -200,7 +314,9 @@ def stack_plans(plans: list[WeightJoinPlan]) -> WeightJoinPlan:
     geo = {(p.bk, p.bn, p.nkb, p.nnb) for p in plans}
     if len(geo) != 1:
         raise ValueError(f"cannot stack plans with differing geometry {geo}")
-    nnzb = max(p.payload.shape[0] for p in plans)
+    # negative axes: valid both for per-layer plans and for plans that
+    # already carry a model-shard stacking axis (shard_plan output)
+    nnzb = max(p.payload.shape[-3] for p in plans)
     jmax = max(p.jmax for p in plans)
 
     def pad_to(x, size, axis):
@@ -211,10 +327,11 @@ def stack_plans(plans: list[WeightJoinPlan]) -> WeightJoinPlan:
         widths[axis] = (0, pad)
         return jnp.pad(x, widths)
 
-    return WeightJoinPlan(
-        payload=jnp.stack([pad_to(p.payload, nnzb, 0) for p in plans]),
-        kidx=jnp.stack([pad_to(p.kidx, jmax, 1) for p in plans]),
-        vidx=jnp.stack([pad_to(p.vidx, jmax, 1) for p in plans]),
+    cls = type(plans[0])  # preserve ShardedWeightJoinPlan through stacking
+    return cls(
+        payload=jnp.stack([pad_to(p.payload, nnzb, -3) for p in plans]),
+        kidx=jnp.stack([pad_to(p.kidx, jmax, -1) for p in plans]),
+        vidx=jnp.stack([pad_to(p.vidx, jmax, -1) for p in plans]),
         cnt=jnp.stack([p.cnt for p in plans]),
         bmap=jnp.stack([p.bmap for p in plans]),
     )

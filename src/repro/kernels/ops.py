@@ -9,17 +9,22 @@ join ON DEVICE — no host work and no retrace across requests
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
 from repro.core.packing import block_activity_map
 
 from . import ftp_spmm as _k
 from .join_plan import (
+    ShardedWeightJoinPlan,
     WeightJoinPlan,
     build_block_csr,
     build_weight_plan,
@@ -29,6 +34,48 @@ from .join_plan import (
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Serve-mesh context: the serving engine scopes a (data, model) mesh around
+# its jit'd prefill/decode calls (read at TRACE time, like the spiking-FFN
+# mode).  Under an active mesh, `ftp_spmm_bsr` dispatches plans that carry a
+# leading model-shard axis (join_plan.shard_plan) through a shard_map whose
+# row axis is `data` (request batch) and whose column axis is `model` (plan
+# column slabs) — each model shard joins only its own slab of the static
+# weight plan against the device-local spike activity map.
+# ---------------------------------------------------------------------------
+
+_SERVE_MESH = None
+
+
+def set_serve_mesh(mesh) -> None:
+    """Install (or clear, with None) the serving mesh the sharded kernel
+    entry points close over."""
+    global _SERVE_MESH
+    _SERVE_MESH = mesh
+
+
+def get_serve_mesh():
+    return _SERVE_MESH
+
+
+@contextlib.contextmanager
+def serve_mesh_scope(mesh):
+    prev = _SERVE_MESH
+    set_serve_mesh(mesh)
+    try:
+        yield mesh
+    finally:
+        set_serve_mesh(prev)
+
+
+def _row_axis(mesh, M: int) -> str | None:
+    """Shard kernel rows over `data` when the row count divides the axis
+    (cohorts shrink as requests retire; non-divisible batches fall back to
+    replicated rows — a placement change only, never a numerics change)."""
+    dn = mesh.shape.get("data", 1)
+    return "data" if (dn > 1 and M % dn == 0) else None
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -134,6 +181,58 @@ def ftp_spmm_fused_lif_batched(
     return c.reshape(B, M, N), u.reshape(B, M, N)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("T", "bm", "bk", "bn", "interpret", "mesh")
+)
+def _spmm_sharded(a_packed, b, T, bm, bk, bn, interpret, mesh):
+    M = a_packed.shape[0]
+    row = _row_axis(mesh, M)
+
+    def body(a_loc, b_loc):
+        return ftp_spmm(a_loc, b_loc, T, bm=bm, bk=bk, bn=bn,
+                        interpret=interpret)
+
+    out = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(row, None), P(None, "model")),
+        out_specs=P(None, row, "model"),
+        check_rep=False,
+    )(a_packed, b)
+    # gather columns back to the canonical layout (see _bsr_call_sharded)
+    return jax.lax.with_sharding_constraint(
+        out, NamedSharding(mesh, P(None, row, None))
+    )
+
+
+def ftp_spmm_sharded(
+    a_packed, b, T: int, *, mesh=None,
+    bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None,
+):
+    """Mesh-parallel dense-weight FTP entry: weight columns on `model`,
+    spike rows on `data` (when divisible) — each shard runs the plain
+    kernel on its (row-block, column-slab) tile; the full-K contraction per
+    output element stays inside one shard, so the result equals the
+    unsharded `ftp_spmm` exactly.  Falls back to the single-device wrapper
+    when no mesh is active or the column count does not divide the model
+    axis.
+
+    The ENGINE's mesh path is the BSR plan entry above (dual-sparse is the
+    default for pruned spiking archs); this is the public mesh entry for
+    dense-weight packed pipelines (spike streams, offline experiments) that
+    call the kernels directly."""
+    mesh = get_serve_mesh() if mesh is None else mesh
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    if mesh is None:
+        return ftp_spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
+                        interpret=interpret)
+    mp = mesh.shape.get("model", 1)
+    if mp > 1 and b.shape[1] % mp:
+        return ftp_spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
+                        interpret=interpret)
+    return _spmm_sharded(a_packed, b, T, bm, bk, bn, interpret, mesh)
+
+
 # ---------------------------------------------------------------------------
 # Dual-sparse path: load-time weight join plan + device-side spike join.
 #
@@ -188,6 +287,63 @@ def _bsr_call(
     return c[:, :M, :n_out], u[:M, :n_out]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "T", "v_th", "tau", "bm", "n_out", "fuse_lif", "interpret", "mesh",
+    ),
+)
+def _bsr_call_sharded(
+    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret, mesh
+):
+    """shard_map entry for the BSR kernel: plan column slabs on `model`,
+    spike rows on `data` (when divisible).
+
+    Each (data, model) shard pads its local rows, computes its own spike
+    block-activity map, and joins it against its own k/n-block slab of the
+    static plan — a full-K contraction per output column inside one shard,
+    so concatenating slabs equals the unsharded kernel bit-for-bit (no
+    cross-shard reduction).  Per-request spike activity stays a pure value
+    change: same shapes, same shardings, zero retrace.
+    """
+    global BSR_TRACE_COUNT
+    BSR_TRACE_COUNT += 1  # trace-time side effect, by design (see _bsr_call)
+    M = a_packed.shape[0]
+    row = _row_axis(mesh, M)
+
+    def body(a_loc, plan_loc):
+        plan_l = jax.tree.map(lambda x: x[0], plan_loc)
+        # caller-supplied bm is honored; default adapts to the LOCAL row
+        # count (rows are already divided over `data` here)
+        bm_l = min(_k.BM, max(8, a_loc.shape[0])) if bm is None else bm
+        return _bsr_call(
+            a_loc, plan_l, T, v_th, tau, bm_l, plan_l.n_padded, fuse_lif,
+            interpret,
+        )
+
+    c_spec = P(row, "model") if fuse_lif else P(None, row, "model")
+    c, u = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(row, None), P("model")),
+        out_specs=(c_spec, P(row, "model")),
+        check_rep=False,  # no replication rule for pallas_call
+    )(a_packed, plan)
+    # Gather the column slabs back to the canonical activation layout (rows
+    # on `data`, features replicated) RIGHT HERE: without this, the 'model'
+    # sharding of the hidden dim propagates into the residual stream (and,
+    # under lax.scan, into the layer carry), where GSPMD then partitions
+    # attention contractions with psum — reassociating bf16 sums and
+    # breaking the token-identity contract.
+    gather = lambda x, spec: jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec)
+    )
+    u = gather(u, P(row, None))[:, :n_out]
+    if fuse_lif:
+        return gather(c, P(row, None))[:, :n_out], u
+    return gather(c, P(None, row, None))[:, :, :n_out], u
+
+
 def ftp_spmm_bsr(
     a_packed,
     plan,
@@ -207,8 +363,31 @@ def ftp_spmm_bsr(
     ``fuse_lif`` else ((T, M, n_out) full sums, zeros) — without the LIF
     epilogue there are no membrane potentials.  Fully jit'd; per-request
     work is device-only.
+
+    Under an active serve mesh (`set_serve_mesh` / the engine's scope), a
+    plan carrying a leading model-shard axis (`join_plan.shard_plan`)
+    dispatches to the shard_map entry: each model shard joins its own
+    column slab of the static plan against the device-local activity map.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
+    mesh = get_serve_mesh()
+    if mesh is not None and isinstance(plan, ShardedWeightJoinPlan):
+        mp = mesh.shape.get("model", 1)
+        if plan.payload.ndim != 4:
+            raise ValueError(
+                "sharded dispatch needs a per-layer plan (payload rank 4); "
+                f"got rank {plan.payload.ndim} — slice the layer axis first"
+            )
+        if plan.payload.shape[0] != mp:
+            raise ValueError(
+                f"plan has {plan.payload.shape[0]} column slabs but mesh "
+                f"model axis is {mp}; build with join_plan.shard_plan(plan, {mp})"
+            )
+        n_out = mp * plan.n_padded if n_out is None else n_out
+        return _bsr_call_sharded(
+            a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret,
+            mesh,
+        )
     M = a_packed.shape[0]
     bm = min(_k.BM, max(8, M)) if bm is None else bm
     n_out = plan.n_padded if n_out is None else n_out

@@ -4,10 +4,37 @@ A FUNCTION (not module-level state) so importing never touches jax device
 initialization.  Single pod: 16x16 = 256 chips (data, model).  Multi-pod:
 2 pods x 256 = 512 chips with a leading `pod` axis (DCN between pods, ICI
 within).
+
+These are the TRAINING meshes (consumed by `repro.sharding`'s psum-TP
+rules).  SERVING meshes — same (data, model) axes, but paired with the
+reduction-free placement rules that keep engine output token-identical —
+are built by `repro.serve.sharding.make_serve_mesh` (`--mesh` in
+`launch/serve.py`), which also accepts device subsets and falls back to
+unsharded serving on one device.
 """
 from __future__ import annotations
 
+import os
+
 import jax
+
+
+def force_fake_devices(n: int) -> None:
+    """Force ``n`` fake XLA host devices for CPU-only mesh work.
+
+    Must run BEFORE the jax backend initializes (first device/computation
+    touch — module imports are safe).  First writer wins: a device count
+    already present in ``XLA_FLAGS`` (e.g. from the environment or
+    tests/conftest.py, which inlines the same splice because it runs before
+    any package import) is left alone.
+    """
+    if n <= 0:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}"
+        ).strip()
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -3,6 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
+Sharded serving (data/model-parallel over a device mesh; on CPU use fake
+XLA devices):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --spiking --mesh data,model --fake-devices 8 --batch 4 --gen 8
+
 Requests (`--batch` of them) are submitted to `repro.serve.Engine`, which
 batches prefills, merges decode cohorts, and reports TTFT / throughput.
 `generate` below is the original single-shot loop, kept as the reference
@@ -52,13 +58,26 @@ def main(argv=None):
     ap.add_argument("--no-dual-sparse", action="store_true",
                     help="opt out of the dual-sparse BSR serving path "
                          "(dense-weight packed kernels instead)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve mesh spec, e.g. 'data,model' (auto sizes), "
+                         "'data=4,model=2' or '4,2'; omitted = unsharded; "
+                         "single-device runs fall back automatically")
+    ap.add_argument("--fake-devices", type=int, default=0,
+                    help="force this many fake XLA host devices (must be "
+                         "set before the jax backend initializes; CPU-only "
+                         "mesh testing)")
     args = ap.parse_args(argv)
+
+    if args.fake_devices:
+        from repro.launch.mesh import force_fake_devices
+
+        force_fake_devices(args.fake_devices)
 
     import dataclasses
 
     from repro.configs import get_config, smoke_variant
     from repro.models.registry import build_model
-    from repro.serve import Engine
+    from repro.serve import Engine, make_serve_mesh
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -73,6 +92,12 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    mesh = make_serve_mesh(args.mesh) if args.mesh else None
+    if args.mesh and mesh is None:
+        print("mesh: single device — auto fallback to unsharded serving")
+    elif mesh is not None:
+        print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
+              f"devices ({jax.default_backend()})")
     rng = np.random.default_rng(0)
     prompts = [
         np.asarray(rng.integers(0, cfg.vocab, size=(args.prompt_len,)),
@@ -87,6 +112,7 @@ def main(argv=None):
         batch_align=args.batch_align,
         spiking_packed=args.spiking_packed,
         dual_sparse=False if args.no_dual_sparse else None,
+        mesh=mesh,
     )
     outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()

@@ -300,7 +300,9 @@ def get_spiking_ffn_mode() -> str:
     return _spiking_ffn_mode
 
 
-def attach_spiking_ffn_plans(params: dict, cfg: ArchConfig) -> dict:
+def attach_spiking_ffn_plans(
+    params: dict, cfg: ArchConfig, model_shards: int = 1
+) -> dict:
     """Load-time step of the dual-sparse serving path for the arch zoo.
 
     Walks the param tree, finds every spiking-FFN weight pair (stacked
@@ -310,23 +312,42 @@ def attach_spiking_ffn_plans(params: dict, cfg: ArchConfig) -> dict:
     plans with a leading layer axis, so they scan with `jax.lax.scan`
     exactly like the weights.  Host work happens once here; every
     subsequent forward is device-only.
+
+    ``model_shards > 1`` (mesh serving): each per-layer plan is column-split
+    into that many self-contained slabs (`join_plan.shard_plan`) stacked on
+    an extra axis — innermost, so a scanned layer stack slices to
+    (shards, ...) per layer.  `serve.sharding.place_plans` then deals the
+    slab axis out over the mesh's `model` axis, and `ops.ftp_spmm_bsr`
+    dispatches such plans through its shard_map entry.
     """
     if not cfg.spiking_ffn:
         return params
     import numpy as np
 
     from repro.core.snn_layers import assert_weight_density
-    from repro.kernels.join_plan import build_weight_plan, stack_plans
+    from repro.kernels.join_plan import (
+        build_sharded_weight_plan,
+        build_weight_plan,
+        shard_plan,
+        stack_plans,
+    )
 
     ct = _ct(cfg)
+
+    def one_plan(w2d):
+        if model_shards > 1:
+            return shard_plan(
+                build_sharded_weight_plan(w2d, model_shards), model_shards
+            )
+        return build_weight_plan(w2d)
 
     def plans_for(w):
         # payload carries the compute-dtype cast the apply path uses, so the
         # kernel contracts bit-identical values to the dense jnp path
         w = np.asarray(jnp.asarray(w).astype(ct))
         if w.ndim == 2:
-            return build_weight_plan(w)
-        return stack_plans([build_weight_plan(w[l]) for l in range(w.shape[0])])
+            return one_plan(w)
+        return stack_plans([one_plan(w[l]) for l in range(w.shape[0])])
 
     def prepare(node):
         wu, wd = node["wu"], node["wd"]

@@ -10,6 +10,7 @@ from .batching import (
 from .engine import Cohort, Engine
 from .metrics import EngineMetrics, RequestMetrics
 from .scheduler import AdmissionError, Request, RequestState, Scheduler
+from .sharding import make_serve_mesh, mesh_summary, parse_mesh_spec
 
 __all__ = [
     "AdmissionError",
@@ -25,5 +26,8 @@ __all__ = [
     "cache_batch_size",
     "cache_concat",
     "cache_take",
+    "make_serve_mesh",
+    "mesh_summary",
     "pad_batch",
+    "parse_mesh_spec",
 ]

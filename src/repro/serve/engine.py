@@ -40,6 +40,16 @@ plan with a device-computed spike activity map in-kernel.  Requests only
 change spike values, never shapes, so serving steps hit the jit cache —
 no per-request host join and no recompilation (`dual_sparse=False` opts
 back into the dense-weight packed path).
+
+``mesh`` (serve/sharding.py) runs the whole engine data/model-parallel over
+a (data, model) device mesh: request batches and cohort caches shard down
+the `data` axis, weight join plans column-split across the `model` axis
+(each shard joins only its own slab against the device-local spike activity
+map), vocab-named weight dims column-shard — all reduction-free, so every
+mesh mode stays token-identical to single-device serving, and per-request
+placement is canonicalized so zero-retrace-across-requests survives the
+mesh.  ``mesh=None`` (the auto single-device fallback) is exactly the
+unsharded engine.
 """
 from __future__ import annotations
 
@@ -94,6 +104,7 @@ class Engine:
         merge_cohorts: bool = True,
         spiking_packed: bool = False,
         dual_sparse: bool | None = None,
+        mesh=None,
     ):
         cfg = model.cfg
         if not cfg.supports_decode or cfg.encoder_only:
@@ -103,8 +114,14 @@ class Engine:
         self.cfg = cfg
         self.max_len = max_len
         self.eos_id = eos_id
+        self.mesh = mesh
         self.row_independent = cfg.n_experts == 0
         self.batch_align = batch_align if self.row_independent else 1
+        if mesh is not None and self.row_independent:
+            # admission alignment: pad prefill batches up to the data axis
+            # so fresh cohorts shard evenly down the mesh from step one
+            dn = mesh.shape.get("data", 1)
+            self.batch_align = max(self.batch_align, dn)
         self.merge_cohorts = merge_cohorts and self.row_independent
         self.scheduler = Scheduler(
             max_slots=max_slots, max_queue=max_queue, max_len=max_len,
@@ -114,6 +131,13 @@ class Engine:
         self.cohorts: list[Cohort] = []
         self.results: dict[int, RequestState] = {}
         self._axes = model.cache_axes()
+        if mesh is not None:
+            # weights on the model axis (reduction-free serve rules — see
+            # serve/sharding.py); must happen BEFORE plans attach, while the
+            # param tree still matches the model's logical-axes tree
+            from .sharding import shard_params
+
+            self.params = shard_params(self.params, model.axes(), mesh)
         self.spiking_packed = bool(spiking_packed and cfg.spiking_ffn)
         # Dual-sparse is the DEFAULT packed-spike serving path for pruned
         # spiking archs: at load time (here, once) the LTH hard zeros in the
@@ -125,13 +149,20 @@ class Engine:
         if self.spiking_dual_sparse:
             from repro.models.layers import attach_spiking_ffn_plans
 
-            self.params = attach_spiking_ffn_plans(self.params, cfg)
+            shards = mesh.shape.get("model", 1) if mesh is not None else 1
+            self.params = attach_spiking_ffn_plans(
+                self.params, cfg, model_shards=shards
+            )
+            if mesh is not None:
+                from .sharding import place_plans
+
+                self.params = place_plans(self.params, mesh)
         # cache donation: each call consumes its cache and returns the
         # successor, so the buffer can be updated in place on accelerators
-        self._prefill = self._spiking_scope(
+        self._prefill = self._engine_scope(
             jax.jit(model.prefill, donate_argnums=(2,))
         )
-        self._decode = self._spiking_scope(
+        self._decode = self._engine_scope(
             jax.jit(model.decode, donate_argnums=(2,))
         )
         self._last_spike_sparsity = float("nan")
@@ -144,23 +175,31 @@ class Engine:
                 )
             )
 
-    def _spiking_scope(self, fn):
-        """Run `fn` with the spiking FFN in packed-inference mode, restoring
-        the previous (training) mode afterwards — the mode is read at trace
-        time, so scoping it to the engine's calls keeps a later train-step
-        trace in the same process on the differentiable float path."""
-        if not self.spiking_packed:
+    def _engine_scope(self, fn):
+        """Run `fn` with the engine's trace-time context installed: the
+        spiking FFN in packed-inference mode (restoring the previous —
+        training — mode afterwards, so a later train-step trace in the same
+        process keeps the differentiable float path) and, under a mesh, the
+        serve mesh the sharded kernel entries dispatch on.  Both are read at
+        trace time, so scoping them to the engine's calls is enough."""
+        if not self.spiking_packed and self.mesh is None:
             return fn
 
         def scoped(*args):
+            from repro.kernels import ops
             from repro.models import layers as model_layers
 
             prev = model_layers.get_spiking_ffn_mode()
-            model_layers.set_spiking_ffn_mode("infer")
+            prev_mesh = ops.get_serve_mesh()
+            if self.spiking_packed:
+                model_layers.set_spiking_ffn_mode("infer")
+            if self.mesh is not None:
+                ops.set_serve_mesh(self.mesh)
             try:
                 return fn(*args)
             finally:
                 model_layers.set_spiking_ffn_mode(prev)
+                ops.set_serve_mesh(prev_mesh)
 
         return scoped
 
@@ -229,8 +268,14 @@ class Engine:
         tokens, n_dummy = pad_batch(tokens, self.batch_align)
         self.metrics.n_padded_rows += n_dummy
         cache = self.model.init_cache(tokens.shape[0], self.max_len)
+        tokens_dev = jnp.asarray(tokens)
+        if self.mesh is not None:
+            from .sharding import place_cache, place_tokens
+
+            cache = place_cache(cache, self._axes, self.mesh)
+            tokens_dev = place_tokens(tokens_dev, self.mesh)
         logits, cache = self._prefill(
-            self.params, {"tokens": jnp.asarray(tokens)}, cache
+            self.params, {"tokens": tokens_dev}, cache
         )
         self.metrics.n_prefill_batches += 1
         first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
@@ -286,6 +331,14 @@ class Engine:
         last = [st.generated[-1] for st in cohort.slots]
         last += [0] * cohort.n_dummy
         tokens = jnp.asarray(last, jnp.int32)[:, None]
+        if self.mesh is not None:
+            # re-normalize placement: merge/retire build caches with eager
+            # concat/gather whose output layout is ad hoc; one canonical
+            # sharding per cache shape keeps the decode jit cache warm
+            from .sharding import place_cache, place_tokens
+
+            cohort.cache = place_cache(cohort.cache, self._axes, self.mesh)
+            tokens = place_tokens(tokens, self.mesh)
         logits, cohort.cache = self._decode(
             self.params, tokens, cohort.cache
         )
@@ -334,8 +387,11 @@ class Engine:
 
     # -- reporting ----------------------------------------------------------
     def summary(self) -> dict:
+        from .sharding import mesh_summary
+
         s = self.metrics.summary()
         s["rejected"] = self.scheduler.n_rejected
+        s.update(mesh_summary(self.mesh))
         if self.spiking_packed:
             s["spike_sparsity"] = self._last_spike_sparsity
             s["spike_bytes_packed_per_slot"] = self.cfg.d_model * 4

@@ -1,0 +1,229 @@
+"""Mesh-aware placement for the serving engine (data x model parallelism).
+
+Layout (the software analogue of LoAS distributing the inner join across
+parallel lanes / FireFly-S mapping dual-sparse work onto a spatial array)::
+
+                         model axis ->
+                  shard 0          shard 1
+               +---------------+---------------+
+        data   | plan slab 0   | plan slab 1   |   WeightJoinPlan column
+        axis   | vocab cols 0  | vocab cols 1  |   slabs + vocab columns
+          |    +---------------+---------------+
+          v    | cohort rows / KV-cache rows / token batches shard
+               | down the data axis (whole rows per shard)            |
+               +-------------------------------+
+
+* **data axis** — request batches, cohort KV caches, and kernel rows: every
+  leaf with a logical ``"batch"`` dim shards it over ``data`` (replicated
+  fallback when the cohort size stops dividing the axis — a placement
+  change, never a numerics change).
+* **model axis** — the static weight side: `WeightJoinPlan` pytrees are
+  column-split at load time (`join_plan.shard_plan`) so each model shard
+  holds only its own k/n-block slab of the join plan (plans are all-array
+  pytrees, so the slabs place with `NamedSharding` like any weight leaf),
+  plus every ``"vocab"``-named weight dim (embedding table / LM head).
+
+Why only those on ``model``: serving in this repo carries a hard
+token-identity contract (engine outputs must equal the single-device
+reference loop bit-for-bit, enforced by tests).  Sharding is therefore
+REDUCTION-FREE — a dim is only placed on ``model`` when no downstream
+contraction sums across shards: plan slabs keep each output column's full-K
+contraction inside one shard (inter-GEMM traffic is integer spike words),
+and vocab columns feed argmax, not another matmul.  Classic psum-TP of
+attention/MLP (as the *training* rules in `repro.sharding` do) reassociates
+float sums and drifts logits by ~1e-2 at bf16, which can flip greedy argmax
+— measured, hence excluded here.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.kernels.join_plan import WeightJoinPlan
+
+# Logical weight-dim names that shard on the model axis at serve time.
+# Reduction-free only (see module docstring).
+MODEL_SHARDED_DIMS = frozenset({"vocab"})
+
+# Base rank of each WeightJoinPlan field; extra leading axes are stacking
+# axes (layer stack, then model shards innermost — see shard_plan).
+_PLAN_BASE_RANK = {"payload": 3, "kidx": 2, "vidx": 2, "cnt": 1, "bmap": 2}
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+def parse_mesh_spec(spec: str, n_devices: int) -> tuple[int, int]:
+    """Parse a ``--mesh`` spec into (data, model) axis sizes.
+
+    Accepted forms: ``data,model`` (auto sizes: model=2 when the device
+    count is even, rest data), ``data=4,model=2``, ``4,2``.
+    """
+    parts = [s.strip() for s in spec.split(",") if s.strip()]
+    if len(parts) != 2:
+        raise ValueError(f"mesh spec {spec!r} must name two axes: data,model")
+
+    def one(tok: str, name: str) -> int:
+        if "=" in tok:
+            k, v = tok.split("=", 1)
+            if k.strip() != name:
+                raise ValueError(f"expected axis {name!r} in {spec!r}")
+            size = int(v)
+        elif tok.isdigit():
+            size = int(tok)
+        elif tok == name:
+            return 0  # auto
+        else:
+            raise ValueError(f"expected axis {name!r}, got {tok!r}")
+        if size < 1:
+            raise ValueError(f"axis {name!r} size must be >= 1 in {spec!r}")
+        return size
+
+    dn, mn = one(parts[0], "data"), one(parts[1], "model")
+    if not mn:
+        if dn:
+            mn = max(1, n_devices // dn)
+        else:
+            mn = 2 if (n_devices > 1 and n_devices % 2 == 0) else 1
+    if not dn:
+        dn = max(1, n_devices // mn)
+    if dn * mn > n_devices:
+        raise ValueError(
+            f"mesh {dn}x{mn} needs {dn * mn} devices, have {n_devices}"
+        )
+    return dn, mn
+
+
+def make_serve_mesh(
+    spec: str | None = "data,model", *, devices=None
+) -> Mesh | None:
+    """Build the serving (data, model) mesh, or None on a single device
+    (the auto fallback: the engine then behaves exactly as unsharded)."""
+    devices = jax.devices() if devices is None else list(devices)
+    if spec is None or len(devices) == 1:
+        return None
+    dn, mn = parse_mesh_spec(spec, len(devices))
+    if dn * mn == 1:
+        return None
+    grid = np.asarray(devices[: dn * mn]).reshape(dn, mn)
+    return Mesh(grid, ("data", "model"))
+
+
+def mesh_summary(mesh: Mesh | None) -> dict:
+    if mesh is None:
+        return {"mesh": None, "mesh_devices": 1}
+    return {
+        "mesh": "x".join(f"{k}={v}" for k, v in mesh.shape.items()),
+        "mesh_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+
+
+# ---------------------------------------------------------------------------
+# placement: params / plans / caches / token batches
+# ---------------------------------------------------------------------------
+
+def _replicated(mesh: Mesh, ndim: int) -> NamedSharding:
+    return NamedSharding(mesh, P(*([None] * ndim)))
+
+
+def param_spec(axes: tuple, shape: tuple, mesh: Mesh) -> P:
+    """PartitionSpec for one weight leaf: ``"vocab"``-named dims shard on
+    `model` when divisible; everything else replicates (reduction-free
+    serve-time TP — the training rules in `repro.sharding` are broader)."""
+    mp = mesh.shape.get("model", 1)
+    spec = []
+    used = False
+    for name, dim in zip(axes, shape):
+        if (not used and name in MODEL_SHARDED_DIMS and mp > 1
+                and dim % mp == 0):
+            spec.append("model")
+            used = True
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def shard_params(params, axes_tree, mesh: Mesh):
+    """Place a param pytree on the serve mesh (call BEFORE attaching join
+    plans: ``axes_tree`` is the model's logical-axes tree, which does not
+    know about plan leaves)."""
+    return jax.tree.map(
+        lambda w, a: jax.device_put(
+            w, NamedSharding(mesh, param_spec(a, w.shape, mesh))
+        ),
+        params,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def _place_plan(plan: WeightJoinPlan, mesh: Mesh) -> WeightJoinPlan:
+    """Place one plan: the model-shard stacking axis (innermost extra axis,
+    right before each field's base rank) shards over `model`; a plan with no
+    shard axis (model=1 mesh) replicates."""
+    mp = mesh.shape.get("model", 1)
+
+    def put(name: str, x):
+        extra = x.ndim - _PLAN_BASE_RANK[name]
+        if mp <= 1 or extra < 1:
+            return jax.device_put(x, _replicated(mesh, x.ndim))
+        spec = [None] * x.ndim
+        spec[extra - 1] = "model"
+        return jax.device_put(x, NamedSharding(mesh, P(*spec)))
+
+    return type(plan)(  # preserve ShardedWeightJoinPlan — dispatch is by type
+        **{name: put(name, getattr(plan, name)) for name in _PLAN_BASE_RANK}
+    )
+
+
+def place_plans(params, mesh: Mesh):
+    """Walk a param tree and place every attached `WeightJoinPlan` (their
+    column slabs are the model-sharded weight payload of the dual-sparse
+    serving path)."""
+    def walk(node):
+        if isinstance(node, WeightJoinPlan):
+            return _place_plan(node, mesh)
+        if isinstance(node, dict):
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
+def cache_sharding(leaf, axes: tuple, mesh: Mesh) -> NamedSharding:
+    """Batch dim -> `data` (when divisible); all other cache dims
+    replicated.  Position-like leaves (no batch axis) replicate fully, which
+    is exactly the cohort-merge invariant (`serve.batching`)."""
+    dn = mesh.shape.get("data", 1)
+    spec = [None] * leaf.ndim
+    for i, name in enumerate(axes):
+        if name == "batch" and dn > 1 and leaf.shape[i] % dn == 0:
+            spec[i] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
+def place_cache(cache, axes_tree, mesh: Mesh):
+    """Place (or re-normalize, after concat/take produced ad-hoc layouts) a
+    cohort cache on the mesh.  Called before every engine prefill/decode so
+    the jit cache always sees one canonical sharding per cache shape —
+    preserving zero retrace across requests.  Structure-checked tree.map
+    (like `shard_params`): a cache leaf without a matching axes tuple is a
+    loud error, never a silent mispairing."""
+    return jax.tree.map(
+        lambda l, a: jax.device_put(l, cache_sharding(l, a, mesh)),
+        cache,
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def place_tokens(tokens, mesh: Mesh):
+    """Place a (B, S) token batch: rows over `data` when divisible."""
+    dn = mesh.shape.get("data", 1)
+    spec = [None] * tokens.ndim
+    if dn > 1 and tokens.shape[0] % dn == 0:
+        spec[0] = "data"
+    return jax.device_put(tokens, NamedSharding(mesh, P(*spec)))

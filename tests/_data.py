@@ -1,0 +1,17 @@
+"""Shared test-data builders (single source for the packed-spike format so
+the packing convention can never drift between test files)."""
+import numpy as np
+
+
+def mk_packed_and_weights(
+    rng, T, M, K, N, density=0.2, w_density=0.05, dtype=np.float32
+):
+    """Random (M, K) packed uint32 spike words (bit t = timestep t) and a
+    (K, N) weight matrix pruned to ``w_density`` with hard zeros."""
+    spikes = rng.random((T, M, K)) < density
+    packed = np.zeros((M, K), np.uint32)
+    for t in range(T):
+        packed |= spikes[t].astype(np.uint32) << t
+    w = rng.normal(size=(K, N)).astype(dtype)
+    w[rng.random((K, N)) > w_density] = 0
+    return packed, w

@@ -1,0 +1,90 @@
+"""Property-test front-end: real `hypothesis` when installed, otherwise a
+minimal deterministic fallback with the same surface.
+
+`hypothesis` is a hard dev dependency (pyproject `[dev]`, installed by CI),
+and the property suites in `test_kernels.py` import from here
+unconditionally — no import-guard skips, so a collection error in a
+property test can never hide behind a missing package.  The fallback keeps
+the suites RUNNING (not skipped) in minimal environments: it draws a fixed
+number of pseudo-random examples per test from a seed derived off the test
+name, so failures reproduce exactly.  It implements only what the suites
+use (`given`, `settings`, `st.integers/floats/booleans/sampled_from`,
+`.map`); shrinking, the example database, and the full strategy algebra
+need the real package.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    USING_REAL_HYPOTHESIS = True
+except ImportError:  # deterministic fallback — see module docstring
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    USING_REAL_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self.draw(rng)))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    st = _St()
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def run():
+                n = getattr(run, "_max_examples", 20)
+                base = zlib.crc32(fn.__name__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base + i) & 0xFFFFFFFF)
+                    kwargs = {k: s.draw(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({fn.__name__}, "
+                            f"example {i}): {kwargs!r}"
+                        ) from e
+
+            # keep pytest from injecting fixtures for the drawn args
+            run.__signature__ = inspect.Signature()
+            return run
+
+        return deco
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco

@@ -1,0 +1,59 @@
+"""Shared test configuration.
+
+Runs the WHOLE suite on 8 fake XLA host devices (set here, before any test
+module imports jax — the device count is locked at first backend init) so
+mesh/sharding tests run in-process alongside everything else.  Single-device
+tests are unaffected: without explicit placement, computations stay on
+device 0.
+"""
+import os
+
+# inline copy of repro.launch.mesh.force_fake_devices(8): conftest runs
+# before the package is importable-safe here, and the splice must precede
+# everything (first writer wins, so an externally-set count is respected)
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def bsr_trace_count_guard():
+    """Snapshot/reset `ops.BSR_TRACE_COUNT` around every test so no-retrace
+    assertions are order-independent across test files: each test observes a
+    counter that starts at 0, and whatever it adds is invisible to later
+    tests."""
+    from repro.kernels import ops
+
+    prev = ops.BSR_TRACE_COUNT
+    ops.BSR_TRACE_COUNT = 0
+    yield
+    ops.BSR_TRACE_COUNT = prev
+
+
+@pytest.fixture
+def cold_bsr_cache():
+    """Opt-in (NOT autouse — recompiling every test would tax the whole
+    suite): clear the BSR jit caches so a `BSR_TRACE_COUNT > 0` assertion
+    ("the kernel path actually ran") is order-independent — without this,
+    shapes compiled by an earlier test make the first call a cache hit."""
+    from repro.kernels import ops
+
+    ops._bsr_call.clear_cache()
+    ops._bsr_call_sharded.clear_cache()
+
+
+@pytest.fixture(autouse=True)
+def engine_context_guard():
+    """The engine scopes two pieces of trace-time module state (spiking-FFN
+    mode, serve mesh) around its calls; restore both even when a test dies
+    mid-engine so failures don't cascade into unrelated tests."""
+    yield
+    from repro.kernels import ops
+    from repro.models import layers as model_layers
+
+    model_layers.set_spiking_ffn_mode("train")
+    ops.set_serve_mesh(None)

@@ -1,0 +1,145 @@
+"""Cross-arch serving parity matrix.
+
+Every registry arch x {batch-1, staggered continuous batching} x
+{float, packed, dual-sparse where applicable} asserting TOKEN IDENTITY
+against the single-shot reference loop (`launch.serve.generate`, solo per
+request) — so a new arch or serving path can never silently skip the
+identity guarantee: it either appears here and passes, or it carries an
+EXPLICIT structural skip with the reason in the report.
+
+Structural exclusions (skipped, not silently absent):
+* encoder-only archs (no decode path — the engine refuses them);
+* VLM stub archs (prefill needs precomputed ``img_embed``; the engine
+  serves token-only requests);
+* spiking modes on archs whose block isn't the transformer MLP the spiking
+  FFN replaces (MoE blocks, SSM/hybrid channel mixes);
+* MoE archs use all-distinct prompt lengths in the staggered scenario —
+  capacity routing couples rows, so batched prefill of same-length rows is
+  a different computation than solo prefill (the engine already disables
+  batch padding / cohort merging for them).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs, smoke_variant
+from repro.launch.serve import generate
+from repro.models.registry import build_model
+from repro.serve import Engine
+
+MODES = ("float", "packed", "dual")
+SCENARIOS = ("batch1", "staggered")
+
+_MODEL_CACHE: dict = {}
+_REF_CACHE: dict = {}
+
+
+def _mode_overrides(mode: str) -> dict:
+    if mode == "packed":
+        return dict(spiking_ffn=True, spiking_T=4)
+    if mode == "dual":
+        return dict(spiking_ffn=True, spiking_T=4,
+                    spiking_weight_density=0.3)
+    return {}
+
+
+def _model(arch: str, mode: str):
+    key = (arch, mode)
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config(arch))
+        over = _mode_overrides(mode)
+        if over:
+            cfg = dataclasses.replace(cfg, **over)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _skip_reason(arch: str, mode: str) -> str | None:
+    cfg = smoke_variant(get_config(arch))
+    if cfg.encoder_only or not cfg.supports_decode:
+        return f"{arch} is encoder-only; the engine refuses it"
+    if cfg.n_img_tokens:
+        return (f"{arch} prefill needs precomputed img_embed; the engine "
+                "serves token-only requests")
+    if mode != "float":
+        if cfg.family != "dense" or cfg.n_experts or not cfg.embed_inputs:
+            return (f"spiking FFN replaces the dense-transformer MLP block; "
+                    f"{arch} ({cfg.family}"
+                    f"{', moe' if cfg.n_experts else ''}) has none")
+    return None
+
+
+def _params():
+    out = []
+    for arch in list_archs():
+        for mode in MODES:
+            for scenario in SCENARIOS:
+                reason = _skip_reason(arch, mode)
+                marks = [pytest.mark.skip(reason=reason)] if reason else []
+                out.append(pytest.param(
+                    arch, mode, scenario,
+                    id=f"{arch}-{mode}-{scenario}", marks=marks,
+                ))
+    return out
+
+
+def _scenario(cfg, scenario: str):
+    """(prompt lens, gen lens, arrival steps) for one scenario."""
+    if scenario == "batch1":
+        return [10], [4], [0]
+    if cfg.n_experts:
+        # distinct lengths: no shared prefill bucket, so capacity routing
+        # stays per-request (rows are coupled inside an MoE batch)
+        return [8, 10, 12], [4, 5, 4], [0, 1, 1]
+    return [8, 8, 12], [4, 5, 4], [0, 1, 1]
+
+
+def _reference(arch, mode, model, params, prompts, gens, max_len):
+    """Solo (batch-1) single-shot loop per request, cached per model."""
+    key = (arch, mode, tuple(p.tobytes() for p in prompts), tuple(gens))
+    if key not in _REF_CACHE:
+        refs = []
+        for p, g in zip(prompts, gens):
+            cache = model.init_cache(1, max_len)
+            refs.append(np.asarray(
+                generate(model, params, jax.numpy.asarray(p)[None], cache, g)
+            )[0])
+        _REF_CACHE[key] = refs
+    return _REF_CACHE[key]
+
+
+@pytest.mark.parametrize("arch,mode,scenario", _params())
+def test_arch_serving_parity(arch, mode, scenario):
+    cfg, model, params = _model(arch, mode)
+    lens, gens, arrivals = _scenario(cfg, scenario)
+    rng = np.random.default_rng(11)
+    prompts = [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+               for L in lens]
+    max_len = max(l + g for l, g in zip(lens, gens)) + 2
+    refs = _reference(arch, mode, model, params, prompts, gens, max_len)
+
+    engine = Engine(
+        model, params, max_len=max_len, max_slots=2,
+        spiking_packed=(mode != "float"),
+    )
+    if mode == "dual":
+        assert engine.spiking_dual_sparse  # default for pruned spiking archs
+    reqs, i, step = [], 0, 0
+    while not (engine.idle and i == len(prompts)):
+        while i < len(prompts) and arrivals[i] <= step:
+            reqs.append(engine.submit(prompts[i], gens[i]))
+            i += 1
+        engine.step()
+        step += 1
+    for j, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            refs[j],
+            np.asarray(engine.results[r.rid].generated, np.int32),
+            err_msg=f"{arch}/{mode}/{scenario}: request {j} diverged from "
+                    "the solo reference loop",
+        )
+    assert engine.summary()["n_requests"] == len(prompts)

@@ -1,29 +1,16 @@
 """Pallas kernel tests: shape/dtype/T sweeps against the ref.py oracles
-(interpret mode), plus hypothesis property tests on the packed semantics."""
+(interpret mode), plus property tests on the compression + join core
+(hypothesis in CI; deterministic fallback sampler otherwise — see _hyp.py).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _data import mk_packed_and_weights as _mk
+from _hyp import given, settings, st
 
-try:  # CI installs hypothesis (pyproject [dev]); property tests skip without
-    from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:
-    HAVE_HYPOTHESIS = False
-
-from repro.core.packing import pack_spikes
+from repro.core.packing import pack_spikes, unpack_spikes
 from repro.kernels import ops, ref
-
-
-def _mk(rng, T, M, K, N, density=0.2, w_density=0.05, dtype=np.float32):
-    spikes = rng.random((T, M, K)) < density
-    packed = np.zeros((M, K), np.uint32)
-    for t in range(T):
-        packed |= spikes[t].astype(np.uint32) << t
-    w = rng.normal(size=(K, N)).astype(dtype)
-    w[rng.random((K, N)) > w_density] = 0
-    return packed, w
 
 
 SHAPES = [
@@ -71,16 +58,58 @@ def test_bsr_dual_sparse_matches_oracle(T, M, K, N, fuse):
 
 # ---------------------------------------------------------------------------
 # Dual-sparse plan path: load-time WeightJoinPlan + device-side spike join.
+# Parity vs the dense reference is PROPERTY-BASED: weight/spike densities
+# and shapes are drawn (dense 1.0 and extreme-LTH points are in the sampled
+# range) instead of the old hand-picked {1.0, 0.3, 0.02} sweep.
 # ---------------------------------------------------------------------------
 
-W_DENSITIES = [1.0, 0.3, 0.02]
+
+@settings(max_examples=12, deadline=None)
+@given(
+    w_density=st.floats(0.005, 1.0),
+    density=st.floats(0.0, 0.6),
+    fuse=st.booleans(),
+    M=st.integers(4, 64),
+    K=st.integers(16, 192),
+    N=st.integers(16, 128),
+    T=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_property_bsr_plan_parity_vs_dense(
+    w_density, density, fuse, M, K, N, T, seed
+):
+    """Property: for ANY drawn weight density / spike density / shape,
+    pack -> plan-based BSR spMspM == the dense-weight oracle (exact packed
+    spikes, fp-tolerant membrane potentials / full sums)."""
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(seed)
+    packed, w = _mk(rng, T, M, K, N, density=density, w_density=w_density)
+    plan = build_weight_plan(w)
+    out, u = ops.ftp_spmm_bsr(
+        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    )
+    if fuse:
+        cw, uw = ref.ftp_spmm_fused_lif_ref(
+            jnp.asarray(packed), jnp.asarray(w), T
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(cw))
+        np.testing.assert_allclose(
+            np.asarray(u), np.asarray(uw), rtol=1e-5, atol=1e-5
+        )
+    else:
+        want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5
+        )
 
 
-@pytest.mark.parametrize("w_density", W_DENSITIES)
+@pytest.mark.parametrize("w_density", [1.0, 0.02])
 @pytest.mark.parametrize("fuse", [True, False])
-def test_bsr_plan_parity_vs_dense_reference(w_density, fuse):
-    """Plan-based BSR kernel == dense oracle across weight densities
-    (the acceptance sweep: dense, paper-ish, and extreme LTH density)."""
+def test_bsr_plan_parity_density_corners(w_density, fuse):
+    """Deterministic guard for the corners a drawn-float sweep almost never
+    hits exactly: fully dense (every block joins, jmax == nkb) and extreme
+    LTH density.  The property test above owns the interior."""
     from repro.kernels.join_plan import build_weight_plan
 
     rng = np.random.default_rng(int(w_density * 100) + fuse)
@@ -90,11 +119,11 @@ def test_bsr_plan_parity_vs_dense_reference(w_density, fuse):
     out, u = ops.ftp_spmm_bsr(
         jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
     )
-    uw_ref = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
     if fuse:
-        np.testing.assert_array_equal(np.asarray(out), np.asarray(uw_ref[0]))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(cw))
         np.testing.assert_allclose(
-            np.asarray(u), np.asarray(uw_ref[1]), rtol=1e-5, atol=1e-5
+            np.asarray(u), np.asarray(uw), rtol=1e-5, atol=1e-5
         )
     else:
         want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
@@ -103,13 +132,20 @@ def test_bsr_plan_parity_vs_dense_reference(w_density, fuse):
         )
 
 
-@pytest.mark.parametrize("w_density", W_DENSITIES)
-@pytest.mark.parametrize("fuse", [True, False])
-def test_bsr_plan_batched_matches_per_sample(w_density, fuse):
+@settings(max_examples=8, deadline=None)
+@given(
+    w_density=st.floats(0.01, 1.0),
+    fuse=st.booleans(),
+    B=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+def test_property_bsr_plan_batched_matches_per_sample(
+    w_density, fuse, B, seed
+):
     from repro.kernels.join_plan import build_weight_plan
 
-    rng = np.random.default_rng(int(w_density * 7) + fuse)
-    T, B, M, K, N = 4, 3, 16, 64, 32
+    rng = np.random.default_rng(seed)
+    T, M, K, N = 4, 16, 64, 32
     packed = np.stack(
         [_mk(rng, T, M, K, N, w_density=w_density)[0] for _ in range(B)]
     )
@@ -174,15 +210,29 @@ def test_bsr_no_retrace_across_spike_activity():
         assert ops.BSR_TRACE_COUNT == before, "spike activity caused a retrace"
 
 
-def test_build_block_join_vectorized_matches_bruteforce():
-    """The vectorized residual host join must equal the naive per-tile
-    double loop it replaced."""
+@settings(max_examples=10, deadline=None)
+@given(
+    density=st.floats(0.0, 0.4),
+    w_density=st.floats(0.01, 0.8),
+    nm=st.integers(1, 4),
+    nkb=st.integers(1, 6),
+    nnb=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    T=st.integers(1, 8),
+    seed=st.integers(0, 2**16),
+)
+def test_property_build_block_join_matches_bruteforce(
+    density, w_density, nm, nkb, nnb, bm, bk, bn, T, seed
+):
+    """Property: at ANY drawn density/geometry, the vectorized residual
+    host join equals the naive per-tile double loop it replaced."""
     from repro.core.packing import block_activity_map
 
-    rng = np.random.default_rng(23)
-    T, M, K, N = 4, 32, 96, 64
-    bm, bk, bn = 8, 16, 16
-    packed, w = _mk(rng, T, M, K, N, density=0.05, w_density=0.1)
+    rng = np.random.default_rng(seed)
+    M, K, N = nm * bm, nkb * bk, nnb * bn
+    packed, w = _mk(rng, T, M, K, N, density=density, w_density=w_density)
     payload, kidx, vidx, cnt, jmax = ops.build_block_join(packed, w, bm, bk, bn)
 
     _, idx, bnz = ops.build_block_csr(w, bk, bn)
@@ -240,51 +290,64 @@ def test_bf16_weights():
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-2, atol=1e-2)
 
 
-if HAVE_HYPOTHESIS:
+@settings(max_examples=12, deadline=None)
+@given(
+    T=st.integers(1, 32),
+    M=st.integers(1, 24),
+    K=st.integers(1, 48),
+    extra_dim=st.sampled_from([None, 2, 3]),
+    density=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_property_pack_unpack_roundtrip(T, M, K, extra_dim, density, seed):
+    """Property: pack -> unpack is the identity for any T in [1, 32] and any
+    spike tensor shape/density, and unpack -> pack recovers the words (the
+    packed uint32 format is lossless, paper §IV-A)."""
+    rng = np.random.default_rng(seed)
+    shape = (T, M, K) if extra_dim is None else (T, extra_dim, M, K)
+    spikes = (rng.random(shape) < density).astype(np.float32)
+    packed = pack_spikes(jnp.asarray(spikes))
+    assert packed.dtype == jnp.uint32 and packed.shape == shape[1:]
+    back = unpack_spikes(packed, T)
+    np.testing.assert_array_equal(np.asarray(back), spikes)
+    repacked = pack_spikes(back)
+    np.testing.assert_array_equal(np.asarray(repacked), np.asarray(packed))
 
-    @settings(max_examples=15, deadline=None)
-    @given(
-        T=st.integers(1, 8),
-        M=st.integers(1, 40),
-        K=st.integers(1, 80),
-        N=st.integers(1, 48),
-        seed=st.integers(0, 2**16),
-    )
-    def test_property_kernel_vs_oracle(T, M, K, N, seed):
-        """Property: for ANY shape/T/sparsity, kernel == oracle == einsum of
-        unpacked planes."""
-        rng = np.random.default_rng(seed)
-        packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
-                        w_density=rng.uniform(0.01, 0.5))
-        out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-        want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
-        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
 
-    @settings(max_examples=10, deadline=None)
-    @given(seed=st.integers(0, 2**16), T=st.integers(1, 8))
-    def test_property_silent_neurons_contribute_nothing(seed, T):
-        """Property (paper invariant): zeroing silent neurons' columns of W
-        never changes the output — silent neurons are dead weight the format
-        drops for free."""
-        rng = np.random.default_rng(seed)
-        M, K, N = 8, 32, 16
-        packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.3)
-        silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
-        w2 = w.copy()
-        w2[silent_cols] = 0
-        o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-        o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
-        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
+@settings(max_examples=15, deadline=None)
+@given(
+    T=st.integers(1, 8),
+    M=st.integers(1, 40),
+    K=st.integers(1, 80),
+    N=st.integers(1, 48),
+    seed=st.integers(0, 2**16),
+)
+def test_property_kernel_vs_oracle(T, M, K, N, seed):
+    """Property: for ANY shape/T/sparsity, kernel == oracle == einsum of
+    unpacked planes."""
+    rng = np.random.default_rng(seed)
+    packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
+                    w_density=rng.uniform(0.01, 0.5))
+    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
 
-else:
 
-    @pytest.mark.skip(reason="hypothesis not installed (pip install -e '.[dev]')")
-    def test_property_kernel_vs_oracle():
-        pass
-
-    @pytest.mark.skip(reason="hypothesis not installed (pip install -e '.[dev]')")
-    def test_property_silent_neurons_contribute_nothing():
-        pass
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), T=st.integers(1, 8))
+def test_property_silent_neurons_contribute_nothing(seed, T):
+    """Property (paper invariant): zeroing silent neurons' columns of W
+    never changes the output — silent neurons are dead weight the format
+    drops for free."""
+    rng = np.random.default_rng(seed)
+    M, K, N = 8, 32, 16
+    packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.3)
+    silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
+    w2 = w.copy()
+    w2[silent_cols] = 0
+    o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
 
 
 def test_ftp_spmm_batched_matches_per_sample():
