@@ -29,6 +29,7 @@ from repro.core import ftp_spmspm, pack_spikes, sequential_spmspm
 from repro.core.snn_layers import prune_by_magnitude
 from repro.kernels import ops, ref
 from repro.kernels.join_plan import build_weight_plan
+from repro.serve.policy import PACKED_DENSE, PACKED_DUAL
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -69,8 +70,10 @@ def dual_sparse_bench(smoke: bool = False) -> dict:
     a = jnp.asarray(packed)
     wj = jnp.asarray(w)
 
-    f_dense = lambda x: ops.ftp_spmm_fused_lif(x, wj, T)[0]
-    f_dual = lambda x: ops.ftp_spmm_bsr(x, plan, T, n_out=N, fuse_lif=True)[0]
+    f_dense = lambda x: ops.dispatch(x, wj, PACKED_DENSE, T,
+                                     fuse_lif=True)[0]
+    f_dual = lambda x: ops.dispatch(x, plan, PACKED_DUAL, T, n_out=N,
+                                    fuse_lif=True)[0]
 
     # parity first (and always): the bench is only meaningful if the skip
     # path is exact
@@ -136,7 +139,7 @@ def rows():
 
     # Pallas kernel (interpret) correctness-at-speed + analytic roofline
     t_pallas = _time(
-        lambda a, b: ops.ftp_spmm(a, b, T), jnp.asarray(packed),
+        lambda a, b: ops.dispatch(a, b, PACKED_DENSE, T), jnp.asarray(packed),
         jnp.asarray(w), reps=1,
     )
     flops = 2 * T * M * K * N

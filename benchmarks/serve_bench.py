@@ -10,6 +10,11 @@ the JSON must hold: batched tok/s > batch-1 tok/s, because every decode
 step amortizes one weight fetch over the whole batch (and, for spiking
 layers, over all T timesteps — the paper's FTP argument applied at the
 serving level).
+
+Extra rows (each an `ExecutionPolicy` variant): dual-sparse spiking
+(token-identical), sharded bitwise mesh serving (token-identical), and
+approximate-TP (``token_identical: false`` by contract, measured max logit
+drift vs. the bitwise reference recorded and bounded).
 """
 import argparse
 import dataclasses
@@ -69,7 +74,7 @@ def bench_spiking_dual_sparse(
     from repro.configs import get_config, smoke_variant
     from repro.models import layers as model_layers
     from repro.models.registry import build_model
-    from repro.serve import Engine
+    from repro.serve import Engine, ExecutionPolicy
     from repro.serve.metrics import EngineMetrics
 
     cfg = smoke_variant(get_config("llama3_2_1b"))
@@ -88,10 +93,12 @@ def bench_spiking_dual_sparse(
            "batch": batch, "prompt_len": prompt_len, "gen": gen}
     tokens = {}
     try:
-        for key, dual in (("dense_weight", False), ("dual_sparse", True)):
+        for key, sparsity in (("dense_weight", "dense"),
+                              ("dual_sparse", "dual_sparse")):
             engine = Engine(
                 model, params, max_len=prompt_len + gen, max_slots=batch,
-                spiking_packed=True, dual_sparse=dual,
+                policy=ExecutionPolicy.for_arch(cfg,
+                                                weight_sparsity=sparsity),
             )
             engine.generate_batch(prompts, gen)   # warm-up: jit compiles
             engine.metrics = EngineMetrics()
@@ -123,7 +130,13 @@ def bench_sharded_serving(
     from repro.configs import get_config, smoke_variant
     from repro.models import layers as model_layers
     from repro.models.registry import build_model
-    from repro.serve import Engine, make_serve_mesh, mesh_summary
+    from repro.serve import (
+        Engine,
+        ExecutionPolicy,
+        Placement,
+        make_serve_mesh,
+        mesh_summary,
+    )
     from repro.serve.metrics import EngineMetrics
 
     out = {"mesh_spec": mesh_spec, "weight_density": weight_density,
@@ -152,7 +165,8 @@ def bench_sharded_serving(
         for key, m in (("single_device", None), ("sharded", mesh)):
             engine = Engine(
                 model, params, max_len=prompt_len + gen, max_slots=batch,
-                spiking_packed=True, mesh=m,
+                policy=ExecutionPolicy.for_arch(cfg,
+                                                placement=Placement(mesh=m)),
             )
             engine.generate_batch(prompts, gen)   # warm-up: jit compiles
             engine.metrics = EngineMetrics()
@@ -167,11 +181,82 @@ def bench_sharded_serving(
     return out
 
 
+def bench_approximate_tp(
+    mesh_spec="data,model", tol=0.25, batch=4, prompt_len=16, gen=8
+) -> dict:
+    """Approximate-TP row: ``exactness=approximate`` psum-TP-shards
+    attention/MLP over the model axis (throughput over token identity).
+
+    ``token_identical: false`` is recorded EXPLICITLY — it is the row's
+    contract, not an accident — alongside the measured max logit drift vs.
+    the bitwise single-device engine (must stay <= tol; `check_parity`
+    raises otherwise) and the measured token-match fraction.
+    """
+    from repro.configs import get_config, smoke_variant
+    from repro.models.registry import build_model
+    from repro.serve import (
+        Engine,
+        ExecutionPolicy,
+        Placement,
+        approximate,
+        check_parity,
+        make_serve_mesh,
+        mesh_summary,
+    )
+    from repro.serve.metrics import EngineMetrics
+
+    out = {"mesh_spec": mesh_spec, "tol": tol, "batch": batch,
+           "prompt_len": prompt_len, "gen": gen,
+           "n_devices": jax.device_count(),
+           "token_identical": False}  # the contract of this mode
+    mesh = make_serve_mesh(mesh_spec)
+    if mesh is None or mesh.shape.get("model", 1) < 2:
+        out["skipped"] = "needs a model axis >= 2 (run with --fake-devices 8)"
+        return out
+    out.update(mesh_summary(mesh))
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    policies = {
+        "bitwise": ExecutionPolicy.for_arch(cfg),
+        "approximate_tp": ExecutionPolicy.for_arch(
+            cfg, placement=Placement(mesh=mesh), exactness=approximate(tol),
+        ),
+    }
+    tokens, engines = {}, {}
+    for key, pol in policies.items():
+        engine = Engine(
+            model, params, max_len=prompt_len + gen, max_slots=batch,
+            policy=pol, capture_logits=True,
+        )
+        engine.generate_batch(prompts, gen)       # warm-up: jit compiles
+        engine.metrics = EngineMetrics()
+        engine.drain_logit_traces()               # keep the measured run only
+        tokens[key] = engine.generate_batch(prompts, gen)
+        engines[key] = engine
+        out[f"{key}_tok_s"] = engine.summary()["throughput_tok_s"]
+    rep = check_parity(
+        policies["approximate_tp"], tokens["bitwise"],
+        tokens["approximate_tp"],
+        ref_logits=engines["bitwise"].drain_logit_traces(),
+        got_logits=engines["approximate_tp"].drain_logit_traces(),
+    )
+    out["max_logit_drift"] = rep["max_logit_drift"]
+    out["token_match_fraction"] = rep["token_match_fraction"]
+    return out
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
     rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
-                "--no-sharded-row"])
+                "--no-sharded-row", "--no-approx-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -201,6 +286,8 @@ def main(argv=None):
                     help="skip the dual-sparse spiking-FFN serving row")
     ap.add_argument("--no-sharded-row", action="store_true",
                     help="skip the sharded-vs-single mesh serving row")
+    ap.add_argument("--no-approx-row", action="store_true",
+                    help="skip the approximate-TP (psum attention/MLP) row")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -242,6 +329,18 @@ def main(argv=None):
                   f"vs single-device {sh['single_device_tok_s']:.1f} tok/s "
                   f"(token_identical={sh['token_identical']}; fake-device "
                   "wall times are plumbing signals, not speedups)")
+    if not args.no_approx_row:
+        axr = bench_approximate_tp()
+        report["approximate_tp"] = axr
+        if "skipped" in axr:
+            print(f"  approximate-TP row skipped: {axr['skipped']}")
+        else:
+            print(f"  approximate-TP {axr['mesh']}: "
+                  f"{axr['approximate_tp_tok_s']:.1f} tok/s vs bitwise "
+                  f"{axr['bitwise_tok_s']:.1f} tok/s; max logit drift "
+                  f"{axr['max_logit_drift']:.3e} <= tol {axr['tol']} "
+                  f"(token_identical=false by contract, measured match "
+                  f"{axr['token_match_fraction']:.0%})")
     if not args.no_write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)

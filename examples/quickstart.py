@@ -15,6 +15,7 @@ from repro.core import (
 )
 from repro.core.snn_layers import prune_by_magnitude
 from repro.kernels import ops
+from repro.serve.policy import PACKED_DUAL
 
 T, M, K, N = 4, 64, 512, 256
 rng = np.random.default_rng(0)
@@ -42,8 +43,11 @@ out_packed, potentials = ftp_layer(packed, w, T)
 print(f"output silent       : {float(silent_fraction(out_packed)):.1%}")
 
 # 5. same thing through the Pallas kernel (dual-sparse block-CSR + block
-#    inner-join); interpret mode on CPU, Mosaic on TPU
-out_kernel, _ = ops.ftp_spmm_dual_sparse(np.asarray(packed), np.asarray(w), T)
+#    inner-join) via the policy front door; interpret mode on CPU, Mosaic on
+#    TPU.  PACKED_DUAL = ExecutionPolicy(spike_format='packed',
+#    weight_sparsity='dual_sparse'); raw weights -> plan built per call
+out_kernel, _ = ops.dispatch(np.asarray(packed), np.asarray(w), PACKED_DUAL,
+                             T, fuse_lif=True)
 assert (np.asarray(out_kernel) == np.asarray(out_packed)).all()
 print("pallas kernel       : matches reference ✓")
 
@@ -51,7 +55,8 @@ print("pallas kernel       : matches reference ✓")
 #    (model load), then every call is device-only — new spike activity is a
 #    value change, not a new trace
 plan = ops.build_weight_plan(np.asarray(w))
-out_plan, _ = ops.ftp_spmm_bsr(packed, plan, T, n_out=N)
+out_plan, _ = ops.dispatch(packed, plan, PACKED_DUAL, T, n_out=N,
+                           fuse_lif=True)
 assert (np.asarray(out_plan) == np.asarray(out_packed)).all()
 print(f"weight join plan    : {plan.block_density():.0%} of blocks live, "
       f"join width {plan.jmax} of {plan.nkb} k-blocks ✓")

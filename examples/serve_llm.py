@@ -10,7 +10,7 @@ import jax
 
 from repro.configs import get_config, smoke_variant
 from repro.models.registry import build_model
-from repro.serve import Engine
+from repro.serve import Engine, ExecutionPolicy
 
 for arch in ("llama3_2_1b", "rwkv6_1_6b", "zamba2_7b"):
     cfg = smoke_variant(get_config(arch))
@@ -18,8 +18,11 @@ for arch in ("llama3_2_1b", "rwkv6_1_6b", "zamba2_7b"):
     params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     P, G = 32, 12
+    # one declarative execution policy (here: the arch-derived default —
+    # float spikes, dense weights, single device, bitwise token identity)
+    policy = ExecutionPolicy.for_arch(cfg)
     engine = Engine(model, params, max_len=P + 1 + G, max_slots=4,
-                    batch_align=2)
+                    batch_align=2, policy=policy)
 
     # first wave of 3 requests; after one engine step (prefill + 1 decode,
     # sequence position P+1) a late arrival with a (P+1)-token prompt lands

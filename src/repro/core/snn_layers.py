@@ -147,9 +147,11 @@ def spiking_linear_infer(
         packed = mask_low_activity(packed, cfg.preprocess_min_spikes)
     if use_kernel:
         from repro.kernels import ops
+        from repro.serve.policy import PACKED_DENSE
 
-        out_packed, _ = ops.ftp_spmm_fused_lif(
-            packed, w, T=cfg.T, v_th=cfg.v_th, tau=cfg.tau
+        out_packed, _ = ops.dispatch(
+            packed, w, PACKED_DENSE, cfg.T,
+            fuse_lif=True, v_th=cfg.v_th, tau=cfg.tau,
         )
         return out_packed
     out_packed, _ = ftp_layer(packed, w, cfg.T, v_th=cfg.v_th, tau=cfg.tau)
@@ -255,13 +257,16 @@ def _ffn_dual_sparse(pm, plan_in, plan_out, w_in, w_out, cfg: SpikingConfig):
     hidden layer (packed words out), plain full sums on the output layer.
     Returns (packed hidden words (M, F), full sums (T, M, D))."""
     from repro.kernels import ops
+    from repro.serve.policy import PACKED_DUAL
 
-    packed_h, _ = ops.ftp_spmm_bsr(
-        pm, plan_in, cfg.T, cfg.v_th, cfg.tau,
-        n_out=w_in.shape[1], fuse_lif=True,
+    packed_h, _ = ops.dispatch(
+        pm, plan_in, PACKED_DUAL, cfg.T,
+        fuse_lif=True, v_th=cfg.v_th, tau=cfg.tau,
+        n_out=w_in.shape[1],
     )
-    o, _ = ops.ftp_spmm_bsr(
-        packed_h, plan_out, cfg.T, n_out=w_out.shape[1], fuse_lif=False,
+    o, _ = ops.dispatch(
+        packed_h, plan_out, PACKED_DUAL, cfg.T,
+        fuse_lif=False, n_out=w_out.shape[1],
     )
     return packed_h, o
 
@@ -315,11 +320,13 @@ def spiking_ffn_apply(
             )
         elif use_kernel:
             from repro.kernels import ops
+            from repro.serve.policy import PACKED_DENSE
 
-            packed_h, _ = ops.ftp_spmm_fused_lif(
-                packed_in, w_in, T=cfg.T, v_th=cfg.v_th, tau=cfg.tau
+            packed_h, _ = ops.dispatch(
+                packed_in, w_in, PACKED_DENSE, cfg.T,
+                fuse_lif=True, v_th=cfg.v_th, tau=cfg.tau,
             )
-            o = ops.ftp_spmm(packed_h, w_out, T=cfg.T)
+            o = ops.dispatch(packed_h, w_out, PACKED_DENSE, cfg.T)
         else:
             packed_h, _ = ftp_layer(packed_in, w_in, cfg.T, cfg.v_th, cfg.tau)
             o = ftp_spmspm(packed_h, w_out, cfg.T)

@@ -1,16 +1,35 @@
-"""Public jit'd wrappers around the Pallas FTP kernels.
+"""Policy-dispatched jit'd wrappers around the Pallas FTP kernels.
 
-Handles padding to MXU-aligned blocks, backend dispatch (interpret=True
-off-TPU so the kernels are validated everywhere; compiled on real TPUs), and
-the dual-sparse serving path: `ftp_spmm_bsr(_batched)` consume a load-time
-`WeightJoinPlan` (kernels/join_plan.py) and compute the per-request spike
-join ON DEVICE — no host work and no retrace across requests
-(`BSR_TRACE_COUNT` counts traces so callers can assert the latter).
+One front door: ``dispatch(a, weights_or_plan, policy, T)`` routes by the
+`repro.serve.policy.ExecutionPolicy` and the operand type —
+
+* ``spike_format='float'``   -> the differentiable jnp reference path
+  ((T, M, K) float spikes; no Pallas);
+* ``spike_format='packed'`` + dense weights -> the dense-weight FTP kernels
+  (batched entry when ``a`` has a leading batch axis; the mesh-parallel
+  shard_map entry when the policy's placement carries a mesh);
+* ``spike_format='packed'`` + a `WeightJoinPlan` -> the dual-sparse BSR
+  kernel (load-time weight join + device-side spike join; sharded plans
+  dispatch through shard_map under the policy/serve mesh);
+* ``weight_sparsity='dual_sparse'`` + raw (pruned) weights -> convenience:
+  plan built per call, then the BSR kernel.
+
+The wrappers handle padding to MXU-aligned blocks and backend dispatch
+(interpret=True off-TPU so the kernels are validated everywhere; compiled on
+real TPUs).  Per-request spike activity is a pure value change: no host work
+and no retrace across requests (`BSR_TRACE_COUNT` counts traces so callers
+can assert the latter).
+
+The pre-policy entry points (``ftp_spmm``, ``ftp_spmm_fused_lif``,
+``ftp_spmm_bsr`` and friends) remain as thin shims that emit a
+`DeprecationWarning` and forward to the same internals — internal code and
+tests never call them (CI runs tier-1 with ``-W error::DeprecationWarning``).
 """
 from __future__ import annotations
 
 import contextlib
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -39,11 +58,12 @@ def _on_tpu() -> bool:
 # ---------------------------------------------------------------------------
 # Serve-mesh context: the serving engine scopes a (data, model) mesh around
 # its jit'd prefill/decode calls (read at TRACE time, like the spiking-FFN
-# mode).  Under an active mesh, `ftp_spmm_bsr` dispatches plans that carry a
+# mode).  Under an active mesh, the BSR path dispatches plans that carry a
 # leading model-shard axis (join_plan.shard_plan) through a shard_map whose
 # row axis is `data` (request batch) and whose column axis is `model` (plan
 # column slabs) — each model shard joins only its own slab of the static
-# weight plan against the device-local spike activity map.
+# weight plan against the device-local spike activity map.  `dispatch` with
+# a policy whose placement carries a mesh installs that mesh for the call.
 # ---------------------------------------------------------------------------
 
 _SERVE_MESH = None
@@ -91,8 +111,13 @@ def _pick_blocks(M, K, N, bm, bk, bn):
     return min(bm, max(8, M)), min(bk, max(8, K)), min(bn, max(128, N) if N >= 128 else N)
 
 
+# ---------------------------------------------------------------------------
+# Dense-weight internals (canonical implementations; `dispatch` is the
+# public API, the legacy names below are deprecated shims over these).
+# ---------------------------------------------------------------------------
+
 @functools.partial(jax.jit, static_argnames=("T", "bm", "bk", "bn", "interpret"))
-def ftp_spmm(
+def _spmm(
     a_packed, b, T: int, *, bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None
 ):
     """(M, K) uint32 x (K, N) -> (T, M, N) f32 (dense-weight FTP kernel)."""
@@ -109,7 +134,7 @@ def ftp_spmm(
 @functools.partial(
     jax.jit, static_argnames=("T", "v_th", "tau", "bm", "bk", "bn", "interpret")
 )
-def ftp_spmm_fused_lif(
+def _spmm_fused(
     a_packed,
     b,
     T: int,
@@ -134,22 +159,20 @@ def ftp_spmm_fused_lif(
     return c[:M, :N], u[:M, :N]
 
 
-# ---------------------------------------------------------------------------
-# Batched entry points (serving): a (B, M, K) packed batch is one
-# (B*M, K) x (K, N) problem — the kernels are row-parallel, so folding the
-# batch into the row dimension is exact and keeps the MXU grid dense.  The
-# weight tile is fetched once and reused across the whole batch (and all T
-# timesteps), which is where continuous batching compounds the paper's
-# weight-traffic amortization.
-# ---------------------------------------------------------------------------
+# Batched entries (serving): a (B, M, K) packed batch is one (B*M, K) x
+# (K, N) problem — the kernels are row-parallel, so folding the batch into
+# the row dimension is exact and keeps the MXU grid dense.  The weight tile
+# is fetched once and reused across the whole batch (and all T timesteps),
+# which is where continuous batching compounds the paper's weight-traffic
+# amortization.
 
 @functools.partial(jax.jit, static_argnames=("T", "bm", "bk", "bn", "interpret"))
-def ftp_spmm_batched(
+def _spmm_batched(
     a_packed, b, T: int, *, bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None
 ):
     """(B, M, K) uint32 x (K, N) -> (T, B, M, N) f32."""
     B, M, K = a_packed.shape
-    out = ftp_spmm(
+    out = _spmm(
         a_packed.reshape(B * M, K), b, T,
         bm=bm, bk=bk, bn=bn, interpret=interpret,
     )
@@ -159,7 +182,7 @@ def ftp_spmm_batched(
 @functools.partial(
     jax.jit, static_argnames=("T", "v_th", "tau", "bm", "bk", "bn", "interpret")
 )
-def ftp_spmm_fused_lif_batched(
+def _spmm_fused_batched(
     a_packed,
     b,
     T: int,
@@ -173,7 +196,7 @@ def ftp_spmm_fused_lif_batched(
 ):
     """(B, M, K) uint32 x (K, N) -> ((B, M, N) uint32, (B, M, N) f32)."""
     B, M, K = a_packed.shape
-    c, u = ftp_spmm_fused_lif(
+    c, u = _spmm_fused(
         a_packed.reshape(B * M, K), b, T, v_th, tau,
         bm=bm, bk=bk, bn=bn, interpret=interpret,
     )
@@ -189,8 +212,8 @@ def _spmm_sharded(a_packed, b, T, bm, bk, bn, interpret, mesh):
     row = _row_axis(mesh, M)
 
     def body(a_loc, b_loc):
-        return ftp_spmm(a_loc, b_loc, T, bm=bm, bk=bk, bn=bn,
-                        interpret=interpret)
+        return _spmm(a_loc, b_loc, T, bm=bm, bk=bk, bn=bn,
+                     interpret=interpret)
 
     out = shard_map(
         body,
@@ -205,36 +228,30 @@ def _spmm_sharded(a_packed, b, T, bm, bk, bn, interpret, mesh):
     )
 
 
-def ftp_spmm_sharded(
+def _spmm_mesh(
     a_packed, b, T: int, *, mesh=None,
     bm=_k.BM, bk=_k.BK, bn=_k.BN, interpret=None,
 ):
-    """Mesh-parallel dense-weight FTP entry: weight columns on `model`,
-    spike rows on `data` (when divisible) — each shard runs the plain
-    kernel on its (row-block, column-slab) tile; the full-K contraction per
-    output element stays inside one shard, so the result equals the
-    unsharded `ftp_spmm` exactly.  Falls back to the single-device wrapper
-    when no mesh is active or the column count does not divide the model
-    axis.
-
-    The ENGINE's mesh path is the BSR plan entry above (dual-sparse is the
-    default for pruned spiking archs); this is the public mesh entry for
-    dense-weight packed pipelines (spike streams, offline experiments) that
-    call the kernels directly."""
+    """Mesh-aware dense-weight FTP entry: weight columns on `model`, spike
+    rows on `data` (when divisible) — each shard runs the plain kernel on
+    its (row-block, column-slab) tile; the full-K contraction per output
+    element stays inside one shard, so the result equals the unsharded
+    `_spmm` exactly.  Falls back to the single-device wrapper when no mesh
+    is active or the column count does not divide the model axis."""
     mesh = get_serve_mesh() if mesh is None else mesh
     interpret = (not _on_tpu()) if interpret is None else interpret
     if mesh is None:
-        return ftp_spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
-                        interpret=interpret)
+        return _spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
+                     interpret=interpret)
     mp = mesh.shape.get("model", 1)
     if mp > 1 and b.shape[1] % mp:
-        return ftp_spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
-                        interpret=interpret)
+        return _spmm(a_packed, b, T, bm=bm, bk=bk, bn=bn,
+                     interpret=interpret)
     return _spmm_sharded(a_packed, b, T, bm, bk, bn, interpret, mesh)
 
 
 # ---------------------------------------------------------------------------
-# Dual-sparse path: load-time weight join plan + device-side spike join.
+# Dual-sparse internals: load-time weight join plan + device-side spike join.
 #
 # The weight side of the block-level inner join is static per model and lives
 # in a `WeightJoinPlan` (kernels/join_plan.py) built ONCE at load; the spike
@@ -344,7 +361,7 @@ def _bsr_call_sharded(
     return gather(c, P(None, row, None))[:, :, :n_out], u
 
 
-def ftp_spmm_bsr(
+def _bsr(
     a_packed,
     plan,
     T: int,
@@ -364,10 +381,11 @@ def ftp_spmm_bsr(
     epilogue there are no membrane potentials.  Fully jit'd; per-request
     work is device-only.
 
-    Under an active serve mesh (`set_serve_mesh` / the engine's scope), a
-    plan carrying a leading model-shard axis (`join_plan.shard_plan`)
-    dispatches to the shard_map entry: each model shard joins its own
-    column slab of the static plan against the device-local activity map.
+    Under an active serve mesh (`set_serve_mesh` / the engine's scope /
+    `dispatch` with a mesh placement), a plan carrying a leading model-shard
+    axis (`join_plan.shard_plan`) dispatches to the shard_map entry: each
+    model shard joins its own column slab of the static plan against the
+    device-local activity map.
     """
     interpret = (not _on_tpu()) if interpret is None else interpret
     mesh = get_serve_mesh()
@@ -396,7 +414,7 @@ def ftp_spmm_bsr(
     )
 
 
-def ftp_spmm_bsr_batched(
+def _bsr_batched(
     a_packed,
     plan,
     T: int,
@@ -409,10 +427,10 @@ def ftp_spmm_bsr_batched(
     interpret: bool | None = None,
 ):
     """(B, M, K) batched dual-sparse entry — the batch folds into rows (same
-    trick as `ftp_spmm_batched`), so one weight-plan fetch serves the whole
+    trick as `_spmm_batched`), so one weight-plan fetch serves the whole
     batch and all T timesteps."""
     B, M, K = a_packed.shape
-    out, u = ftp_spmm_bsr(
+    out, u = _bsr(
         a_packed.reshape(B * M, K), plan, T, v_th, tau,
         bm=bm, n_out=n_out, fuse_lif=fuse_lif, interpret=interpret,
     )
@@ -422,17 +440,238 @@ def ftp_spmm_bsr_batched(
     return out.reshape(T, B, M, N), u.reshape(B, M, N)
 
 
+def _dual_sparse_once(
+    a_packed: np.ndarray,
+    b: np.ndarray,
+    T: int,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    *,
+    bm=_k.BM,
+    bk=_k.BK,
+    bn=_k.BN,
+    fuse_lif: bool = True,
+    interpret: bool | None = None,
+):
+    """End-to-end dual-sparse LoAS layer: plan construction + BSR kernel.
+
+    Convenience entry (numpy/dense weights in, jax out) for tests, examples
+    and offline experiments — it builds the `WeightJoinPlan` per call.  A
+    real serving path builds plans once at model load
+    (`snn_layers.attach_join_plans` / `models.layers.attach_spiking_ffn_plans`)
+    and reuses them across requests.
+    """
+    M, K = a_packed.shape
+    N = b.shape[1]
+    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
+    plan = build_weight_plan(np.asarray(b), bk=bk_, bn=bn_)
+    return _bsr(
+        jnp.asarray(a_packed), plan, T, v_th, tau,
+        bm=bm_, n_out=N, fuse_lif=fuse_lif, interpret=interpret,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The policy front door.
+# ---------------------------------------------------------------------------
+
+def dispatch(
+    a,
+    weights_or_plan,
+    policy,
+    T: int,
+    *,
+    fuse_lif: bool = False,
+    v_th: float = DEFAULT_VTH,
+    tau: float = DEFAULT_TAU,
+    n_out: int | None = None,
+    bm: int | None = None,
+    bk: int | None = None,
+    bn: int | None = None,
+    interpret: bool | None = None,
+):
+    """Run one FTP layer under an `ExecutionPolicy` — the single public
+    kernel entry point.
+
+    ``a``: spike activations in the policy's ``spike_format`` — float:
+    (T, M, K) f32 {0,1} planes; packed: (M, K) or batched (B, M, K) uint32
+    words.  ``weights_or_plan``: a dense (K, N) weight matrix or a load-time
+    `WeightJoinPlan` (requires ``weight_sparsity='dual_sparse'``).  A policy
+    whose placement carries a mesh installs it for the call (sharded
+    entries engage exactly as under the engine's serve-mesh scope);
+    otherwise any ambient serve mesh applies.  Sharded entries exist for
+    the plan path and the non-fused dense path (batched operands fold into
+    rows first); the fused dense path has no sharded implementation and
+    runs with single-device semantics even under a mesh.
+
+    Returns (T, M[, N-batched], N) full sums without ``fuse_lif``; with it,
+    (packed spike words | float spikes, membrane potentials) — the LoAS
+    fused P-LIF layer in the policy's spike format.
+
+    Dual-sparse with RAW weights builds the plan per call (offline
+    convenience); serving paths build plans once at load and pass them in.
+    """
+    from repro.serve.policy import ExecutionPolicy  # lazy: serve sits above
+
+    if not isinstance(policy, ExecutionPolicy):
+        raise TypeError(
+            f"dispatch needs an ExecutionPolicy, got {type(policy).__name__}"
+            " — e.g. repro.serve.policy.PACKED_DENSE"
+        )
+    plan_like = isinstance(weights_or_plan, WeightJoinPlan)
+    if plan_like and policy.weight_sparsity != "dual_sparse":
+        raise ValueError(
+            "got a WeightJoinPlan but policy.weight_sparsity="
+            f"{policy.weight_sparsity!r}; use a dual_sparse policy "
+            "(e.g. repro.serve.policy.PACKED_DUAL) or pass dense weights"
+        )
+
+    if policy.spike_format == "float":
+        # Differentiable jnp path: (T, M, K) float {0,1} spikes.
+        from repro.core.ftp import ftp_spmspm_unpacked
+        from repro.core.lif import lif_forward
+
+        o = ftp_spmspm_unpacked(a, weights_or_plan)
+        if fuse_lif:
+            return lif_forward(o, v_th=v_th, tau=tau)
+        return o
+
+    mesh = policy.mesh if policy.mesh is not None else get_serve_mesh()
+    bm_ = _k.BM if bm is None else bm
+    bk_ = _k.BK if bk is None else bk
+    bn_ = _k.BN if bn is None else bn
+    batched = a.ndim == 3
+    with serve_mesh_scope(mesh):
+        if plan_like:
+            fn = _bsr_batched if batched else _bsr
+            return fn(
+                a, weights_or_plan, T, v_th, tau,
+                bm=bm, n_out=n_out, fuse_lif=fuse_lif, interpret=interpret,
+            )
+        if policy.weight_sparsity == "dual_sparse":
+            a2 = a.reshape(-1, a.shape[-1]) if batched else a
+            out, u = _dual_sparse_once(
+                a2, weights_or_plan, T, v_th, tau,
+                bm=bm_, bk=bk_, bn=bn_, fuse_lif=fuse_lif,
+                interpret=interpret,
+            )
+            if batched:
+                B, M = a.shape[:2]
+                u = u.reshape(B, M, -1)
+                out = (out.reshape(B, M, -1) if fuse_lif
+                       else out.reshape(T, B, M, -1))
+            return out, u
+        if fuse_lif:
+            # no sharded fused dense entry exists: a mesh placement is
+            # ignored here (single-device semantics, values unchanged)
+            fn = _spmm_fused_batched if batched else _spmm_fused
+            return fn(a, weights_or_plan, T, v_th, tau,
+                      bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+        if batched:
+            # fold the batch into rows (exact — kernels are row-parallel)
+            # so the mesh entry's row/column sharding applies to batches too
+            B, M, K = a.shape
+            out = _spmm_mesh(a.reshape(B * M, K), weights_or_plan, T,
+                             mesh=mesh, bm=bm_, bk=bk_, bn=bn_,
+                             interpret=interpret)
+            return out.reshape(T, B, M, weights_or_plan.shape[1])
+        return _spmm_mesh(a, weights_or_plan, T, mesh=mesh,
+                          bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Deprecated pre-policy entry points (shims).  Every one maps to `dispatch`
+# with an equivalent policy; they warn so drifted call sites surface (CI
+# runs tier-1 with -W error::DeprecationWarning).
+# ---------------------------------------------------------------------------
+
+def _warn_legacy(name: str, equivalent: str) -> None:
+    warnings.warn(
+        f"ops.{name} is deprecated; use ops.dispatch(a, weights_or_plan, "
+        f"policy, T) with {equivalent} (see repro.serve.policy)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def ftp_spmm(a_packed, b, T: int, **kw):
+    """Deprecated — `dispatch(a, w, PACKED_DENSE, T)`."""
+    _warn_legacy("ftp_spmm", "policy=PACKED_DENSE")
+    return _spmm(a_packed, b, T, **kw)
+
+
+def ftp_spmm_fused_lif(a_packed, b, T: int, *args, **kw):
+    """Deprecated — `dispatch(a, w, PACKED_DENSE, T, fuse_lif=True)`."""
+    _warn_legacy("ftp_spmm_fused_lif", "policy=PACKED_DENSE, fuse_lif=True")
+    return _spmm_fused(a_packed, b, T, *args, **kw)
+
+
+def ftp_spmm_batched(a_packed, b, T: int, **kw):
+    """Deprecated — `dispatch` with a (B, M, K) operand."""
+    _warn_legacy("ftp_spmm_batched", "policy=PACKED_DENSE (batched operand)")
+    return _spmm_batched(a_packed, b, T, **kw)
+
+
+def ftp_spmm_fused_lif_batched(a_packed, b, T: int, *args, **kw):
+    """Deprecated — `dispatch` with a (B, M, K) operand and fuse_lif."""
+    _warn_legacy(
+        "ftp_spmm_fused_lif_batched",
+        "policy=PACKED_DENSE, fuse_lif=True (batched operand)",
+    )
+    return _spmm_fused_batched(a_packed, b, T, *args, **kw)
+
+
+def ftp_spmm_sharded(a_packed, b, T: int, *, mesh=None, **kw):
+    """Deprecated — `dispatch` with a policy whose placement carries the
+    mesh."""
+    _warn_legacy(
+        "ftp_spmm_sharded",
+        "policy=ExecutionPolicy(spike_format='packed', "
+        "placement=Placement(mesh=mesh))",
+    )
+    return _spmm_mesh(a_packed, b, T, mesh=mesh, **kw)
+
+
+def ftp_spmm_bsr(a_packed, plan, T: int, *args, **kw):
+    """Deprecated — `dispatch(a, plan, PACKED_DUAL, T, fuse_lif=...)`."""
+    _warn_legacy("ftp_spmm_bsr", "policy=PACKED_DUAL")
+    return _bsr(a_packed, plan, T, *args, **kw)
+
+
+def ftp_spmm_bsr_batched(a_packed, plan, T: int, *args, **kw):
+    """Deprecated — `dispatch` with a (B, M, K) operand and a plan."""
+    _warn_legacy("ftp_spmm_bsr_batched", "policy=PACKED_DUAL (batched operand)")
+    return _bsr_batched(a_packed, plan, T, *args, **kw)
+
+
 def ftp_spmm_bsr_fused_lif(a_packed, plan, T, *args, **kwargs):
-    """Fused P-LIF dual-sparse layer (packed spikes out) — alias for
-    ``ftp_spmm_bsr(..., fuse_lif=True)``."""
+    """Deprecated — `dispatch(a, plan, PACKED_DUAL, T, fuse_lif=True)`."""
+    _warn_legacy(
+        "ftp_spmm_bsr_fused_lif", "policy=PACKED_DUAL, fuse_lif=True"
+    )
     kwargs["fuse_lif"] = True
-    return ftp_spmm_bsr(a_packed, plan, T, *args, **kwargs)
+    return _bsr(a_packed, plan, T, *args, **kwargs)
 
 
 def ftp_spmm_bsr_fused_lif_batched(a_packed, plan, T, *args, **kwargs):
+    """Deprecated — batched `dispatch` with fuse_lif and a plan."""
+    _warn_legacy(
+        "ftp_spmm_bsr_fused_lif_batched",
+        "policy=PACKED_DUAL, fuse_lif=True (batched operand)",
+    )
     kwargs["fuse_lif"] = True
-    return ftp_spmm_bsr_batched(a_packed, plan, T, *args, **kwargs)
+    return _bsr_batched(a_packed, plan, T, *args, **kwargs)
 
+
+def ftp_spmm_dual_sparse(a_packed, b, T: int, *args, **kw):
+    """Deprecated — `dispatch(a, w, PACKED_DUAL, T)` (plan built per call)."""
+    _warn_legacy("ftp_spmm_dual_sparse", "policy=PACKED_DUAL (raw weights)")
+    return _dual_sparse_once(a_packed, b, T, *args, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Offline analysis helpers (not deprecated — no policy equivalent).
+# ---------------------------------------------------------------------------
 
 def build_block_join(
     a_packed: np.ndarray, b: np.ndarray, bm: int, bk: int, bn: int
@@ -466,34 +705,3 @@ def build_block_join(
         live, idx[kidx, np.arange(nnb)[None, :, None]], 0
     ).astype(np.int32)
     return payload, kidx, vidx, cnt, jmax
-
-
-def ftp_spmm_dual_sparse(
-    a_packed: np.ndarray,
-    b: np.ndarray,
-    T: int,
-    v_th: float = DEFAULT_VTH,
-    tau: float = DEFAULT_TAU,
-    *,
-    bm=_k.BM,
-    bk=_k.BK,
-    bn=_k.BN,
-    fuse_lif: bool = True,
-    interpret: bool | None = None,
-):
-    """End-to-end dual-sparse LoAS layer: plan construction + BSR kernel.
-
-    Convenience entry (numpy/dense weights in, jax out) for tests, examples
-    and offline experiments — it builds the `WeightJoinPlan` per call.  A
-    real serving path builds plans once at model load
-    (`snn_layers.attach_join_plans` / `models.layers.attach_spiking_ffn_plans`)
-    and reuses them across requests.
-    """
-    M, K = a_packed.shape
-    N = b.shape[1]
-    bm_, bk_, bn_ = _pick_blocks(M, K, N, bm, bk, bn)
-    plan = build_weight_plan(np.asarray(b), bk=bk_, bn=bn_)
-    return ftp_spmm_bsr(
-        jnp.asarray(a_packed), plan, T, v_th, tau,
-        bm=bm_, n_out=N, fuse_lif=fuse_lif, interpret=interpret,
-    )

@@ -3,21 +3,34 @@
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --batch 4 --prompt-len 32 --gen 16
 
-Sharded serving (data/model-parallel over a device mesh; on CPU use fake
-XLA devices):
+Execution configuration is one declarative `ExecutionPolicy`
+(`repro.serve.policy`): ``--spike-format`` / ``--weight-sparsity`` /
+``--mesh`` (placement) / ``--exactness`` map 1:1 onto its fields.  Sharded
+serving (on CPU use fake XLA devices):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --spiking --mesh data,model --fake-devices 8 --batch 4 --gen 8
+
+Approximate tensor parallelism (psum-TP attention/MLP on the model axis —
+throughput over token identity; measured logit drift vs. the bitwise
+reference is printed and bounded by ``--tol``):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --mesh data,model --fake-devices 8 --exactness approximate --batch 4
 
 Requests (`--batch` of them) are submitted to `repro.serve.Engine`, which
 batches prefills, merges decode cohorts, and reports TTFT / throughput.
 `generate` below is the original single-shot loop, kept as the reference
 oracle the engine is tested token-identical against.
+
+Deprecated flags (`--spiking-packed`, `--no-dual-sparse`) still work: they
+map onto the policy and warn.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +49,42 @@ def generate(model, params, tokens, cache, steps: int):
     return jnp.concatenate(out, axis=1)
 
 
+def build_policy(args, cfg):
+    """Map CLI flags (and the deprecated ones) onto one ExecutionPolicy."""
+    from repro.serve import (
+        ExecutionPolicy,
+        Placement,
+        approximate,
+        bitwise,
+    )
+
+    spike_format = args.spike_format
+    weight_sparsity = args.weight_sparsity
+    if args.spiking_packed:
+        warnings.warn(
+            "--spiking-packed is deprecated; use --spike-format packed",
+            DeprecationWarning,
+        )
+        spike_format = spike_format or "packed"
+    if args.no_dual_sparse:
+        warnings.warn(
+            "--no-dual-sparse is deprecated; use --weight-sparsity dense",
+            DeprecationWarning,
+        )
+        weight_sparsity = weight_sparsity or "dense"
+    placement = Placement.from_spec(args.mesh)
+    exactness = (
+        approximate(args.tol) if args.exactness == "approximate" else bitwise()
+    )
+    return ExecutionPolicy.for_arch(
+        cfg,
+        spike_format=spike_format,
+        weight_sparsity=weight_sparsity,
+        placement=placement,
+        exactness=exactness,
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -48,20 +97,40 @@ def main(argv=None):
                     help="engine slot budget (0 = one slot per request)")
     ap.add_argument("--batch-align", type=int, default=1,
                     help="pad prefill batches to a multiple of this")
-    ap.add_argument("--spiking-packed", action="store_true",
-                    help="spiking archs: packed uint32 FFN inference path")
+    # -- ExecutionPolicy fields ---------------------------------------------
+    ap.add_argument("--spike-format", choices=("float", "packed"),
+                    default=None,
+                    help="policy.spike_format (default: packed for spiking "
+                         "archs, float otherwise)")
+    ap.add_argument("--weight-sparsity", choices=("dense", "dual_sparse"),
+                    default=None,
+                    help="policy.weight_sparsity (default: dual_sparse for "
+                         "packed + LTH-pruned archs)")
+    ap.add_argument("--mesh", default=None,
+                    help="policy.placement mesh spec, e.g. 'data,model' "
+                         "(auto sizes), 'data=4,model=2' or '4,2'; omitted "
+                         "= unsharded; single-device runs fall back "
+                         "automatically")
+    ap.add_argument("--exactness", choices=("bitwise", "approximate"),
+                    default="bitwise",
+                    help="policy.exactness: bitwise = token-identical to "
+                         "the single-device loop; approximate = psum-TP "
+                         "attention/MLP on the model axis, logit drift "
+                         "bounded by --tol")
+    ap.add_argument("--tol", type=float, default=0.05,
+                    help="max logit drift allowed under --exactness "
+                         "approximate")
+    # -- arch surgery -------------------------------------------------------
     ap.add_argument("--spiking", action="store_true",
                     help="swap the arch's MLP blocks for dual-sparse "
                          "spiking FFNs (paper workload)")
     ap.add_argument("--weight-density", type=float, default=0.3,
                     help="LTH density for --spiking (plans built at load)")
+    # -- deprecated (map onto the policy, with a warning) -------------------
+    ap.add_argument("--spiking-packed", action="store_true",
+                    help="DEPRECATED: use --spike-format packed")
     ap.add_argument("--no-dual-sparse", action="store_true",
-                    help="opt out of the dual-sparse BSR serving path "
-                         "(dense-weight packed kernels instead)")
-    ap.add_argument("--mesh", default=None,
-                    help="serve mesh spec, e.g. 'data,model' (auto sizes), "
-                         "'data=4,model=2' or '4,2'; omitted = unsharded; "
-                         "single-device runs fall back automatically")
+                    help="DEPRECATED: use --weight-sparsity dense")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force this many fake XLA host devices (must be "
                          "set before the jax backend initializes; CPU-only "
@@ -77,7 +146,7 @@ def main(argv=None):
 
     from repro.configs import get_config, smoke_variant
     from repro.models.registry import build_model
-    from repro.serve import Engine, make_serve_mesh
+    from repro.serve import Engine, check_parity
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -87,17 +156,18 @@ def main(argv=None):
             cfg, spiking_ffn=True,
             spiking_weight_density=args.weight_density,
         )
-        args.spiking_packed = True
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
-    mesh = make_serve_mesh(args.mesh) if args.mesh else None
+    policy = build_policy(args, cfg)
+    print(f"policy: {policy.describe()}")
+    mesh = policy.mesh
     if args.mesh and mesh is None:
         print("mesh: single device — auto fallback to unsharded serving")
     elif mesh is not None:
         print(f"mesh: {dict(mesh.shape)} over {len(mesh.devices.flat)} "
               f"devices ({jax.default_backend()})")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
     prompts = [
         np.asarray(rng.integers(0, cfg.vocab, size=(args.prompt_len,)),
@@ -110,12 +180,44 @@ def main(argv=None):
         max_len=args.prompt_len + args.gen,
         max_slots=args.max_slots or args.batch,
         batch_align=args.batch_align,
-        spiking_packed=args.spiking_packed,
-        dual_sparse=False if args.no_dual_sparse else None,
-        mesh=mesh,
+        policy=policy,
     )
     outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()
+    if not policy.token_identical:
+        # measure drift against a bitwise single-device run of the same
+        # prompts — the contract --tol bounds.  The reference keeps the SAME
+        # spike format / weight sparsity (only placement + exactness reset),
+        # so the measured drift is pure psum-TP reassociation, not
+        # float-vs-packed kernel arithmetic differences.
+        import dataclasses as _dc
+
+        from repro.serve import Placement, bitwise
+
+        ref_policy = _dc.replace(
+            policy, placement=Placement(), exactness=bitwise()
+        )
+        ref = Engine(
+            model, params,
+            max_len=args.prompt_len + args.gen,
+            max_slots=args.max_slots or args.batch,
+            batch_align=args.batch_align,
+            policy=ref_policy,
+            capture_logits=True,
+        )
+        ref_outs = ref.generate_batch(prompts, args.gen)
+        rep = check_parity(
+            policy, ref_outs, outs,
+            ref_logits=ref.drain_logit_traces(),
+            got_logits=engine.drain_logit_traces(),
+        )
+        # s["token_identical"] stays the policy CONTRACT (False here);
+        # the measured facts get their own keys
+        s["max_logit_drift"] = rep["max_logit_drift"]
+        s["token_match_fraction"] = rep["token_match_fraction"]
+        print(f"approximate-TP drift: max |logit drift| "
+              f"{rep['max_logit_drift']:.3e} <= tol {policy.exactness.tol} "
+              f"(token match {rep['token_match_fraction']:.0%})")
     print(f"served {s['n_requests']} requests / {s['total_tokens']} tokens "
           f"in {s['wall_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
           f"ttft_p50 {s['ttft_s_p50']*1e3:.0f}ms, "

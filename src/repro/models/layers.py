@@ -317,8 +317,9 @@ def attach_spiking_ffn_plans(
     into that many self-contained slabs (`join_plan.shard_plan`) stacked on
     an extra axis — innermost, so a scanned layer stack slices to
     (shards, ...) per layer.  `serve.sharding.place_plans` then deals the
-    slab axis out over the mesh's `model` axis, and `ops.ftp_spmm_bsr`
-    dispatches such plans through its shard_map entry.
+    slab axis out over the mesh's `model` axis, and the BSR kernel entry
+    (`ops.dispatch` with a dual-sparse policy) routes such plans through
+    its shard_map entry.
     """
     if not cfg.spiking_ffn:
         return params
@@ -373,7 +374,8 @@ def mlp_apply(p, x, cfg: ArchConfig):
         # FTP dataflow, surrogate-gradient differentiable.  Weights carry
         # their LTH hard zeros from mlp_init; in packed-inference mode a
         # serving-time `attach_spiking_ffn_plans` adds per-layer join plans
-        # that route both GEMMs through the dual-sparse BSR kernel.
+        # that route both GEMMs through the dual-sparse BSR kernel (via
+        # `ops.dispatch` under the engine's ExecutionPolicy).
         from repro.core.snn_layers import SpikingConfig, spiking_ffn_apply
 
         scfg = SpikingConfig(

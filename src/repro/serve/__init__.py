@@ -1,4 +1,10 @@
-"""Continuous-batching serving engine (see `engine.py` for the design)."""
+"""Continuous-batching serving engine (see `engine.py` for the design).
+
+Execution configuration is one declarative `ExecutionPolicy`
+(`policy.py`): spike format x weight sparsity x placement x exactness —
+consumed by the engine, the kernel dispatcher (`repro.kernels.ops.dispatch`)
+and the serve CLI.
+"""
 from .batching import (
     PackedSpikeCache,
     bucket_key,
@@ -9,6 +15,17 @@ from .batching import (
 )
 from .engine import Cohort, Engine
 from .metrics import EngineMetrics, RequestMetrics
+from .policy import (
+    Exactness,
+    ExecutionPolicy,
+    ParityError,
+    Placement,
+    approximate,
+    bitwise,
+    check_parity,
+    drift_report,
+    max_logit_drift,
+)
 from .scheduler import AdmissionError, Request, RequestState, Scheduler
 from .sharding import make_serve_mesh, mesh_summary, parse_mesh_spec
 
@@ -17,16 +34,25 @@ __all__ = [
     "Cohort",
     "Engine",
     "EngineMetrics",
+    "Exactness",
+    "ExecutionPolicy",
     "PackedSpikeCache",
+    "ParityError",
+    "Placement",
     "Request",
     "RequestMetrics",
     "RequestState",
     "Scheduler",
+    "approximate",
+    "bitwise",
     "bucket_key",
     "cache_batch_size",
     "cache_concat",
     "cache_take",
+    "check_parity",
+    "drift_report",
     "make_serve_mesh",
+    "max_logit_drift",
     "mesh_summary",
     "pad_batch",
     "parse_mesh_spec",

@@ -22,38 +22,50 @@ same cache shapes, and rows of a batch are independent in every non-MoE
 arch (MoE capacity routing couples rows, so batch padding and cohort
 merging are disabled for MoE archs).
 
-For spiking-FFN archs, `spiking_packed=True` additionally (a) switches the
-in-model spiking FFN to the packed inference path (scoped to the engine's
-prefill/decode calls; training traces elsewhere in the process keep the
-differentiable float path), so SNN layers carry uint32 spike words (not
-unpacked (T, ...) float32 planes) through every engine step, and (b) keeps
-a `PackedSpikeCache` of each slot's direct-encoded current token between
-steps — spike-domain telemetry (sparsity, packed-vs-unpacked bytes) at the
-cost of one small jit'd encode per decode step; spike-stream pipelines
-consume the same packed format via `snn_layers.spiking_ffn_apply_packed`.
+Every execution choice is ONE declarative `ExecutionPolicy`
+(`serve/policy.py`) — spike format, weight sparsity, placement, exactness —
+consumed here and by kernel dispatch:
 
-When the arch is LTH-pruned (`spiking_weight_density < 1`), the packed path
-defaults to DUAL-sparse: engine construction attaches per-layer weight join
-plans (`models.layers.attach_spiking_ffn_plans` — host work, once) and every
-spiking FFN GEMM runs through the BSR kernel, which joins the static weight
-plan with a device-computed spike activity map in-kernel.  Requests only
-change spike values, never shapes, so serving steps hit the jit cache —
-no per-request host join and no recompilation (`dual_sparse=False` opts
-back into the dense-weight packed path).
+* ``spike_format='packed'`` switches the in-model spiking FFN to the packed
+  inference path (scoped to the engine's prefill/decode calls; training
+  traces elsewhere in the process keep the differentiable float path), so
+  SNN layers carry uint32 spike words (not unpacked (T, ...) float32
+  planes) through every engine step, and keeps a `PackedSpikeCache` of each
+  slot's direct-encoded current token between steps — spike-domain
+  telemetry at the cost of one small jit'd encode per decode step.
 
-``mesh`` (serve/sharding.py) runs the whole engine data/model-parallel over
-a (data, model) device mesh: request batches and cohort caches shard down
-the `data` axis, weight join plans column-split across the `model` axis
-(each shard joins only its own slab against the device-local spike activity
-map), vocab-named weight dims column-shard — all reduction-free, so every
-mesh mode stays token-identical to single-device serving, and per-request
-placement is canonicalized so zero-retrace-across-requests survives the
-mesh.  ``mesh=None`` (the auto single-device fallback) is exactly the
-unsharded engine.
+* ``weight_sparsity='dual_sparse'`` (the `for_arch` default for LTH-pruned
+  spiking archs): engine construction attaches per-layer weight join plans
+  (`models.layers.attach_spiking_ffn_plans` — host work, once) and every
+  spiking FFN GEMM runs through the BSR kernel, which joins the static
+  weight plan with a device-computed spike activity map in-kernel.
+  Requests only change spike values, never shapes, so serving steps hit
+  the jit cache — no per-request host join and no recompilation.
+
+* ``placement`` (serve/sharding.py) runs the whole engine
+  data/model-parallel over a (data, model) device mesh: request batches and
+  cohort caches shard down the `data` axis, weight join plans column-split
+  across the `model` axis (each shard joins only its own slab against the
+  device-local spike activity map), and the policy's `model_sharded_dims`
+  pick which weight dims column-shard.  Per-request placement is
+  canonicalized so zero-retrace-across-requests survives the mesh.  No
+  mesh = exactly the unsharded engine.
+
+* ``exactness='bitwise'`` (default) keeps every mesh mode token-identical
+  to single-device serving (reduction-free placement only).
+  ``exactness=approximate(tol)`` opts into psum-TP of attention/MLP on the
+  model axis (the training rules in `repro.sharding`, throughput over
+  exactness): greedy tokens may flip, logit drift is bounded by ``tol``
+  (`serve.policy.check_parity`), and the engine captures per-request logit
+  traces so drift is measurable.
+
+The legacy knobs (``spiking_packed`` / ``dual_sparse`` / ``mesh``) still
+work: they map to the equivalent policy and emit a `DeprecationWarning`.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -70,6 +82,7 @@ from .batching import (
     pad_batch,
 )
 from .metrics import EngineMetrics, RequestMetrics
+from .policy import ExecutionPolicy
 from .scheduler import Request, RequestState, Scheduler
 
 
@@ -102,19 +115,35 @@ class Engine:
         bucket_align: int = 1,
         eos_id: int | None = None,
         merge_cohorts: bool = True,
-        spiking_packed: bool = False,
-        dual_sparse: bool | None = None,
-        mesh=None,
+        policy: ExecutionPolicy | None = None,
+        capture_logits: bool | None = None,
+        spiking_packed: bool | None = None,  # deprecated -> policy
+        dual_sparse: bool | None = None,     # deprecated -> policy
+        mesh=None,                           # deprecated -> policy.placement
     ):
         cfg = model.cfg
         if not cfg.supports_decode or cfg.encoder_only:
             raise ValueError(f"{cfg.name} has no decode path; cannot serve")
+        policy = self._resolve_policy(
+            cfg, policy, spiking_packed, dual_sparse, mesh
+        )
+        policy.validate_for(cfg)
+        self.policy = policy
+        mesh = policy.mesh
         self.model = model
         self.params = params
         self.cfg = cfg
         self.max_len = max_len
         self.eos_id = eos_id
         self.mesh = mesh
+        # Logit traces (rid -> [last-position logits per emitted token]):
+        # captured by default under approximate exactness, where drift vs. a
+        # bitwise reference is the contract being measured (check_parity).
+        self.capture_logits = (
+            not policy.token_identical
+            if capture_logits is None else bool(capture_logits)
+        )
+        self.logit_traces: dict[int, list[np.ndarray]] = {}
         self.row_independent = cfg.n_experts == 0
         self.batch_align = batch_align if self.row_independent else 1
         if mesh is not None and self.row_independent:
@@ -132,20 +161,24 @@ class Engine:
         self.results: dict[int, RequestState] = {}
         self._axes = model.cache_axes()
         if mesh is not None:
-            # weights on the model axis (reduction-free serve rules — see
-            # serve/sharding.py); must happen BEFORE plans attach, while the
-            # param tree still matches the model's logical-axes tree
+            # weights on the model axis; the POLICY picks the dim set —
+            # reduction-free under bitwise exactness, psum-TP attention/MLP
+            # dims under approximate (see serve/sharding.py).  Must happen
+            # BEFORE plans attach, while the param tree still matches the
+            # model's logical-axes tree.
             from .sharding import shard_params
 
-            self.params = shard_params(self.params, model.axes(), mesh)
-        self.spiking_packed = bool(spiking_packed and cfg.spiking_ffn)
-        # Dual-sparse is the DEFAULT packed-spike serving path for pruned
-        # spiking archs: at load time (here, once) the LTH hard zeros in the
-        # stored params become per-layer weight join plans; per-request only
-        # the spike side of the join runs, on device, inside the kernel.
-        if dual_sparse is None:
-            dual_sparse = cfg.spiking_weight_density < 1.0
-        self.spiking_dual_sparse = bool(self.spiking_packed and dual_sparse)
+            self.params = shard_params(
+                self.params, model.axes(), mesh,
+                sharded_dims=policy.model_sharded_dims(),
+            )
+        self.spiking_packed = policy.spike_format == "packed"
+        # Dual-sparse packed-spike serving (the `for_arch` default for
+        # pruned spiking archs): at load time (here, once) the LTH hard
+        # zeros in the stored params become per-layer weight join plans;
+        # per-request only the spike side of the join runs, on device,
+        # inside the kernel.
+        self.spiking_dual_sparse = policy.weight_sparsity == "dual_sparse"
         if self.spiking_dual_sparse:
             from repro.models.layers import attach_spiking_ffn_plans
 
@@ -174,6 +207,36 @@ class Engine:
                     )
                 )
             )
+
+    @staticmethod
+    def _resolve_policy(cfg, policy, spiking_packed, dual_sparse, mesh):
+        """Either the explicit policy, or the legacy knobs mapped to their
+        equivalent policy (with a DeprecationWarning naming it)."""
+        legacy = {
+            k: v for k, v in (("spiking_packed", spiking_packed),
+                              ("dual_sparse", dual_sparse), ("mesh", mesh))
+            if v is not None
+        }
+        if policy is not None:
+            if legacy:
+                raise ValueError(
+                    f"pass either policy= or the legacy knobs "
+                    f"({', '.join(sorted(legacy))}), not both"
+                )
+            return policy
+        policy = ExecutionPolicy.from_legacy(
+            cfg, spiking_packed=bool(spiking_packed),
+            dual_sparse=dual_sparse, mesh=mesh,
+        )
+        if legacy:
+            warnings.warn(
+                f"Engine({', '.join(sorted(legacy))}=...) is deprecated; "
+                f"pass policy=ExecutionPolicy({policy.describe()}) "
+                "(see repro.serve.policy)",
+                DeprecationWarning,
+                stacklevel=3,
+            )
+        return policy
 
     def _engine_scope(self, fn):
         """Run `fn` with the engine's trace-time context installed: the
@@ -280,6 +343,7 @@ class Engine:
         self.metrics.n_prefill_batches += 1
         first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
         slots = [RequestState(r) for r in group]
+        self._capture(slots, logits)
         for st, tok in zip(slots, first):
             st.emit(int(tok), self.eos_id)
         cohort = Cohort(slots=slots, cache=cache, length=P, n_dummy=n_dummy)
@@ -345,12 +409,37 @@ class Engine:
         self.metrics.n_decode_batches += 1
         self.metrics.n_decode_rows += len(cohort.slots)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        self._capture(cohort.slots, logits)
         for st, tok in zip(cohort.slots, nxt):
             st.emit(int(tok), self.eos_id)
         cohort.length += 1
         if self.spiking_packed:
             cohort.spikes.update(self._slot_spikes(cohort))
             self._last_spike_sparsity = cohort.spikes.spike_sparsity()
+
+    def drain_logit_traces(self) -> list[list[np.ndarray]]:
+        """Per-request logit traces in rid order, CLEARING the store.
+
+        The capture buffer grows by one vocab-sized row per emitted token
+        and retirement never prunes it (the traces exist to be compared
+        AFTER a run) — so measurement windows must drain it: pass the
+        result straight to `serve.policy.check_parity`.  rid order equals
+        submission order, which is how the reference run's prompts line up.
+        """
+        out = [self.logit_traces[r] for r in sorted(self.logit_traces)]
+        self.logit_traces = {}
+        return out
+
+    def _capture(self, slots: list[RequestState], logits) -> None:
+        """Record each live slot's last-position logits (the vector whose
+        argmax is the token emitted this step) for drift measurement —
+        the observable that `serve.policy.check_parity` bounds under
+        approximate exactness."""
+        if not self.capture_logits:
+            return
+        rows = np.asarray(logits[: len(slots), -1], np.float32)
+        for st, row in zip(slots, rows):
+            self.logit_traces.setdefault(st.rid, []).append(row)
 
     def _retire(self) -> None:
         kept: list[Cohort] = []
@@ -392,6 +481,11 @@ class Engine:
         s = self.metrics.summary()
         s["rejected"] = self.scheduler.n_rejected
         s.update(mesh_summary(self.mesh))
+        s["policy"] = self.policy.describe()
+        s["exactness"] = self.policy.exactness.mode
+        s["token_identical"] = self.policy.token_identical
+        if not self.policy.token_identical:
+            s["drift_tol"] = self.policy.exactness.tol
         if self.spiking_packed:
             s["spike_sparsity"] = self._last_spike_sparsity
             s["spike_bytes_packed_per_slot"] = self.cfg.d_model * 4

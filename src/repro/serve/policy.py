@@ -1,0 +1,384 @@
+"""`ExecutionPolicy`: one declarative serve/kernel execution policy.
+
+The paper's core claim is that ONE dataflow decision (fully temporal-
+parallel, compressed spikes, in-kernel join) subsumes a pile of ad-hoc
+per-loop choices.  This module is the API-level analogue: instead of four
+independent boolean knobs threaded through the engine, the kernels and the
+CLI (``spiking_packed`` / ``dual_sparse`` / ``mesh`` / assorted flags), every
+execution choice is one frozen, hashable dataclass-pytree with four axes:
+
+* ``spike_format``    — how spike activations travel: ``"float"`` (T-plane
+  f32 {0,1} spikes, the differentiable training layout) or ``"packed"``
+  (uint32 words, bit *t* = timestep *t* — the LoAS inference layout).
+* ``weight_sparsity`` — ``"dense"`` weights, or ``"dual_sparse"``: load-time
+  `WeightJoinPlan`s + the in-kernel spike join (requires packed spikes and
+  LTH-pruned weights).
+* ``placement``       — where things run: a (data, model) device mesh plus
+  the per-axis rule for which logical weight dims live on the model axis.
+* ``exactness``       — the output contract: ``bitwise`` (token-identical to
+  the single-device reference loop — the default, and what every placement
+  rule must preserve) or ``approximate(tol)`` (cross-shard float reductions
+  allowed — psum tensor-parallel attention/MLP — with logit drift bounded
+  by ``tol`` instead of token identity).
+
+Everything downstream consumes the policy: ``Engine(policy=...)``,
+``kernels.ops.dispatch(a, weights_or_plan, policy, T)``, the serve CLI
+(``launch/serve.py``), and `serve.sharding` (which derives its model-axis
+dim set from the policy).  The legacy knobs and the old per-kernel entry
+points remain as thin `DeprecationWarning` shims that construct the
+equivalent policy.
+
+Policies are registered static pytrees (`jax.tree_util.register_static`):
+hashable, usable as jit static arguments, and safe to close over at trace
+time.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+from jax.sharding import Mesh
+from jax.tree_util import register_static
+
+from .sharding import (
+    APPROX_MODEL_SHARDED_DIMS,
+    MODEL_SHARDED_DIMS,
+    make_serve_mesh,
+)
+
+SPIKE_FORMATS = ("float", "packed")
+WEIGHT_SPARSITIES = ("dense", "dual_sparse")
+EXACTNESS_MODES = ("bitwise", "approximate")
+
+
+# ---------------------------------------------------------------------------
+# policy axes
+# ---------------------------------------------------------------------------
+
+@register_static
+@dataclass(frozen=True)
+class Exactness:
+    """The output contract of a serving run.
+
+    ``bitwise``: outputs are token-identical to the single-device reference
+    loop — every placement rule must be reduction-free.  ``approximate``:
+    cross-shard float reductions are allowed (psum-TP of attention/MLP);
+    greedy tokens may flip, but logit drift vs. the bitwise reference is
+    bounded by ``tol`` (asserted by `check_parity`, reported by tests and
+    benchmarks).
+    """
+
+    mode: str = "bitwise"
+    tol: float = 0.0  # max |logit drift| allowed (approximate mode only)
+
+    def __post_init__(self):
+        if self.mode not in EXACTNESS_MODES:
+            raise ValueError(
+                f"exactness mode {self.mode!r} not in {EXACTNESS_MODES}"
+            )
+        if self.mode == "approximate" and not self.tol > 0.0:
+            raise ValueError(
+                "exactness='approximate' needs a positive drift bound: "
+                f"tol={self.tol!r} (use exactness.approximate(tol=...))"
+            )
+        if self.mode == "bitwise" and self.tol:
+            raise ValueError(
+                "exactness='bitwise' is token-identical by definition; "
+                f"tol={self.tol!r} is meaningless — drop it or use "
+                "approximate(tol)"
+            )
+
+
+def bitwise() -> Exactness:
+    """Token-identity contract (the default)."""
+    return Exactness("bitwise")
+
+
+def approximate(tol: float = 0.05) -> Exactness:
+    """Relaxed contract: logit drift <= tol instead of token identity."""
+    return Exactness("approximate", tol)
+
+
+@register_static
+@dataclass(frozen=True)
+class Placement:
+    """Where a policy runs: a (data, model) serve mesh + per-axis rules.
+
+    ``mesh``: a `jax.sharding.Mesh` with axes named ``data`` / ``model`` (or
+    None = single device).  ``model_dims``: the logical weight-dim names
+    placed on the model axis — None derives them from the policy's exactness
+    (`MODEL_SHARDED_DIMS` for bitwise, `APPROX_MODEL_SHARDED_DIMS` for
+    approximate); an explicit tuple overrides, and is validated against the
+    exactness contract at policy construction.
+    """
+
+    mesh: Mesh | None = None
+    model_dims: tuple[str, ...] | None = None
+
+    def __post_init__(self):
+        if self.model_dims is not None:
+            object.__setattr__(self, "model_dims", tuple(self.model_dims))
+
+    @classmethod
+    def from_spec(cls, spec: str | None, *, devices=None,
+                  model_dims=None) -> "Placement":
+        """Build from a ``--mesh``-style spec (``data,model``,
+        ``data=4,model=2``, ``4,2``); None or a single device = no mesh."""
+        return cls(mesh=make_serve_mesh(spec, devices=devices),
+                   model_dims=model_dims)
+
+    @property
+    def data_size(self) -> int:
+        return self.mesh.shape.get("data", 1) if self.mesh is not None else 1
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape.get("model", 1) if self.mesh is not None else 1
+
+    def describe(self) -> str:
+        if self.mesh is None:
+            return "single-device"
+        return "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())
+
+
+# ---------------------------------------------------------------------------
+# the policy
+# ---------------------------------------------------------------------------
+
+@register_static
+@dataclass(frozen=True)
+class ExecutionPolicy:
+    """One declarative execution policy for serving and kernel dispatch.
+
+    Construction validates every arch-independent combination (loud
+    `ValueError`s here, never deep in a trace); `validate_for(cfg)` adds the
+    arch-dependent checks (spiking support, pruned weights) and is called by
+    the engine/CLI before any compute.
+    """
+
+    spike_format: str = "float"
+    weight_sparsity: str = "dense"
+    placement: Placement = field(default_factory=Placement)
+    exactness: Exactness = field(default_factory=bitwise)
+
+    def __post_init__(self):
+        if self.spike_format not in SPIKE_FORMATS:
+            raise ValueError(
+                f"spike_format {self.spike_format!r} not in {SPIKE_FORMATS}"
+            )
+        if self.weight_sparsity not in WEIGHT_SPARSITIES:
+            raise ValueError(
+                f"weight_sparsity {self.weight_sparsity!r} not in "
+                f"{WEIGHT_SPARSITIES}"
+            )
+        if self.weight_sparsity == "dual_sparse" and self.spike_format != "packed":
+            raise ValueError(
+                "weight_sparsity='dual_sparse' runs the BSR spike-join "
+                "kernel, which consumes packed uint32 spike words; it "
+                f"requires spike_format='packed' (got {self.spike_format!r})"
+            )
+        if self.exactness.mode == "approximate" and self.placement.model_size < 2:
+            raise ValueError(
+                "exactness='approximate' relaxes cross-shard reductions "
+                "(psum-TP on the model axis); it needs a placement whose "
+                "mesh has a model axis >= 2 — got "
+                f"{self.placement.describe()}.  For single-device serving "
+                "use exactness=bitwise (it is both exact and free here)."
+            )
+        if (self.exactness.mode == "bitwise"
+                and self.placement.model_dims is not None):
+            breaking = set(self.placement.model_dims) - MODEL_SHARDED_DIMS
+            if breaking:
+                raise ValueError(
+                    f"placement.model_dims {sorted(breaking)} put float "
+                    "contractions across model shards (psum), which breaks "
+                    "the bitwise token-identity contract; use "
+                    "exactness=approximate(tol) to opt into bounded drift"
+                )
+
+    # -- derived views ------------------------------------------------------
+    @property
+    def mesh(self) -> Mesh | None:
+        return self.placement.mesh
+
+    @property
+    def token_identical(self) -> bool:
+        """Whether this policy promises bitwise token identity."""
+        return self.exactness.mode == "bitwise"
+
+    def model_sharded_dims(self) -> frozenset[str]:
+        """Logical weight dims this policy places on the model axis."""
+        if self.placement.model_dims is not None:
+            return frozenset(self.placement.model_dims)
+        if self.exactness.mode == "approximate":
+            return APPROX_MODEL_SHARDED_DIMS
+        return MODEL_SHARDED_DIMS
+
+    def describe(self) -> str:
+        ex = self.exactness.mode
+        if ex == "approximate":
+            ex += f"(tol={self.exactness.tol})"
+        return (f"spike_format={self.spike_format!r}, "
+                f"weight_sparsity={self.weight_sparsity!r}, "
+                f"placement={self.placement.describe()}, exactness={ex}")
+
+    # -- arch-aware validation / construction -------------------------------
+    def validate_for(self, cfg) -> "ExecutionPolicy":
+        """Arch-dependent checks (an `ArchConfig`); returns self."""
+        if self.spike_format == "packed" and not cfg.spiking_ffn:
+            raise ValueError(
+                f"spike_format='packed' needs a spiking-FFN arch; "
+                f"{cfg.name} has spiking_ffn=False (set cfg.spiking_ffn "
+                "or use spike_format='float')"
+            )
+        if self.weight_sparsity == "dual_sparse":
+            if cfg.spiking_weight_density >= 1.0:
+                raise ValueError(
+                    "weight_sparsity='dual_sparse' joins against LTH hard "
+                    f"zeros, but {cfg.name} has spiking_weight_density="
+                    f"{cfg.spiking_weight_density} (unpruned); prune at "
+                    "init (spiking_weight_density < 1) or use "
+                    "weight_sparsity='dense'"
+                )
+        return self
+
+    @classmethod
+    def for_arch(cls, cfg, *, spike_format: str | None = None,
+                 weight_sparsity: str | None = None,
+                 placement: Placement | None = None,
+                 exactness: Exactness | None = None) -> "ExecutionPolicy":
+        """Arch-aware constructor with ``None`` = the natural default:
+        packed spikes for spiking archs, dual-sparse when weights are
+        pruned, single-device bitwise placement."""
+        if spike_format is None:
+            spike_format = "packed" if cfg.spiking_ffn else "float"
+        if weight_sparsity is None:
+            weight_sparsity = (
+                "dual_sparse"
+                if spike_format == "packed" and cfg.spiking_weight_density < 1.0
+                else "dense"
+            )
+        pol = cls(
+            spike_format=spike_format,
+            weight_sparsity=weight_sparsity,
+            placement=placement if placement is not None else Placement(),
+            exactness=exactness if exactness is not None else bitwise(),
+        )
+        return pol.validate_for(cfg)
+
+    @classmethod
+    def from_legacy(cls, cfg, *, spiking_packed: bool = False,
+                    dual_sparse: bool | None = None,
+                    mesh: Mesh | None = None) -> "ExecutionPolicy":
+        """Map the pre-policy engine knobs to the equivalent policy,
+        preserving their (silently coercing) semantics: packed spikes only
+        take effect on spiking archs, dual-sparse only with packed spikes
+        and pruned weights."""
+        packed = bool(spiking_packed and cfg.spiking_ffn)
+        if dual_sparse is None:
+            dual = packed and cfg.spiking_weight_density < 1.0
+        else:
+            dual = bool(
+                packed and dual_sparse and cfg.spiking_weight_density < 1.0
+            )
+        return cls(
+            spike_format="packed" if packed else "float",
+            weight_sparsity="dual_sparse" if dual else "dense",
+            placement=Placement(mesh=mesh),
+        )
+
+
+# Common arch-independent policies (kernel-level callers: dispatch, tests,
+# spiking layers).  Engine-level code should go through `for_arch`.
+FLOAT_DENSE = ExecutionPolicy()
+PACKED_DENSE = ExecutionPolicy(spike_format="packed")
+PACKED_DUAL = ExecutionPolicy(spike_format="packed",
+                              weight_sparsity="dual_sparse")
+
+
+# ---------------------------------------------------------------------------
+# parity checking (the assertion the parity matrix gates on exactness)
+# ---------------------------------------------------------------------------
+
+class ParityError(AssertionError):
+    """A serving run broke its policy's exactness contract."""
+
+
+def max_logit_drift(ref_tokens, got_tokens, ref_logits, got_logits) -> float:
+    """Max |logit difference| over the common-prefix steps of one request.
+
+    Logit drift is only well-defined while both runs saw identical inputs:
+    once greedy argmax flips a token, later steps compute different
+    functions.  The step at which the first mismatch happens IS included —
+    its logits were produced from identical inputs; the flip is the
+    *consequence* of that step's drift.
+    """
+    drift = 0.0
+    for i in range(min(len(ref_logits), len(got_logits))):
+        a = np.asarray(ref_logits[i], np.float32)
+        b = np.asarray(got_logits[i], np.float32)
+        drift = max(drift, float(np.max(np.abs(a - b))))
+        if i < min(len(ref_tokens), len(got_tokens)) and \
+                int(ref_tokens[i]) != int(got_tokens[i]):
+            break  # inputs diverge from the next step on
+    return drift
+
+
+def drift_report(ref_tokens_by_req, got_tokens_by_req,
+                 ref_logits_by_req, got_logits_by_req) -> dict:
+    """Aggregate drift/match stats across requests (parallel lists)."""
+    drift, n_tok, n_match = 0.0, 0, 0
+    for rt, gt, rl, gl in zip(ref_tokens_by_req, got_tokens_by_req,
+                              ref_logits_by_req, got_logits_by_req):
+        drift = max(drift, max_logit_drift(rt, gt, rl, gl))
+        # max-length denominator: a run that stopped early (e.g. a drifted
+        # argmax flipped to eos) counts its missing tokens as mismatches —
+        # token_match_fraction == 1.0 iff the outputs are truly identical
+        n_tok += max(len(rt), len(gt))
+        n_match += sum(int(a) == int(b) for a, b in zip(rt, gt))
+    return {
+        "max_logit_drift": drift,
+        "token_match_fraction": n_match / max(1, n_tok),
+        "tokens_compared": n_tok,
+    }
+
+
+def check_parity(policy: ExecutionPolicy, ref_tokens, got_tokens, *,
+                 ref_logits=None, got_logits=None) -> dict:
+    """Assert the policy's exactness contract between a reference run and a
+    policy run; returns the measured report.
+
+    ``ref_tokens`` / ``got_tokens``: per-request sequences of generated
+    tokens (parallel lists).  Bitwise policies assert token identity.
+    Approximate policies assert max logit drift <= ``tol`` (requires the
+    per-request logit traces, e.g. `Engine(capture_logits=True)`) and report
+    the measured drift + token-match fraction.
+    """
+    if len(ref_tokens) != len(got_tokens):
+        raise ParityError(
+            f"request count mismatch: reference produced {len(ref_tokens)} "
+            f"outputs, policy run produced {len(got_tokens)} — a run "
+            "dropped requests; zip-truncating would hide that"
+        )
+    if policy.token_identical:
+        for i, (a, b) in enumerate(zip(ref_tokens, got_tokens)):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise ParityError(
+                    f"bitwise policy broke token identity on request {i}: "
+                    f"{np.asarray(a)!r} != {np.asarray(b)!r}"
+                )
+        return {"token_identical": True}
+    if ref_logits is None or got_logits is None:
+        raise ValueError(
+            "approximate parity needs logit traces from both runs "
+            "(Engine(capture_logits=True) keeps them in engine.logit_traces)"
+        )
+    rep = drift_report(ref_tokens, got_tokens, ref_logits, got_logits)
+    rep["token_identical"] = rep["token_match_fraction"] == 1.0
+    rep["tol"] = policy.exactness.tol
+    if rep["max_logit_drift"] > policy.exactness.tol:
+        raise ParityError(
+            f"approximate policy exceeded its drift bound: measured "
+            f"{rep['max_logit_drift']:.3e} > tol {policy.exactness.tol:.3e}"
+        )
+    return rep

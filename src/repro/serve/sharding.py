@@ -23,16 +23,20 @@ parallel lanes / FireFly-S mapping dual-sparse work onto a spatial array)::
   pytrees, so the slabs place with `NamedSharding` like any weight leaf),
   plus every ``"vocab"``-named weight dim (embedding table / LM head).
 
-Why only those on ``model``: serving in this repo carries a hard
+Why only those on ``model`` by default: serving in this repo carries a
 token-identity contract (engine outputs must equal the single-device
-reference loop bit-for-bit, enforced by tests).  Sharding is therefore
-REDUCTION-FREE — a dim is only placed on ``model`` when no downstream
-contraction sums across shards: plan slabs keep each output column's full-K
-contraction inside one shard (inter-GEMM traffic is integer spike words),
-and vocab columns feed argmax, not another matmul.  Classic psum-TP of
-attention/MLP (as the *training* rules in `repro.sharding` do) reassociates
-float sums and drifts logits by ~1e-2 at bf16, which can flip greedy argmax
-— measured, hence excluded here.
+reference loop bit-for-bit, enforced by tests).  Default sharding is
+therefore REDUCTION-FREE — a dim is only placed on ``model`` when no
+downstream contraction sums across shards: plan slabs keep each output
+column's full-K contraction inside one shard (inter-GEMM traffic is
+integer spike words), and vocab columns feed argmax, not another matmul.
+Classic psum-TP of attention/MLP (as the *training* rules in
+`repro.sharding` do) reassociates float sums and drifts logits by ~1e-2 at
+bf16, which can flip greedy argmax — measured.  That tradeoff is now an
+explicit contract, not a hard exclusion: an
+``ExecutionPolicy(exactness=approximate(tol))`` opts into the broader
+`APPROX_MODEL_SHARDED_DIMS` set below (throughput over exactness, drift
+bounded by ``tol``); every bitwise policy keeps the reduction-free set.
 """
 from __future__ import annotations
 
@@ -44,8 +48,19 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.join_plan import WeightJoinPlan
 
 # Logical weight-dim names that shard on the model axis at serve time.
-# Reduction-free only (see module docstring).
+# Reduction-free only (see module docstring) — the dim set every BITWISE
+# execution policy uses.
 MODEL_SHARDED_DIMS = frozenset({"vocab"})
+
+# The broader psum-TP dim set (classic Megatron column/row-parallel
+# attention + MLP — the *training* rules in `repro.sharding` restricted to
+# serve-relevant weight dims).  Cross-shard float reductions reassociate
+# bf16 sums, so this set is only reachable through
+# ``ExecutionPolicy(exactness=approximate(tol))`` — the policy layer
+# refuses it under a bitwise contract.
+APPROX_MODEL_SHARDED_DIMS = MODEL_SHARDED_DIMS | frozenset(
+    {"heads_flat", "kv_flat", "d_ff", "d_inner"}
+)
 
 # Base rank of each WeightJoinPlan field; extra leading axes are stacking
 # axes (layer stack, then model shards innermost — see shard_plan).
@@ -129,15 +144,17 @@ def _replicated(mesh: Mesh, ndim: int) -> NamedSharding:
     return NamedSharding(mesh, P(*([None] * ndim)))
 
 
-def param_spec(axes: tuple, shape: tuple, mesh: Mesh) -> P:
-    """PartitionSpec for one weight leaf: ``"vocab"``-named dims shard on
-    `model` when divisible; everything else replicates (reduction-free
-    serve-time TP — the training rules in `repro.sharding` are broader)."""
+def param_spec(axes: tuple, shape: tuple, mesh: Mesh,
+               sharded_dims: frozenset = MODEL_SHARDED_DIMS) -> P:
+    """PartitionSpec for one weight leaf: dims named in ``sharded_dims``
+    shard on `model` when divisible (first match wins); everything else
+    replicates.  The default set is the reduction-free bitwise rule;
+    approximate policies pass `APPROX_MODEL_SHARDED_DIMS` (psum-TP)."""
     mp = mesh.shape.get("model", 1)
     spec = []
     used = False
     for name, dim in zip(axes, shape):
-        if (not used and name in MODEL_SHARDED_DIMS and mp > 1
+        if (not used and name in sharded_dims and mp > 1
                 and dim % mp == 0):
             spec.append("model")
             used = True
@@ -146,13 +163,15 @@ def param_spec(axes: tuple, shape: tuple, mesh: Mesh) -> P:
     return P(*spec)
 
 
-def shard_params(params, axes_tree, mesh: Mesh):
+def shard_params(params, axes_tree, mesh: Mesh,
+                 sharded_dims: frozenset = MODEL_SHARDED_DIMS):
     """Place a param pytree on the serve mesh (call BEFORE attaching join
     plans: ``axes_tree`` is the model's logical-axes tree, which does not
-    know about plan leaves)."""
+    know about plan leaves).  ``sharded_dims`` comes from the execution
+    policy (`ExecutionPolicy.model_sharded_dims`)."""
     return jax.tree.map(
         lambda w, a: jax.device_put(
-            w, NamedSharding(mesh, param_spec(a, w.shape, mesh))
+            w, NamedSharding(mesh, param_spec(a, w.shape, mesh, sharded_dims))
         ),
         params,
         axes_tree,

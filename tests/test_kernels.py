@@ -11,6 +11,7 @@ from _hyp import given, settings, st
 
 from repro.core.packing import pack_spikes, unpack_spikes
 from repro.kernels import ops, ref
+from repro.serve.policy import PACKED_DENSE, PACKED_DUAL
 
 
 SHAPES = [
@@ -26,7 +27,7 @@ SHAPES = [
 def test_ftp_spmm_matches_oracle(T, M, K, N):
     rng = np.random.default_rng(T * 1000 + M)
     packed, w = _mk(rng, T, M, K, N)
-    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    out = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T)
     want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
 
@@ -35,7 +36,8 @@ def test_ftp_spmm_matches_oracle(T, M, K, N):
 def test_fused_lif_matches_oracle(T, M, K, N):
     rng = np.random.default_rng(T * 999 + N)
     packed, w = _mk(rng, T, M, K, N, w_density=0.2)
-    c, u = ops.ftp_spmm_fused_lif(jnp.asarray(packed), jnp.asarray(w), T)
+    c, u = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T,
+                     fuse_lif=True)
     cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
     np.testing.assert_array_equal(np.asarray(c), np.asarray(cw))
     np.testing.assert_allclose(np.asarray(u), np.asarray(uw), rtol=1e-5, atol=1e-5)
@@ -46,7 +48,7 @@ def test_fused_lif_matches_oracle(T, M, K, N):
 def test_bsr_dual_sparse_matches_oracle(T, M, K, N, fuse):
     rng = np.random.default_rng(T * 31 + K)
     packed, w = _mk(rng, T, M, K, N, density=0.1, w_density=0.03)
-    out, u = ops.ftp_spmm_dual_sparse(packed, w, T, fuse_lif=fuse)
+    out, u = ops.dispatch(packed, w, PACKED_DUAL, T, fuse_lif=fuse)
     if fuse:
         cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
         np.testing.assert_array_equal(np.asarray(out), np.asarray(cw))
@@ -86,8 +88,8 @@ def test_property_bsr_plan_parity_vs_dense(
     rng = np.random.default_rng(seed)
     packed, w = _mk(rng, T, M, K, N, density=density, w_density=w_density)
     plan = build_weight_plan(w)
-    out, u = ops.ftp_spmm_bsr(
-        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    out, u = ops.dispatch(
+        jnp.asarray(packed), plan, PACKED_DUAL, T, n_out=N, fuse_lif=fuse
     )
     if fuse:
         cw, uw = ref.ftp_spmm_fused_lif_ref(
@@ -116,8 +118,8 @@ def test_bsr_plan_parity_density_corners(w_density, fuse):
     T, M, K, N = 4, 48, 160, 96
     packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=w_density)
     plan = build_weight_plan(w)
-    out, u = ops.ftp_spmm_bsr(
-        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    out, u = ops.dispatch(
+        jnp.asarray(packed), plan, PACKED_DUAL, T, n_out=N, fuse_lif=fuse
     )
     cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed), jnp.asarray(w), T)
     if fuse:
@@ -152,8 +154,8 @@ def test_property_bsr_plan_batched_matches_per_sample(
     w = rng.normal(size=(K, N)).astype(np.float32)
     w[rng.random((K, N)) > w_density] = 0
     plan = build_weight_plan(w)
-    out, u = ops.ftp_spmm_bsr_batched(
-        jnp.asarray(packed), plan, T, n_out=N, fuse_lif=fuse
+    out, u = ops.dispatch(
+        jnp.asarray(packed), plan, PACKED_DUAL, T, n_out=N, fuse_lif=fuse
     )
     for i in range(B):
         if fuse:
@@ -181,9 +183,9 @@ def test_bsr_plan_all_silent_spikes():
     w[rng.random((64, 32)) > 0.3] = 0
     plan = build_weight_plan(w)
     a = jnp.zeros((16, 64), jnp.uint32)
-    c, u = ops.ftp_spmm_bsr(a, plan, 4, n_out=32)
+    c, u = ops.dispatch(a, plan, PACKED_DUAL, 4, n_out=32, fuse_lif=True)
     assert (np.asarray(c) == 0).all() and (np.asarray(u) == 0).all()
-    o, u2 = ops.ftp_spmm_bsr(a, plan, 4, n_out=32, fuse_lif=False)
+    o, u2 = ops.dispatch(a, plan, PACKED_DUAL, 4, n_out=32, fuse_lif=False)
     assert (np.asarray(o) == 0).all()
     assert (np.asarray(u2) == 0).all()  # unfused U is defined as zeros
 
@@ -202,11 +204,12 @@ def test_bsr_no_retrace_across_spike_activity():
         a1 = jnp.asarray((rng.random(shape) < 0.5).astype(np.uint32))
         a2 = jnp.asarray((rng.random(shape) < 0.05).astype(np.uint32))
         a3 = jnp.zeros(shape, jnp.uint32)  # even all-silent: same trace
-        call = ops.ftp_spmm_bsr if len(shape) == 2 else ops.ftp_spmm_bsr_batched
-        jax.block_until_ready(call(a1, plan, 4)[0])  # warm-up (may trace)
+        # dispatch routes (M, K) and (B, M, K) operands itself
+        call = lambda a: ops.dispatch(a, plan, PACKED_DUAL, 4, fuse_lif=True)
+        jax.block_until_ready(call(a1)[0])  # warm-up (may trace)
         before = ops.BSR_TRACE_COUNT
-        jax.block_until_ready(call(a2, plan, 4)[0])
-        jax.block_until_ready(call(a3, plan, 4)[0])
+        jax.block_until_ready(call(a2)[0])
+        jax.block_until_ready(call(a3)[0])
         assert ops.BSR_TRACE_COUNT == before, "spike activity caused a retrace"
 
 
@@ -266,8 +269,10 @@ def test_stack_plans_scan_roundtrip():
     a = jnp.asarray((rng.random((16, K)) < 0.3).astype(np.uint32))
     for l, (w, plan) in enumerate(zip(ws, plans)):
         per_layer = jax.tree.map(lambda x: x[l], stacked)
-        c0, u0 = ops.ftp_spmm_bsr(a, plan, T, n_out=N)
-        c1, u1 = ops.ftp_spmm_bsr(a, per_layer, T, n_out=N)
+        c0, u0 = ops.dispatch(a, plan, PACKED_DUAL, T, n_out=N,
+                              fuse_lif=True)
+        c1, u1 = ops.dispatch(a, per_layer, PACKED_DUAL, T, n_out=N,
+                              fuse_lif=True)
         np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
         np.testing.assert_array_equal(np.asarray(u0), np.asarray(u1))
 
@@ -276,7 +281,7 @@ def test_bsr_all_zero_weights():
     rng = np.random.default_rng(7)
     packed, w = _mk(rng, 4, 32, 64, 32)
     w[:] = 0
-    c, u = ops.ftp_spmm_dual_sparse(packed, w, 4)
+    c, u = ops.dispatch(packed, w, PACKED_DUAL, 4, fuse_lif=True)
     assert (np.asarray(c) == 0).all()
     assert (np.asarray(u) == 0).all()
 
@@ -285,7 +290,7 @@ def test_bf16_weights():
     rng = np.random.default_rng(8)
     packed, w = _mk(rng, 4, 32, 64, 32, w_density=0.2)
     wb = jnp.asarray(w).astype(jnp.bfloat16)
-    out = ops.ftp_spmm(jnp.asarray(packed), wb, 4)
+    out = ops.dispatch(jnp.asarray(packed), wb, PACKED_DENSE, 4)
     want = ref.ftp_spmm_ref(jnp.asarray(packed), wb, 4)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-2, atol=1e-2)
 
@@ -328,7 +333,7 @@ def test_property_kernel_vs_oracle(T, M, K, N, seed):
     rng = np.random.default_rng(seed)
     packed, w = _mk(rng, T, M, K, N, density=rng.uniform(0, 0.6),
                     w_density=rng.uniform(0.01, 0.5))
-    out = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
+    out = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T)
     want = ref.ftp_spmm_ref(jnp.asarray(packed), jnp.asarray(w), T)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
 
@@ -345,8 +350,8 @@ def test_property_silent_neurons_contribute_nothing(seed, T):
     silent_cols = (packed == 0).all(axis=0)  # neurons silent for ALL rows
     w2 = w.copy()
     w2[silent_cols] = 0
-    o1 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-    o2 = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w2), T)
+    o1 = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T)
+    o2 = ops.dispatch(jnp.asarray(packed), jnp.asarray(w2), PACKED_DENSE, T)
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-6)
 
 
@@ -356,7 +361,7 @@ def test_ftp_spmm_batched_matches_per_sample():
     T, B, M, K, N = 4, 3, 16, 64, 32
     packed = np.stack([_mk(rng, T, M, K, N)[0] for _ in range(B)])
     w = rng.normal(size=(K, N)).astype(np.float32)
-    out = ops.ftp_spmm_batched(jnp.asarray(packed), jnp.asarray(w), T)
+    out = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T)
     assert out.shape == (T, B, M, N)
     for i in range(B):
         want = ref.ftp_spmm_ref(jnp.asarray(packed[i]), jnp.asarray(w), T)
@@ -370,7 +375,8 @@ def test_ftp_spmm_fused_lif_batched_matches_per_sample():
     T, B, M, K, N = 4, 3, 16, 64, 32
     packed = np.stack([_mk(rng, T, M, K, N, w_density=0.2)[0] for _ in range(B)])
     w = rng.normal(size=(K, N)).astype(np.float32)
-    c, u = ops.ftp_spmm_fused_lif_batched(jnp.asarray(packed), jnp.asarray(w), T)
+    c, u = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T,
+                        fuse_lif=True)
     assert c.shape == (B, M, N) and u.shape == (B, M, N)
     for i in range(B):
         cw, uw = ref.ftp_spmm_fused_lif_ref(jnp.asarray(packed[i]), jnp.asarray(w), T)

@@ -14,6 +14,7 @@ from repro.models.registry import build_model
 from repro.serve import (
     AdmissionError,
     Engine,
+    ExecutionPolicy,
     PackedSpikeCache,
     Scheduler,
     bucket_key,
@@ -274,8 +275,10 @@ def test_engine_spiking_packed_path_token_identical():
             prompts, 6
         )
         engine = Engine(
-            model, params, max_len=24, max_slots=4, spiking_packed=True
+            model, params, max_len=24, max_slots=4,
+            policy=ExecutionPolicy.for_arch(cfg),
         )
+        assert engine.spiking_packed
         got = engine.generate_batch(prompts, 6)
     finally:
         model_layers.set_spiking_ffn_mode("train")
@@ -307,15 +310,16 @@ def test_engine_dual_sparse_serving_path(cold_bsr_cache):
     try:
         ref = Engine(
             model, params, max_len=24, max_slots=4,
-            spiking_packed=True, dual_sparse=False,
+            policy=ExecutionPolicy.for_arch(cfg, weight_sparsity="dense"),
         )
         got_ref = ref.generate_batch(prompts, 6)
         assert not ref.spiking_dual_sparse
 
         engine = Engine(
-            model, params, max_len=24, max_slots=4, spiking_packed=True,
+            model, params, max_len=24, max_slots=4,
+            policy=ExecutionPolicy.for_arch(cfg),
         )
-        assert engine.spiking_dual_sparse  # default for density < 1
+        assert engine.spiking_dual_sparse  # for_arch default for density < 1
         assert "plan_in" in engine.params["layers"]["mlp"]
         got = engine.generate_batch(prompts, 6)
         warm = ops.BSR_TRACE_COUNT

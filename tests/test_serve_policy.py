@@ -1,0 +1,395 @@
+"""ExecutionPolicy tests: construction-time validation, legacy-knob /
+legacy-entry-point deprecation shims (old == new, with a warning), the
+`ops.dispatch` front door, and the first capability the policy unlocks —
+approximate tensor parallelism (psum-TP attention/MLP on the model axis)
+with its drift-bound parity contract (`check_parity`).
+
+Mesh-dependent tests run on the suite-wide 8 fake XLA devices
+(tests/conftest.py).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _data import mk_packed_and_weights as _mk
+
+from repro.configs import get_config, smoke_variant
+from repro.kernels import ops, ref
+from repro.kernels.join_plan import build_weight_plan
+from repro.models.registry import build_model
+from repro.serve import (
+    Engine,
+    Exactness,
+    ExecutionPolicy,
+    ParityError,
+    Placement,
+    approximate,
+    bitwise,
+    check_parity,
+    make_serve_mesh,
+    max_logit_drift,
+)
+from repro.serve.policy import FLOAT_DENSE, PACKED_DENSE, PACKED_DUAL
+
+_MODEL_CACHE: dict = {}
+
+
+def _model(arch="llama3_2_1b", **overrides):
+    key = (arch, tuple(sorted(overrides.items())))
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config(arch))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+# ---------------------------------------------------------------------------
+# construction-time validation: precise ValueErrors, never deep in a trace
+# ---------------------------------------------------------------------------
+
+def test_invalid_literals_raise():
+    with pytest.raises(ValueError, match="spike_format"):
+        ExecutionPolicy(spike_format="uint8")
+    with pytest.raises(ValueError, match="weight_sparsity"):
+        ExecutionPolicy(weight_sparsity="csr")
+    with pytest.raises(ValueError, match="exactness mode"):
+        Exactness("fuzzy")
+
+
+def test_dual_sparse_requires_packed_spikes():
+    with pytest.raises(ValueError, match="requires spike_format='packed'"):
+        ExecutionPolicy(spike_format="float", weight_sparsity="dual_sparse")
+
+
+def test_approximate_requires_model_axis():
+    with pytest.raises(ValueError, match="model axis"):
+        ExecutionPolicy(exactness=approximate(0.1))  # no mesh at all
+    mesh = make_serve_mesh("data=8,model=1")
+    with pytest.raises(ValueError, match="model axis"):
+        ExecutionPolicy(placement=Placement(mesh=mesh),
+                        exactness=approximate(0.1))
+
+
+def test_exactness_tol_validation():
+    with pytest.raises(ValueError, match="positive drift bound"):
+        Exactness("approximate", 0.0)
+    with pytest.raises(ValueError, match="positive drift bound"):
+        approximate(tol=-1.0)
+    with pytest.raises(ValueError, match="token-identical by definition"):
+        Exactness("bitwise", 0.5)
+
+
+def test_bitwise_refuses_psum_model_dims():
+    """Explicit per-axis rules that put float contractions across shards
+    are rejected under a bitwise contract — the policy is where the
+    exactness/placement interaction is enforced."""
+    mesh = make_serve_mesh("data=4,model=2")
+    with pytest.raises(ValueError, match="token-identity contract"):
+        ExecutionPolicy(
+            placement=Placement(mesh=mesh, model_dims=("d_ff", "vocab")),
+        )
+    # the reduction-free subset is fine
+    pol = ExecutionPolicy(placement=Placement(mesh=mesh,
+                                              model_dims=("vocab",)))
+    assert pol.model_sharded_dims() == frozenset({"vocab"})
+
+
+def test_validate_for_packed_on_non_spiking_arch():
+    cfg, model, params = _model()  # plain llama, spiking_ffn=False
+    with pytest.raises(ValueError, match="spiking-FFN arch"):
+        PACKED_DENSE.validate_for(cfg)
+    with pytest.raises(ValueError, match="spiking-FFN arch"):
+        Engine(model, params, max_len=16, policy=PACKED_DENSE)
+
+
+def test_validate_for_dual_sparse_needs_pruned_weights():
+    cfg, model, params = _model(spiking_ffn=True, spiking_T=4)  # density 1.0
+    with pytest.raises(ValueError, match="unpruned"):
+        PACKED_DUAL.validate_for(cfg)
+    with pytest.raises(ValueError, match="unpruned"):
+        Engine(model, params, max_len=16, policy=PACKED_DUAL)
+
+
+def test_for_arch_defaults_follow_the_config():
+    plain = smoke_variant(get_config("llama3_2_1b"))
+    assert ExecutionPolicy.for_arch(plain).spike_format == "float"
+    spiking = dataclasses.replace(plain, spiking_ffn=True,
+                                  spiking_weight_density=0.3)
+    pol = ExecutionPolicy.for_arch(spiking)
+    assert pol.spike_format == "packed"
+    assert pol.weight_sparsity == "dual_sparse"
+    dense = ExecutionPolicy.for_arch(spiking, weight_sparsity="dense")
+    assert dense.weight_sparsity == "dense"
+
+
+def test_engine_rejects_policy_plus_legacy_knobs():
+    cfg, model, params = _model()
+    with pytest.raises(ValueError, match="not both"):
+        Engine(model, params, max_len=16, policy=FLOAT_DENSE,
+               spiking_packed=False)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: legacy knobs / entry points == the policy path, + warn
+# ---------------------------------------------------------------------------
+
+def test_engine_legacy_knobs_warn_and_match_policy_path():
+    """Engine(spiking_packed=..., dual_sparse=...) maps to the equivalent
+    ExecutionPolicy (DeprecationWarning) and stays token-identical to the
+    explicit-policy engine."""
+    cfg, model, params = _model(spiking_ffn=True, spiking_T=4,
+                                spiking_weight_density=0.3)
+    prompts = _prompts(cfg, [10, 10], seed=3)
+    from repro.models import layers as model_layers
+
+    try:
+        with pytest.warns(DeprecationWarning, match="policy=ExecutionPolicy"):
+            legacy = Engine(model, params, max_len=20, max_slots=2,
+                            spiking_packed=True)
+        assert legacy.policy.spike_format == "packed"
+        assert legacy.policy.weight_sparsity == "dual_sparse"
+        got_legacy = legacy.generate_batch(prompts, 5)
+        new = Engine(model, params, max_len=20, max_slots=2,
+                     policy=ExecutionPolicy.for_arch(cfg))
+        got_new = new.generate_batch(prompts, 5)
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    for a, b in zip(got_legacy, got_new):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_engine_legacy_mesh_knob_maps_to_placement():
+    cfg, model, params = _model()
+    mesh = make_serve_mesh("data=4,model=2")
+    with pytest.warns(DeprecationWarning, match="mesh"):
+        engine = Engine(model, params, max_len=16, mesh=mesh)
+    assert engine.policy.placement.mesh is mesh
+    assert engine.policy.token_identical
+
+
+@pytest.mark.parametrize("name,call", [
+    ("ftp_spmm", lambda a, w, plan, T: ops.ftp_spmm(a, w, T)),
+    ("ftp_spmm_fused_lif", lambda a, w, plan, T: ops.ftp_spmm_fused_lif(a, w, T)),
+    ("ftp_spmm_batched",
+     lambda a, w, plan, T: ops.ftp_spmm_batched(a[None], w, T)),
+    ("ftp_spmm_bsr",
+     lambda a, w, plan, T: ops.ftp_spmm_bsr(a, plan, T)),
+    ("ftp_spmm_bsr_batched",
+     lambda a, w, plan, T: ops.ftp_spmm_bsr_batched(a[None], plan, T)),
+    ("ftp_spmm_bsr_fused_lif",
+     lambda a, w, plan, T: ops.ftp_spmm_bsr_fused_lif(a, plan, T)),
+    ("ftp_spmm_dual_sparse",
+     lambda a, w, plan, T: ops.ftp_spmm_dual_sparse(np.asarray(a), w, T)),
+    ("ftp_spmm_sharded", lambda a, w, plan, T: ops.ftp_spmm_sharded(a, w, T)),
+])
+def test_legacy_ops_entry_points_warn(name, call):
+    """Every pre-policy kernel entry point still works — through a shim
+    that names its dispatch/policy replacement in a DeprecationWarning."""
+    rng = np.random.default_rng(5)
+    T, M, K, N = 4, 8, 32, 16
+    packed, w = _mk(rng, T, M, K, N, w_density=0.3)
+    plan = build_weight_plan(w)
+    with pytest.warns(DeprecationWarning, match="ops.dispatch"):
+        call(jnp.asarray(packed), jnp.asarray(w), plan, T)
+
+
+def test_legacy_bsr_shim_matches_dispatch():
+    rng = np.random.default_rng(6)
+    T, M, K, N = 4, 16, 64, 32
+    packed, w = _mk(rng, T, M, K, N, w_density=0.2)
+    plan = build_weight_plan(w)
+    a = jnp.asarray(packed)
+    want, _ = ops.dispatch(a, plan, PACKED_DUAL, T, n_out=N, fuse_lif=True)
+    with pytest.warns(DeprecationWarning):
+        got, _ = ops.ftp_spmm_bsr(a, plan, T, n_out=N, fuse_lif=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# dispatch: one front door, routed by policy + operand type
+# ---------------------------------------------------------------------------
+
+def test_dispatch_rejects_non_policy():
+    with pytest.raises(TypeError, match="ExecutionPolicy"):
+        ops.dispatch(jnp.zeros((4, 8), jnp.uint32),
+                     jnp.zeros((8, 16), jnp.float32), "packed", 4)
+
+
+def test_dispatch_plan_requires_dual_sparse_policy():
+    rng = np.random.default_rng(7)
+    _, w = _mk(rng, 4, 8, 32, 16, w_density=0.3)
+    plan = build_weight_plan(w)
+    with pytest.raises(ValueError, match="dual_sparse"):
+        ops.dispatch(jnp.zeros((8, 32), jnp.uint32), plan, PACKED_DENSE, 4)
+    with pytest.raises(ValueError, match="dual_sparse"):
+        ops.dispatch(jnp.zeros((4, 8, 32), jnp.float32), plan, FLOAT_DENSE, 4)
+
+
+def test_dispatch_float_format_matches_packed():
+    """The float route (differentiable jnp path) and the packed route
+    (Pallas) compute the same layer."""
+    from repro.core.packing import unpack_spikes
+
+    rng = np.random.default_rng(8)
+    T, M, K, N = 4, 16, 64, 32
+    packed, w = _mk(rng, T, M, K, N, w_density=0.3)
+    spikes = unpack_spikes(jnp.asarray(packed), T)
+    o_float = ops.dispatch(spikes, jnp.asarray(w), FLOAT_DENSE, T)
+    o_packed = ops.dispatch(jnp.asarray(packed), jnp.asarray(w),
+                            PACKED_DENSE, T)
+    np.testing.assert_allclose(np.asarray(o_float), np.asarray(o_packed),
+                               rtol=1e-5, atol=1e-5)
+    c_f, _ = ops.dispatch(spikes, jnp.asarray(w), FLOAT_DENSE, T,
+                          fuse_lif=True)
+    c_p, _ = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE,
+                          T, fuse_lif=True)
+    from repro.core.packing import pack_spikes
+
+    np.testing.assert_array_equal(np.asarray(pack_spikes(c_f)),
+                                  np.asarray(c_p))
+
+
+def test_dispatch_mesh_placement_is_exact():
+    """A bitwise policy whose placement carries a mesh routes through the
+    sharded entries and stays bit-identical to the unsharded result."""
+    rng = np.random.default_rng(9)
+    T, M, K, N = 4, 32, 64, 128
+    packed, w = _mk(rng, T, M, K, N, w_density=0.3)
+    mesh = make_serve_mesh("data=4,model=2")
+    pol = ExecutionPolicy(spike_format="packed",
+                          placement=Placement(mesh=mesh))
+    want = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), PACKED_DENSE, T)
+    got = ops.dispatch(jnp.asarray(packed), jnp.asarray(w), pol, T)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+# ---------------------------------------------------------------------------
+# parity gating: bitwise asserts identity, approximate asserts a drift bound
+# ---------------------------------------------------------------------------
+
+def test_check_parity_bitwise_raises_on_mismatch():
+    a = [np.asarray([1, 2, 3])]
+    b = [np.asarray([1, 2, 4])]
+    with pytest.raises(ParityError, match="token identity"):
+        check_parity(FLOAT_DENSE, a, b)
+    assert check_parity(FLOAT_DENSE, a, a) == {"token_identical": True}
+
+
+def test_check_parity_approximate_needs_logits():
+    mesh = make_serve_mesh("data=4,model=2")
+    pol = ExecutionPolicy(placement=Placement(mesh=mesh),
+                          exactness=approximate(0.1))
+    with pytest.raises(ValueError, match="logit traces"):
+        check_parity(pol, [np.asarray([1])], [np.asarray([1])])
+
+
+def test_drift_report_counts_missing_tokens_as_mismatch():
+    """A run that stopped early (drifted argmax flipped to eos) must not
+    report full token identity off the zip-truncated common prefix."""
+    from repro.serve import drift_report
+
+    z = np.zeros(4)
+    rep = drift_report([[1, 2, 3]], [[1, 2]], [[z, z, z]], [[z, z]])
+    assert rep["tokens_compared"] == 3
+    assert rep["token_match_fraction"] == pytest.approx(2 / 3)
+
+
+def test_max_logit_drift_stops_at_first_token_flip():
+    """Drift is measured over the common-prefix steps only: after an argmax
+    flip the two runs compute different functions, so later (legitimately
+    different) logits must not count as drift."""
+    ref_l = [np.zeros(4), np.zeros(4), np.full(4, 100.0)]
+    got_l = [np.zeros(4) + 0.01, np.zeros(4) + 0.02, np.zeros(4)]
+    ref_t, got_t = [0, 1, 2], [0, 9, 2]  # flip at step 1
+    drift = max_logit_drift(ref_t, got_t, ref_l, got_l)
+    assert drift == pytest.approx(0.02)  # step 2's 100.0 gap excluded
+
+
+# ---------------------------------------------------------------------------
+# approximate-TP end to end: the capability the redesign unlocks
+# ---------------------------------------------------------------------------
+
+APPROX_TOL = 0.25  # generous bound; measured smoke drift is ~4e-2
+
+
+def test_engine_approximate_tp_serves_with_bounded_drift():
+    """THE acceptance test for the new mode: a float llama engine with
+    exactness=approximate on a 4x2 mesh psum-TP-shards attention/MLP
+    weights over the model axis, serves end-to-end, and its logit drift
+    vs. the bitwise single-device engine stays under tol."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, [12, 12, 12, 12], seed=11)
+
+    ref_eng = Engine(model, params, max_len=24, max_slots=4,
+                     capture_logits=True)
+    want = ref_eng.generate_batch(prompts, 6)
+
+    mesh = make_serve_mesh("data=4,model=2")
+    pol = ExecutionPolicy(placement=Placement(mesh=mesh),
+                          exactness=approximate(APPROX_TOL))
+    eng = Engine(model, params, max_len=24, max_slots=4, policy=pol)
+    assert eng.capture_logits  # on by default under approximate
+    got = eng.generate_batch(prompts, 6)
+
+    # psum-TP actually engaged: attention/MLP weights carry a model axis
+    # (wq column-parallel, wd row-parallel -> psum on its contraction)
+    lay = eng.params["layers"]
+    assert "model" in tuple(lay["attn"]["wq"].sharding.spec)
+    assert "model" in tuple(lay["mlp"]["wd"].sharding.spec)
+
+    rep = check_parity(
+        pol, want, got,
+        ref_logits=ref_eng.drain_logit_traces(),
+        got_logits=eng.drain_logit_traces(),
+    )
+    assert not eng.logit_traces  # drained
+    assert rep["max_logit_drift"] <= APPROX_TOL
+    s = eng.summary()
+    assert s["exactness"] == "approximate"
+    assert s["token_identical"] is False  # the CONTRACT, not the measurement
+    assert s["drift_tol"] == APPROX_TOL
+
+
+def test_engine_approximate_tp_dual_sparse_spiking():
+    """Approximate exactness composes with the dual-sparse spiking path:
+    FFN GEMMs stay exact (column-split plans), attention goes psum-TP —
+    drift still bounded."""
+    cfg, model, params = _model(spiking_ffn=True, spiking_T=4,
+                                spiking_weight_density=0.3)
+    prompts = _prompts(cfg, [10, 10], seed=13)
+    from repro.models import layers as model_layers
+
+    try:
+        ref_eng = Engine(model, params, max_len=20, max_slots=2,
+                         policy=ExecutionPolicy.for_arch(cfg),
+                         capture_logits=True)
+        want = ref_eng.generate_batch(prompts, 5)
+        mesh = make_serve_mesh("data=2,model=2")
+        pol = ExecutionPolicy.for_arch(
+            cfg, placement=Placement(mesh=mesh),
+            exactness=approximate(APPROX_TOL),
+        )
+        assert pol.weight_sparsity == "dual_sparse"
+        eng = Engine(model, params, max_len=20, max_slots=2, policy=pol)
+        got = eng.generate_batch(prompts, 5)
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    rep = check_parity(
+        pol, want, got,
+        ref_logits=ref_eng.drain_logit_traces(),
+        got_logits=eng.drain_logit_traces(),
+    )
+    assert rep["max_logit_drift"] <= APPROX_TOL
+    assert eng.summary()["dual_sparse"] is True

@@ -23,7 +23,22 @@ from _data import mk_packed_and_weights as _mk
 from repro.models import layers as model_layers
 from repro.models.registry import build_model
 from repro.serve import Engine, make_serve_mesh, parse_mesh_spec
+from repro.serve.policy import (
+    PACKED_DENSE,
+    PACKED_DUAL,
+    ExecutionPolicy,
+    Placement,
+)
 from repro.serve.sharding import cache_sharding, place_cache, place_plans
+
+
+def _mesh_policy(mesh, cfg=None, **over):
+    """Policy with the mesh as its placement (arch-aware when cfg given)."""
+    if cfg is not None:
+        return ExecutionPolicy.for_arch(
+            cfg, placement=Placement(mesh=mesh), **over
+        )
+    return ExecutionPolicy(placement=Placement(mesh=mesh), **over)
 
 pytestmark = pytest.mark.skipif(
     jax.device_count() < 4,
@@ -86,7 +101,10 @@ def test_split_plan_slabs_reconstruct_dense_result(parts):
     subs = split_plan(plan, parts)
     assert len(subs) == parts
     outs = [
-        np.asarray(ops.ftp_spmm_bsr(jnp.asarray(packed), p, T)[0])
+        np.asarray(
+            ops.dispatch(jnp.asarray(packed), p, PACKED_DUAL, T,
+                         fuse_lif=True)[0]
+        )
         for p in subs
     ]
     got = np.concatenate(outs, axis=-1)[:, :N]
@@ -114,12 +132,14 @@ def test_sharded_bsr_matches_unsharded(fuse, M):
     T, K, N = 4, 96, 192
     packed, w = _mk(rng, T, M, K, N, w_density=0.1)
     plan = build_weight_plan(w)
-    c0, u0 = ops.ftp_spmm_bsr(jnp.asarray(packed), plan, T, n_out=N,
-                              fuse_lif=fuse)
+    c0, u0 = ops.dispatch(jnp.asarray(packed), plan, PACKED_DUAL, T,
+                          n_out=N, fuse_lif=fuse)
     sp = shard_plan(build_sharded_weight_plan(w, 2), 2)
-    with ops.serve_mesh_scope(mesh):
-        c1, u1 = ops.ftp_spmm_bsr(jnp.asarray(packed), sp, T, n_out=N,
-                                  fuse_lif=fuse)
+    # the policy's placement installs the mesh for the call
+    c1, u1 = ops.dispatch(jnp.asarray(packed), sp,
+                          _mesh_policy(mesh, spike_format="packed",
+                                       weight_sparsity="dual_sparse"),
+                          T, n_out=N, fuse_lif=fuse)
     np.testing.assert_array_equal(np.asarray(c0), np.asarray(c1))
     np.testing.assert_array_equal(np.asarray(u0), np.asarray(u1))
 
@@ -129,16 +149,18 @@ def test_sharded_ftp_spmm_matches_unsharded():
     rng = np.random.default_rng(3)
     T, M, K, N = 4, 32, 64, 128
     packed, w = _mk(rng, T, M, K, N, w_density=0.3)
-    want = ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(w), T)
-    got = ops.ftp_spmm_sharded(jnp.asarray(packed), jnp.asarray(w), T,
-                               mesh=mesh)
+    want = ops.dispatch(jnp.asarray(packed), jnp.asarray(w),
+                        PACKED_DENSE, T)
+    got = ops.dispatch(jnp.asarray(packed), jnp.asarray(w),
+                       _mesh_policy(mesh, spike_format="packed"), T)
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
     # odd column count: clean fallback to the unsharded wrapper
     wo = w[:, :127]
-    got2 = ops.ftp_spmm_sharded(jnp.asarray(packed), jnp.asarray(wo), T,
-                                mesh=mesh)
+    got2 = ops.dispatch(jnp.asarray(packed), jnp.asarray(wo),
+                        _mesh_policy(mesh, spike_format="packed"), T)
     np.testing.assert_array_equal(
-        np.asarray(ops.ftp_spmm(jnp.asarray(packed), jnp.asarray(wo), T)),
+        np.asarray(ops.dispatch(jnp.asarray(packed), jnp.asarray(wo),
+                                PACKED_DENSE, T)),
         np.asarray(got2),
     )
 
@@ -162,11 +184,13 @@ def test_layer_stacked_plain_plan_never_misrouted_under_mesh():
     assert not isinstance(stacked, ShardedWeightJoinPlan)
     per_layer = jax.tree.map(lambda x: x[0], stacked)
     a = jnp.asarray((rng.random((8, 64)) < 0.3).astype(np.uint32))
-    want, _ = ops.ftp_spmm_bsr(a, per_layer, 4, n_out=32)
+    want, _ = ops.dispatch(a, per_layer, PACKED_DUAL, 4, n_out=32,
+                           fuse_lif=True)
     # under the mesh, the sliced plain plan takes the unsharded path and
     # computes layer 0's result, not a cross-layer mixture
     with ops.serve_mesh_scope(mesh):
-        got, _ = ops.ftp_spmm_bsr(a, per_layer, 4, n_out=32)
+        got, _ = ops.dispatch(a, per_layer, PACKED_DUAL, 4, n_out=32,
+                              fuse_lif=True)
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
     # and a sharded plan passed with its layer axis intact fails loudly
     sharded_stacked = stack_plans([
@@ -176,8 +200,9 @@ def test_layer_stacked_plain_plan_never_misrouted_under_mesh():
     assert isinstance(sharded_stacked, ShardedWeightJoinPlan)
     with ops.serve_mesh_scope(mesh):
         with pytest.raises(ValueError, match="slice the layer axis"):
-            ops.ftp_spmm_bsr(
-                jnp.zeros((8, 64), jnp.uint32), sharded_stacked, 4
+            ops.dispatch(
+                jnp.zeros((8, 64), jnp.uint32), sharded_stacked,
+                PACKED_DUAL, 4, fuse_lif=True,
             )
 
 
@@ -191,12 +216,11 @@ def test_sharded_bsr_no_retrace_across_spike_activity():
     with ops.serve_mesh_scope(mesh):
         a1 = jnp.asarray((rng.random((32, 96)) < 0.5).astype(np.uint32))
         a2 = jnp.asarray((rng.random((32, 96)) < 0.05).astype(np.uint32))
-        jax.block_until_ready(ops.ftp_spmm_bsr(a1, sp, 4)[0])  # warm-up
+        call = lambda a: ops.dispatch(a, sp, PACKED_DUAL, 4, fuse_lif=True)
+        jax.block_until_ready(call(a1)[0])  # warm-up
         before = ops.BSR_TRACE_COUNT
-        jax.block_until_ready(ops.ftp_spmm_bsr(a2, sp, 4)[0])
-        jax.block_until_ready(
-            ops.ftp_spmm_bsr(jnp.zeros((32, 96), jnp.uint32), sp, 4)[0]
-        )
+        jax.block_until_ready(call(a2)[0])
+        jax.block_until_ready(call(jnp.zeros((32, 96), jnp.uint32))[0])
         assert ops.BSR_TRACE_COUNT == before, "spike activity caused a retrace"
 
 
@@ -245,13 +269,13 @@ def test_engine_sharded_dual_sparse_token_identity_and_no_retrace(
     prompts = _prompts(cfg, [12, 12, 12, 12], seed=7)
 
     single = Engine(model, params, max_len=24, max_slots=4,
-                    spiking_packed=True)
+                    policy=ExecutionPolicy.for_arch(cfg))
     assert single.spiking_dual_sparse
     want = single.generate_batch(prompts, 6)
 
     mesh = make_serve_mesh("data=4,model=2")
     engine = Engine(model, params, max_len=24, max_slots=4,
-                    spiking_packed=True, mesh=mesh)
+                    policy=_mesh_policy(mesh, cfg))
     assert engine.spiking_dual_sparse
     got = engine.generate_batch(prompts, 6)
     for a, b in zip(want, got):
@@ -284,9 +308,11 @@ def test_engine_sharded_axis_extremes_token_identity(spec):
     params = model.init(jax.random.PRNGKey(1))
     prompts = _prompts(cfg, [10, 10], seed=3)
     want = Engine(model, params, max_len=20, max_slots=2,
-                  spiking_packed=True).generate_batch(prompts, 5)
-    got = Engine(model, params, max_len=20, max_slots=2, spiking_packed=True,
-                 mesh=make_serve_mesh(spec)).generate_batch(prompts, 5)
+                  policy=ExecutionPolicy.for_arch(cfg),
+                  ).generate_batch(prompts, 5)
+    got = Engine(model, params, max_len=20, max_slots=2,
+                 policy=_mesh_policy(make_serve_mesh(spec), cfg),
+                 ).generate_batch(prompts, 5)
     for a, b in zip(want, got):
         np.testing.assert_array_equal(a, b)
 
@@ -302,7 +328,8 @@ def test_engine_sharded_plain_arch_and_ragged_batch():
     want = Engine(model, params, max_len=20, max_slots=4,
                   batch_align=1).generate_batch(prompts, 5)
     mesh = make_serve_mesh("data=4,model=2")
-    engine = Engine(model, params, max_len=20, max_slots=4, mesh=mesh)
+    engine = Engine(model, params, max_len=20, max_slots=4,
+                    policy=_mesh_policy(mesh, cfg))
     got = engine.generate_batch(prompts, 5)
     for a, b in zip(want, got):
         np.testing.assert_array_equal(a, b)
