@@ -510,6 +510,9 @@ def dispatch(
 
     Dual-sparse with RAW weights builds the plan per call (offline
     convenience); serving paths build plans once at load and pass them in.
+    Policies with ``execution='pipelined'`` refuse the per-call path
+    outright: dispatch must never force a host sync in the pipelined hot
+    path, and plan building host-materializes the weights.
     """
     from repro.serve.policy import ExecutionPolicy  # lazy: serve sits above
 
@@ -524,6 +527,18 @@ def dispatch(
             "got a WeightJoinPlan but policy.weight_sparsity="
             f"{policy.weight_sparsity!r}; use a dual_sparse policy "
             "(e.g. repro.serve.policy.PACKED_DUAL) or pass dense weights"
+        )
+    if (policy.execution == "pipelined"
+            and policy.weight_sparsity == "dual_sparse" and not plan_like):
+        # per-call plan building materializes the weights on the HOST —
+        # a forced device sync in exactly the dispatch path the pipelined
+        # executor keeps sync-free.  Loud error instead of a silent stall.
+        raise ValueError(
+            "execution='pipelined' forbids per-call plan building (it "
+            "host-materializes the weights, forcing a device sync in the "
+            "dispatch hot path); build the WeightJoinPlan once at load "
+            "(join_plan.build_weight_plan / "
+            "models.layers.attach_spiking_ffn_plans) and pass it in"
         )
 
     if policy.spike_format == "float":

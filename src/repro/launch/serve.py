@@ -5,8 +5,14 @@
 
 Execution configuration is one declarative `ExecutionPolicy`
 (`repro.serve.policy`): ``--spike-format`` / ``--weight-sparsity`` /
-``--mesh`` (placement) / ``--exactness`` map 1:1 onto its fields.  Sharded
-serving (on CPU use fake XLA devices):
+``--mesh`` (placement) / ``--exactness`` / ``--execution`` map 1:1 onto
+its fields.  The staged pipelined executor (token-identical; see
+`repro.serve.executor`):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --execution pipelined --pipeline-depth 2 --batch 4 --gen 16
+
+Sharded serving (on CPU use fake XLA devices):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --spiking --mesh data,model --fake-devices 8 --batch 4 --gen 8
@@ -82,6 +88,7 @@ def build_policy(args, cfg):
         weight_sparsity=weight_sparsity,
         placement=placement,
         exactness=exactness,
+        execution=args.execution,
     )
 
 
@@ -120,6 +127,18 @@ def main(argv=None):
     ap.add_argument("--tol", type=float, default=0.05,
                     help="max logit drift allowed under --exactness "
                          "approximate")
+    ap.add_argument("--execution", choices=("sync", "pipelined"),
+                    default="sync",
+                    help="policy.execution: sync = every decode step "
+                         "host-syncs its sampled tokens; pipelined = the "
+                         "staged executor keeps tokens on device between "
+                         "steps, defers host materialization behind an "
+                         "in-flight window (--pipeline-depth), overlaps "
+                         "the packed-spike encode with the next decode, "
+                         "and re-packs skewed mesh cohorts")
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="in-flight decode window under --execution "
+                         "pipelined (>= 1; 1 degenerates to sync cadence)")
     # -- arch surgery -------------------------------------------------------
     ap.add_argument("--spiking", action="store_true",
                     help="swap the arch's MLP blocks for dual-sparse "
@@ -181,6 +200,7 @@ def main(argv=None):
         max_slots=args.max_slots or args.batch,
         batch_align=args.batch_align,
         policy=policy,
+        pipeline_depth=args.pipeline_depth,
     )
     outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()

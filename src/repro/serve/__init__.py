@@ -10,10 +10,12 @@ from .batching import (
     bucket_key,
     cache_batch_size,
     cache_concat,
+    cache_pad_rows,
     cache_take,
     pad_batch,
 )
 from .engine import Cohort, Engine
+from .executor import PipelinedExecutor, SyncExecutor, make_executor
 from .metrics import EngineMetrics, RequestMetrics
 from .policy import (
     Exactness,
@@ -26,7 +28,13 @@ from .policy import (
     drift_report,
     max_logit_drift,
 )
-from .scheduler import AdmissionError, Request, RequestState, Scheduler
+from .scheduler import (
+    AdmissionError,
+    Request,
+    RequestState,
+    Scheduler,
+    rebalance_pad,
+)
 from .sharding import make_serve_mesh, mesh_summary, parse_mesh_spec
 
 __all__ = [
@@ -38,22 +46,27 @@ __all__ = [
     "ExecutionPolicy",
     "PackedSpikeCache",
     "ParityError",
+    "PipelinedExecutor",
     "Placement",
     "Request",
     "RequestMetrics",
     "RequestState",
     "Scheduler",
+    "SyncExecutor",
     "approximate",
     "bitwise",
     "bucket_key",
     "cache_batch_size",
     "cache_concat",
+    "cache_pad_rows",
     "cache_take",
     "check_parity",
     "drift_report",
+    "make_executor",
     "make_serve_mesh",
     "max_logit_drift",
     "mesh_summary",
     "pad_batch",
     "parse_mesh_spec",
+    "rebalance_pad",
 ]

@@ -102,6 +102,32 @@ def cache_take(cache, axes, idx):
     return jax.tree.unflatten(jax.tree.structure(cache), leaves)
 
 
+def cache_pad_rows(cache, axes, n: int):
+    """Append ``n`` zero rows along every batched leaf's batch axis.
+
+    The cache-side half of load-skew rebalancing (`executor.rebalance`):
+    when retirement shrinks a mesh cohort below a multiple of the data
+    axis, zero rows re-pack it so batch leaves keep sharding down the mesh
+    instead of replicating.  Zero cache rows behave exactly like the dummy
+    rows `pad_batch` creates at prefill — independent rows whose outputs
+    are discarded.  Position-like leaves (no batch axis) are untouched.
+    """
+    if n <= 0:
+        return cache
+    baxes = batch_axis_tree(cache, axes)
+    leaves = []
+    for leaf, b in zip(jax.tree.leaves(cache), baxes):
+        if b is None:
+            leaves.append(leaf)
+            continue
+        pad_shape = list(leaf.shape)
+        pad_shape[b] = n
+        leaves.append(jnp.concatenate(
+            [leaf, jnp.zeros(pad_shape, leaf.dtype)], axis=b
+        ))
+    return jax.tree.unflatten(jax.tree.structure(cache), leaves)
+
+
 def pad_batch(tokens: np.ndarray, align: int) -> tuple[np.ndarray, int]:
     """Pad the *batch* dimension of a (B, S) prompt batch up to a multiple
     of ``align`` with dummy rows (token 0).
@@ -145,24 +171,44 @@ class PackedSpikeCache:
     planes the training path carries — the engine reports both so the
     saving shows up in serve metrics.  Slot bookkeeping mirrors the KV
     cache: rows concat on cohort merge and gather on retire.
+
+    Double-buffering (`update_async`): the pipelined executor hands the
+    cache the jit'd encode's DEVICE output without waiting on it — the
+    encode overlaps the next decode's dispatch, and the device->host copy
+    happens lazily at the first telemetry/bookkeeping access (`_sync`).
     """
 
     T: int
     width: int
     words: np.ndarray = field(init=False)
+    _pending_dev: object | None = field(init=False, default=None, repr=False)
 
     def __post_init__(self):
         self.words = np.zeros((0, self.width), np.uint32)
 
+    def update_async(self, words_dev) -> None:
+        """Stage this step's (B, width) device words WITHOUT materializing
+        them; a later `update_async` before any access just replaces the
+        buffer (only the newest step's words matter — `update` semantics)."""
+        self._pending_dev = words_dev
+
+    def _sync(self) -> None:
+        if self._pending_dev is not None:
+            pending, self._pending_dev = self._pending_dev, None
+            self.update(np.asarray(pending))
+
     def __len__(self) -> int:
+        self._sync()
         return self.words.shape[0]
 
     def append(self, words) -> None:
+        self._sync()
         w = np.asarray(words, np.uint32).reshape(-1, self.width)
         self.words = np.concatenate([self.words, w], axis=0)
 
     def update(self, words) -> None:
         """Replace all slots' words with this step's (B, width) batch."""
+        self._sync()
         w = np.asarray(words, np.uint32).reshape(-1, self.width)
         if w.shape[0] != len(self):
             raise ValueError(f"update of {w.shape[0]} rows into {len(self)} slots")
@@ -171,13 +217,17 @@ class PackedSpikeCache:
     def merge(self, other: "PackedSpikeCache") -> None:
         if (other.T, other.width) != (self.T, self.width):
             raise ValueError("merging incompatible spike caches")
+        self._sync()
+        other._sync()
         self.words = np.concatenate([self.words, other.words], axis=0)
 
     def take(self, idx) -> None:
+        self._sync()
         self.words = self.words[np.asarray(idx, np.int64)]
 
     def spike_sparsity(self) -> float:
         """Fraction of (neuron, timestep) positions with no spike."""
+        self._sync()
         if self.words.size == 0:
             return 1.0
         fired = np.unpackbits(
@@ -187,12 +237,15 @@ class PackedSpikeCache:
 
     def silent_fraction(self) -> float:
         """Fraction of silent neurons (word == 0) — droppable entirely."""
+        self._sync()
         if self.words.size == 0:
             return 1.0
         return float((self.words == 0).mean())
 
     def nbytes_packed(self) -> int:
+        self._sync()
         return int(self.words.nbytes)
 
     def nbytes_unpacked_f32(self) -> int:
+        self._sync()
         return int(self.words.shape[0] * self.width * self.T * 4)

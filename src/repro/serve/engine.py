@@ -6,7 +6,10 @@ spiking-FFN LM): it only touches `model.prefill`, `model.decode`,
 through `serve.batching` (per-leaf batch axes located via the logical-axes
 tree).
 
-Execution model — each `step()`:
+Execution model — each `step()` runs the staged executor
+(`serve/executor.py`) the policy's ``execution`` axis selects:
+
+    admit -> prefill -> merge -> decode -> sample -> encode -> retire
 
 1. admit waiting requests: prefill groups (same prompt length, FIFO) run
    as one batched prefill each and emit their first token (TTFT);
@@ -16,15 +19,27 @@ Execution model — each `step()`:
 4. finished requests retire, their cache rows are dropped, and the freed
    slots admit more prefills on the next step.
 
-Greedy decode through the engine is token-identical to the single-shot
-loop this module replaced (`launch/serve.py`): same jit'd prefill/decode,
-same cache shapes, and rows of a batch are independent in every non-MoE
-arch (MoE capacity routing couples rows, so batch padding and cohort
-merging are disabled for MoE archs).
+Under ``execution='sync'`` (default) every stage host-completes in order —
+the reference semantics, token-identical to the single-shot loop this
+module replaced (`launch/serve.py`).  ``execution='pipelined'`` keeps the
+device queue full: sampled tokens stay on device between decode steps
+(step *t*'s argmax feeds step *t+1* directly), host materialization is
+deferred behind an in-flight window (``pipeline_depth``), the packed-spike
+encode double-buffers against the next decode, and mesh cohorts re-pack on
+load skew — see `serve/executor.py`.  Pipelining reorders host work only,
+so bitwise policies keep token identity in either mode.
+
+MIGRATION NOTE (`step()` semantics under ``execution='pipelined'``): a
+`step()` still dispatches one decode per cohort, but tokens land in
+`RequestState.generated` up to ``pipeline_depth - 1`` steps later, when
+their step materializes (EOS discovery and retirement lag by the same
+window; `run()`/`generate_batch` drain fully, so their results are
+unchanged).  External steppers that inspect `generated` mid-flight should
+call `Engine.flush()` first.
 
 Every execution choice is ONE declarative `ExecutionPolicy`
-(`serve/policy.py`) — spike format, weight sparsity, placement, exactness —
-consumed here and by kernel dispatch:
+(`serve/policy.py`) — spike format, weight sparsity, placement, exactness,
+execution — consumed here and by kernel dispatch:
 
 * ``spike_format='packed'`` switches the in-model spiking FFN to the packed
   inference path (scoped to the engine's prefill/decode calls; training
@@ -59,12 +74,15 @@ consumed here and by kernel dispatch:
   (`serve.policy.check_parity`), and the engine captures per-request logit
   traces so drift is measurable.
 
+* ``execution='sync'|'pipelined'`` picks the step executor (above) —
+  orthogonal to exactness, so bitwise/approximate parity gating composes
+  with pipelining unchanged.
+
 The legacy knobs (``spiking_packed`` / ``dual_sparse`` / ``mesh``) still
 work: they map to the equivalent policy and emit a `DeprecationWarning`.
 """
 from __future__ import annotations
 
-import time
 import warnings
 from dataclasses import dataclass, field
 
@@ -75,12 +93,8 @@ import numpy as np
 from repro.core.lif import direct_encode
 from repro.core.packing import pack_spikes
 
-from .batching import (
-    PackedSpikeCache,
-    cache_concat,
-    cache_take,
-    pad_batch,
-)
+from .batching import PackedSpikeCache, cache_take
+from .executor import make_executor
 from .metrics import EngineMetrics, RequestMetrics
 from .policy import ExecutionPolicy
 from .scheduler import Request, RequestState, Scheduler
@@ -92,7 +106,15 @@ class Cohort:
 
     Cache rows: the first `len(slots)` batch rows are live requests (in
     slot order); `n_dummy` alignment rows follow and are dropped at the
-    first membership change.
+    first membership change (or re-created by the pipelined executor's
+    load-skew rebalancing).
+
+    ``next_tokens`` is the ON-DEVICE greedy argmax of the last
+    prefill/decode (all rows, dummies included) — the token feedback the
+    next decode consumes without a host round-trip; None after any
+    membership change (the executor rebuilds from host state).
+    ``pending`` is the pipelined executor's in-flight window: decode steps
+    dispatched but not yet host-materialized (always empty in sync mode).
     """
 
     slots: list[RequestState]
@@ -100,6 +122,8 @@ class Cohort:
     length: int                 # tokens written per row (prompt + generated)
     n_dummy: int = 0
     spikes: PackedSpikeCache | None = None
+    next_tokens: object | None = None
+    pending: list = field(default_factory=list)
 
 
 class Engine:
@@ -117,6 +141,8 @@ class Engine:
         merge_cohorts: bool = True,
         policy: ExecutionPolicy | None = None,
         capture_logits: bool | None = None,
+        logit_trace_window: int | None = None,
+        pipeline_depth: int = 2,
         spiking_packed: bool | None = None,  # deprecated -> policy
         dual_sparse: bool | None = None,     # deprecated -> policy
         mesh=None,                           # deprecated -> policy.placement
@@ -143,6 +169,12 @@ class Engine:
             not policy.token_identical
             if capture_logits is None else bool(capture_logits)
         )
+        if logit_trace_window is not None and logit_trace_window < 1:
+            raise ValueError(
+                f"logit_trace_window must be >= 1 (got {logit_trace_window});"
+                " use None for unbounded capture"
+            )
+        self.logit_trace_window = logit_trace_window
         self.logit_traces: dict[int, list[np.ndarray]] = {}
         self.row_independent = cfg.n_experts == 0
         self.batch_align = batch_align if self.row_independent else 1
@@ -207,6 +239,7 @@ class Engine:
                     )
                 )
             )
+        self.executor = make_executor(self, policy, depth=pipeline_depth)
 
     @staticmethod
     def _resolve_policy(cfg, policy, spiking_packed, dual_sparse, mesh):
@@ -280,23 +313,20 @@ class Engine:
         return not self.cohorts and self.scheduler.queue_depth == 0
 
     # -- engine steps -------------------------------------------------------
+    def new_cohort(self, **kw) -> Cohort:
+        """Cohort factory for the executor (keeps `Cohort` engine-owned)."""
+        return Cohort(**kw)
+
     def step(self) -> dict:
-        """One engine iteration: admit+prefill, merge, decode, retire."""
-        t0 = time.perf_counter()
-        self.metrics.queue_depth_samples.append(self.scheduler.queue_depth)
-        for group in self.scheduler.schedule():
-            self._run_prefill(group)
-        self._merge()
-        self._retire()  # requests finished at prefill never enter decode
-        for cohort in self.cohorts:
-            self._run_decode(cohort)
-        self._retire()
-        self.metrics.wall_s += time.perf_counter() - t0
-        return {
-            "active": self.n_active,
-            "queued": self.scheduler.queue_depth,
-            "cohorts": len(self.cohorts),
-        }
+        """One engine iteration — delegated to the policy's executor."""
+        return self.executor.step()
+
+    def flush(self) -> None:
+        """Materialize every in-flight pipelined step (no-op under sync):
+        after this, `RequestState.generated` reflects all dispatched
+        decodes.  `run()` drains implicitly; external steppers that read
+        results mid-flight call this."""
+        self.executor.drain()
 
     def run(self) -> dict[int, np.ndarray]:
         """Drive steps until drained; returns {rid: generated tokens}."""
@@ -315,74 +345,12 @@ class Engine:
         out = self.run()
         return [out[r.rid] for r in reqs]
 
-    # -- internals ----------------------------------------------------------
-    def _run_prefill(self, group: list[Request]) -> None:
-        from .batching import bucket_key
-
-        # bucket_align > 1 (approximate mode): right-pad ragged prompts to
-        # the shared bucket length with token 0 — pad tokens are attended,
-        # so outputs are approximate; exact mode (align=1) never pads
-        P = bucket_key(
-            max(r.prompt_len for r in group), self.scheduler.bucket_align
-        )
-        tokens = np.zeros((len(group), P), np.int32)
-        for i, r in enumerate(group):
-            tokens[i, : r.prompt_len] = r.prompt
-        tokens, n_dummy = pad_batch(tokens, self.batch_align)
-        self.metrics.n_padded_rows += n_dummy
-        cache = self.model.init_cache(tokens.shape[0], self.max_len)
-        tokens_dev = jnp.asarray(tokens)
-        if self.mesh is not None:
-            from .sharding import place_cache, place_tokens
-
-            cache = place_cache(cache, self._axes, self.mesh)
-            tokens_dev = place_tokens(tokens_dev, self.mesh)
-        logits, cache = self._prefill(
-            self.params, {"tokens": tokens_dev}, cache
-        )
-        self.metrics.n_prefill_batches += 1
-        first = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        slots = [RequestState(r) for r in group]
-        self._capture(slots, logits)
-        for st, tok in zip(slots, first):
-            st.emit(int(tok), self.eos_id)
-        cohort = Cohort(slots=slots, cache=cache, length=P, n_dummy=n_dummy)
-        if self.spiking_packed:
-            cohort.spikes = PackedSpikeCache(
-                self.cfg.spiking_T, self.cfg.d_model
-            )
-            cohort.spikes.append(self._slot_spikes(cohort))
-        self.cohorts.append(cohort)
-
+    # -- executor services --------------------------------------------------
     def _slot_spikes(self, cohort: Cohort) -> np.ndarray:
         toks = jnp.asarray(
             [st.generated[-1] for st in cohort.slots], jnp.int32
         )
         return np.asarray(self._encode_pack(self.params, toks))
-
-    def _merge(self) -> None:
-        if not self.merge_cohorts or len(self.cohorts) < 2:
-            return
-        by_len: dict[int, list[Cohort]] = {}
-        for c in self.cohorts:
-            by_len.setdefault(c.length, []).append(c)
-        merged: list[Cohort] = []
-        for length, group in by_len.items():
-            if len(group) == 1:
-                merged.append(group[0])
-                continue
-            # drop alignment rows so live rows stay a prefix post-merge
-            caches = [self._live_cache(c) for c in group]
-            cache = cache_concat(caches, self._axes)
-            slots = [s for c in group for s in c.slots]
-            cohort = Cohort(slots=slots, cache=cache, length=length)
-            if self.spiking_packed:
-                cohort.spikes = group[0].spikes
-                for c in group[1:]:
-                    cohort.spikes.merge(c.spikes)
-            merged.append(cohort)
-            self.metrics.n_merges += len(group) - 1
-        self.cohorts = merged
 
     def _live_cache(self, cohort: Cohort):
         if cohort.n_dummy == 0:
@@ -391,40 +359,22 @@ class Engine:
         cohort.n_dummy = 0
         return cache_take(cohort.cache, self._axes, idx)
 
-    def _run_decode(self, cohort: Cohort) -> None:
-        last = [st.generated[-1] for st in cohort.slots]
-        last += [0] * cohort.n_dummy
-        tokens = jnp.asarray(last, jnp.int32)[:, None]
-        if self.mesh is not None:
-            # re-normalize placement: merge/retire build caches with eager
-            # concat/gather whose output layout is ad hoc; one canonical
-            # sharding per cache shape keeps the decode jit cache warm
-            from .sharding import place_cache, place_tokens
-
-            cohort.cache = place_cache(cohort.cache, self._axes, self.mesh)
-            tokens = place_tokens(tokens, self.mesh)
-        logits, cohort.cache = self._decode(
-            self.params, tokens, cohort.cache
-        )
-        self.metrics.n_decode_batches += 1
-        self.metrics.n_decode_rows += len(cohort.slots)
-        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        self._capture(cohort.slots, logits)
-        for st, tok in zip(cohort.slots, nxt):
-            st.emit(int(tok), self.eos_id)
-        cohort.length += 1
-        if self.spiking_packed:
-            cohort.spikes.update(self._slot_spikes(cohort))
-            self._last_spike_sparsity = cohort.spikes.spike_sparsity()
-
     def drain_logit_traces(self) -> list[list[np.ndarray]]:
         """Per-request logit traces in rid order, CLEARING the store.
 
         The capture buffer grows by one vocab-sized row per emitted token
-        and retirement never prunes it (the traces exist to be compared
-        AFTER a run) — so measurement windows must drain it: pass the
-        result straight to `serve.policy.check_parity`.  rid order equals
+        (bounded per request by ``logit_trace_window`` when set; retirement
+        intentionally keeps traces so post-run parity checks can read
+        them) — so measurement windows must drain it: pass the result
+        straight to `serve.policy.check_parity`.  rid order equals
         submission order, which is how the reference run's prompts line up.
+
+        CAVEAT: `check_parity` / `drift_report` compare traces step-by-step
+        from index 0, so parity measurement needs UNWINDOWED traces
+        (``logit_trace_window=None``, the default) on both runs — a
+        windowed trace keeps only the most recent W rows, shifting its
+        indices by however many were dropped.  The window is for bounded-
+        memory telemetry on long serves, not for parity runs.
         """
         out = [self.logit_traces[r] for r in sorted(self.logit_traces)]
         self.logit_traces = {}
@@ -434,33 +384,24 @@ class Engine:
         """Record each live slot's last-position logits (the vector whose
         argmax is the token emitted this step) for drift measurement —
         the observable that `serve.policy.check_parity` bounds under
-        approximate exactness."""
+        approximate exactness.  ``logit_trace_window`` (opt-in) caps each
+        request's trace to its most recent W rows so long serves don't
+        grow the buffer without bound."""
         if not self.capture_logits:
             return
         rows = np.asarray(logits[: len(slots), -1], np.float32)
+        w = self.logit_trace_window
         for st, row in zip(slots, rows):
-            self.logit_traces.setdefault(st.rid, []).append(row)
-
-    def _retire(self) -> None:
-        kept: list[Cohort] = []
-        for cohort in self.cohorts:
-            done = [st for st in cohort.slots if st.done]
-            if not done:
-                kept.append(cohort)
+            if st.done:
+                # a finished slot still riding in a cohort (pipelined
+                # speculation past EOS): its tokens are discarded by emit,
+                # and its trace must not grow either — one row per EMITTED
+                # token, same as sync
                 continue
-            for st in done:
-                self._finish(st)
-            self.scheduler.release(len(done))
-            alive_idx = [i for i, st in enumerate(cohort.slots) if not st.done]
-            if not alive_idx:
-                continue
-            cohort.cache = cache_take(cohort.cache, self._axes, alive_idx)
-            cohort.slots = [cohort.slots[i] for i in alive_idx]
-            cohort.n_dummy = 0
-            if self.spiking_packed:
-                cohort.spikes.take(alive_idx)
-            kept.append(cohort)
-        self.cohorts = kept
+            trace = self.logit_traces.setdefault(st.rid, [])
+            trace.append(row)
+            if w is not None and len(trace) > w:
+                del trace[: len(trace) - w]
 
     def _finish(self, st: RequestState) -> None:
         self.results[st.rid] = st
@@ -483,6 +424,7 @@ class Engine:
         s.update(mesh_summary(self.mesh))
         s["policy"] = self.policy.describe()
         s["exactness"] = self.policy.exactness.mode
+        s["execution"] = self.policy.execution
         s["token_identical"] = self.policy.token_identical
         if not self.policy.token_identical:
             s["drift_tol"] = self.policy.exactness.tol

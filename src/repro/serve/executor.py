@@ -1,0 +1,444 @@
+"""Staged step executors: the engine's host loop, decomposed.
+
+`Engine.step()` used to be a monolith that host-synced every cohort's
+sampled tokens (`np.asarray(argmax)`) before the next decode could
+dispatch, and ran the packed-spike encode strictly after decode — device
+queues drained between steps, the step-level analogue of the serialized
+timestep loop the paper's FTP dataflow removes (PAPER.md §4).  This module
+makes the stages explicit and composable:
+
+    admit -> prefill -> merge -> decode -> sample -> encode -> retire
+
+Two executors share the stage vocabulary (selected by
+``ExecutionPolicy.execution``):
+
+* `SyncExecutor` (``execution='sync'``, the default) — the reference
+  semantics: every stage completes (including the sample host sync) before
+  the next begins.  Token emission, retirement and metrics are exactly the
+  pre-executor engine's.
+
+* `PipelinedExecutor` (``execution='pipelined'``) — keeps the device queue
+  full:
+
+  - **on-device token feedback**: the greedy argmax of decode step *t*
+    stays on device and feeds the decode of step *t+1* directly; host
+    materialization of emitted tokens is deferred behind an in-flight
+    window (`Engine(pipeline_depth=...)`, default 2) and only forced when
+    EOS checks or retirement actually need the values.  Token *counts* are
+    host-known without a sync (each decode emits exactly one token per
+    slot), so budget exhaustion never needs the values — with no
+    ``eos_id`` the pipeline runs sync-free end to end; with one, EOS is
+    discovered up to ``depth-1`` steps late and the speculative decodes
+    are discarded by `RequestState.emit` (rows are independent; the
+    admission bound ``prompt + max_new <= max_len`` keeps even speculative
+    writes inside the cache).
+  - **double-buffered spike encode**: the packed-spike encode of the token
+    emitted at step *t* dispatches right after step *t*'s decode and
+    overlaps the next decode's dispatch instead of trailing it behind a
+    host sync (`PackedSpikeCache.update_async`); telemetry materializes it
+    lazily.
+  - **load-skew rebalancing**: when retirement shrinks a mesh cohort so
+    its row count stops dividing the ``data`` axis, the cohort is
+    re-packed with dummy rows up to the next multiple
+    (`scheduler.rebalance_pad` + `batching.cache_pad_rows`) instead of
+    falling back to replicated placement — rows stay sharded down the
+    mesh.  Dummy rows are discarded outputs on independent rows, so this
+    is a placement change, never a numerics change.
+
+  Pipelining reorders HOST work only — every device computation consumes
+  bit-identical inputs (the device argmax IS the token the sync path
+  round-trips through the host) — so a bitwise pipelined policy keeps
+  token identity and zero-retrace, asserted across the whole parity
+  matrix (`tests/test_arch_parity_matrix.py`).
+
+Every stage is timed into `EngineMetrics.stage_s` (surfaced by
+`Engine.summary()`), so the pipelined-vs-sync win is attributable: under
+``sync`` the per-step host wait shows up in ``sample_sync``; under
+``pipelined`` the decode stage is dispatch-only and the deferred drain
+overlaps in-flight device work.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+import numpy as np
+
+from .batching import (
+    PackedSpikeCache,
+    bucket_key,
+    cache_concat,
+    cache_pad_rows,
+    cache_take,
+    pad_batch,
+)
+from .scheduler import Request, RequestState, rebalance_pad
+
+
+@dataclass
+class PendingStep:
+    """One decode step whose sampled tokens are still on device.
+
+    ``tokens``: (B,) int32 device argmax (all cohort rows, dummies
+    included); ``logits``: (n_live, vocab) device slice of the
+    last-position logits, kept only when the engine captures traces."""
+
+    tokens: object
+    logits: object | None = None
+
+
+class _StageClock:
+    """Accumulate wall time per stage into `EngineMetrics.stage_s`."""
+
+    def __init__(self, metrics, name: str):
+        self.metrics, self.name = metrics, name
+
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        self.metrics.stage_s[self.name] = (
+            self.metrics.stage_s.get(self.name, 0.0)
+            + time.perf_counter() - self.t0
+        )
+        return False
+
+
+class SyncExecutor:
+    """Reference staged executor: every stage host-completes in order.
+
+    Holds no request state of its own — cohorts, scheduler, metrics and
+    the jit'd prefill/decode/encode callables live on the engine; the
+    executor owns the *order* and the stage boundaries.
+    """
+
+    name = "sync"
+
+    def __init__(self, engine):
+        self.engine = engine
+
+    def _clock(self, stage: str) -> _StageClock:
+        return _StageClock(self.engine.metrics, stage)
+
+    # -- the step loop (shared scaffold; executors differ only in the
+    # per-cohort `decode_cohort` body) ---------------------------------------
+    def step(self) -> dict:
+        """One engine iteration: admit+prefill, merge, decode/sample/encode
+        per cohort, retire."""
+        e = self.engine
+        t0 = time.perf_counter()
+        e.metrics.queue_depth_samples.append(e.scheduler.queue_depth)
+        with self._clock("admit"):
+            groups = e.scheduler.schedule()
+        for group in groups:
+            self.prefill(group)
+        with self._clock("merge"):
+            self.merge()  # flushes merging cohorts (pipelined)
+        with self._clock("retire"):
+            self.retire()  # requests finished at prefill never enter decode
+        for cohort in e.cohorts:
+            self.decode_cohort(cohort)
+        with self._clock("retire"):
+            self.retire()
+        e.metrics.wall_s += time.perf_counter() - t0
+        return {
+            "active": e.n_active,
+            "queued": e.scheduler.queue_depth,
+            "cohorts": len(e.cohorts),
+        }
+
+    # -- stages -------------------------------------------------------------
+    def prefill(self, group: list[Request]) -> None:
+        """Batched prefill of one same-bucket group; emits each request's
+        first token (TTFT is inherently a host event) and opens a cohort."""
+        e = self.engine
+        with self._clock("prefill"):
+            # bucket_align > 1 (approximate mode): right-pad ragged prompts
+            # to the shared bucket length with token 0 — pad tokens are
+            # attended, so outputs are approximate; exact mode (align=1)
+            # never pads
+            P = bucket_key(
+                max(r.prompt_len for r in group), e.scheduler.bucket_align
+            )
+            tokens = np.zeros((len(group), P), np.int32)
+            for i, r in enumerate(group):
+                tokens[i, : r.prompt_len] = r.prompt
+            tokens, n_dummy = pad_batch(tokens, e.batch_align)
+            e.metrics.n_padded_rows += n_dummy
+            cache = e.model.init_cache(tokens.shape[0], e.max_len)
+            tokens_dev = jnp.asarray(tokens)
+            if e.mesh is not None:
+                from .sharding import place_cache, place_tokens
+
+                cache = place_cache(cache, e._axes, e.mesh)
+                tokens_dev = place_tokens(tokens_dev, e.mesh)
+            logits, cache = e._prefill(e.params, {"tokens": tokens_dev}, cache)
+            e.metrics.n_prefill_batches += 1
+            first_dev = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            first = np.asarray(first_dev)
+            slots = [RequestState(r) for r in group]
+            e._capture(slots, logits)
+            for st, tok in zip(slots, first):
+                st.emit(int(tok), e.eos_id)
+            cohort = e.new_cohort(
+                slots=slots, cache=cache, length=P, n_dummy=n_dummy
+            )
+            cohort.next_tokens = first_dev  # device feedback for pipelining
+            if e.spiking_packed:
+                cohort.spikes = PackedSpikeCache(
+                    e.cfg.spiking_T, e.cfg.d_model
+                )
+                cohort.spikes.append(e._slot_spikes(cohort))
+            e.cohorts.append(cohort)
+
+    def merge(self) -> None:
+        """Merge cohorts at the same sequence position (continuous
+        batching): caches concat along their batch axes, alignment rows are
+        dropped so live rows stay a prefix."""
+        e = self.engine
+        if not e.merge_cohorts or len(e.cohorts) < 2:
+            return
+        by_len: dict[int, list] = {}
+        for c in e.cohorts:
+            by_len.setdefault(c.length, []).append(c)
+        merged = []
+        for length, group in by_len.items():
+            if len(group) == 1:
+                merged.append(group[0])
+                continue
+            for c in group:
+                self.flush(c)  # host state authoritative before re-batching
+            caches = [e._live_cache(c) for c in group]
+            cache = cache_concat(caches, e._axes)
+            slots = [s for c in group for s in c.slots]
+            cohort = e.new_cohort(slots=slots, cache=cache, length=length)
+            if e.spiking_packed:
+                cohort.spikes = group[0].spikes
+                for c in group[1:]:
+                    cohort.spikes.merge(c.spikes)
+            merged.append(cohort)
+            e.metrics.n_merges += len(group) - 1
+        e.cohorts = merged
+
+    def decode_cohort(self, cohort) -> None:
+        """decode -> sample -> encode for one cohort (sync: the sample
+        host-sync completes before the next cohort/step dispatches)."""
+        e = self.engine
+        with self._clock("decode"):
+            logits = self._dispatch_decode(cohort)
+        with self._clock("sample_sync"):
+            nxt = np.asarray(cohort.next_tokens)
+            e._capture(cohort.slots, logits)
+            for st, tok in zip(cohort.slots, nxt):
+                st.emit(int(tok), e.eos_id)
+        with self._clock("encode"):
+            self.encode(cohort)
+
+    def _dispatch_decode(self, cohort):
+        """Dispatch one decode step; leaves the greedy argmax ON DEVICE in
+        ``cohort.next_tokens`` and returns the step's logits (device)."""
+        e = self.engine
+        if cohort.next_tokens is not None:
+            tokens = cohort.next_tokens[:, None]
+        else:  # membership changed since the last step: host-built tokens
+            last = [st.generated[-1] for st in cohort.slots]
+            last += [0] * cohort.n_dummy
+            tokens = jnp.asarray(last, jnp.int32)[:, None]
+        if e.mesh is not None:
+            # re-normalize placement: merge/retire build caches with eager
+            # concat/gather whose output layout is ad hoc; one canonical
+            # sharding per cache shape keeps the decode jit cache warm
+            from .sharding import place_cache, place_tokens
+
+            cohort.cache = place_cache(cohort.cache, e._axes, e.mesh)
+            tokens = place_tokens(tokens, e.mesh)
+        logits, cohort.cache = e._decode(e.params, tokens, cohort.cache)
+        e.metrics.n_decode_batches += 1
+        e.metrics.n_decode_rows += len(cohort.slots)
+        cohort.next_tokens = jnp.argmax(
+            logits[:, -1], axis=-1
+        ).astype(jnp.int32)
+        cohort.length += 1
+        return logits
+
+    def encode(self, cohort) -> None:
+        """Per-step packed-spike re-encode of each slot's newest token."""
+        e = self.engine
+        if not e.spiking_packed:
+            return
+        cohort.spikes.update(e._slot_spikes(cohort))
+        e._last_spike_sparsity = cohort.spikes.spike_sparsity()
+
+    def retire(self) -> None:
+        """Drop finished requests, gather surviving cache rows, release
+        scheduler slots, and (mesh) rebalance skewed cohorts."""
+        e = self.engine
+        kept = []
+        for cohort in e.cohorts:
+            if cohort.pending:
+                # pipelined cohorts flush before any membership change, so
+                # a cohort with in-flight steps has no *known*-done slot
+                kept.append(cohort)
+                continue
+            done = [st for st in cohort.slots if st.done]
+            if not done:
+                kept.append(cohort)
+                continue
+            for st in done:
+                e._finish(st)
+            e.scheduler.release(len(done))
+            alive_idx = [i for i, st in enumerate(cohort.slots) if not st.done]
+            if not alive_idx:
+                continue
+            cohort.cache = cache_take(cohort.cache, e._axes, alive_idx)
+            cohort.slots = [cohort.slots[i] for i in alive_idx]
+            cohort.n_dummy = 0
+            cohort.next_tokens = None  # membership changed: host rebuilds
+            if e.spiking_packed:
+                cohort.spikes.take(alive_idx)
+            self.rebalance(cohort)
+            kept.append(cohort)
+        e.cohorts = kept
+
+    def rebalance(self, cohort) -> None:
+        """Load-skew hook (no-op in sync: today's replicated fallback)."""
+
+    # -- pipelining hooks (no-ops here) -------------------------------------
+    def flush(self, cohort) -> None:
+        """Materialize any deferred device state (none in sync mode)."""
+
+    def drain(self) -> None:
+        """Drain in-flight steps across cohorts (none in sync mode)."""
+
+
+class PipelinedExecutor(SyncExecutor):
+    """In-flight-window executor: decode dispatch never waits on the host.
+
+    ``depth`` is the in-flight window: up to ``depth - 1`` decode steps may
+    have un-materialized tokens at any time; each step's drain materializes
+    the oldest pending step while the newest executes on device.
+    """
+
+    name = "pipelined"
+
+    def __init__(self, engine, depth: int = 2):
+        super().__init__(engine)
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        if not engine.row_independent:
+            # MoE capacity routing couples batch rows: a done-but-not-yet-
+            # materialized slot riding through a speculative decode would
+            # change the OTHER rows' results vs sync (which retires it
+            # first).  Window 1 materializes each step before the next
+            # dispatches, so per-decode cohort membership — and therefore
+            # every coupled-row computation — matches sync exactly, while
+            # keeping the on-device token feedback (value-identical).
+            depth = 1
+        self.depth = depth
+
+    def decode_cohort(self, cohort) -> None:
+        """decode (dispatch-only) -> encode (double-buffered) -> drain
+        (materialize beyond the in-flight window)."""
+        e = self.engine
+        if not self._count_alive(cohort):
+            # every slot's token budget is (or may be) exhausted once the
+            # in-flight steps land: materialize and let retire run
+            with self._clock("sample_sync"):
+                self.flush(cohort)
+            return
+        with self._clock("decode"):
+            logits = self._dispatch_decode(cohort)
+            cohort.pending.append(PendingStep(
+                tokens=cohort.next_tokens,
+                logits=(logits[: len(cohort.slots), -1]
+                        if e.capture_logits else None),
+            ))
+        with self._clock("encode"):
+            self.encode(cohort)
+        with self._clock("sample_sync"):
+            self._drain_cohort(cohort)
+
+    # -- pipelined stage overrides ------------------------------------------
+    def _count_alive(self, cohort) -> bool:
+        """Host-only liveness: could any slot still accept a token after
+        every in-flight step lands?  Uses token COUNTS (deterministic on
+        the host — one token per slot per step), never token values, so it
+        costs no sync.  EOS (value-dependent) can only end a request
+        EARLIER, making this an upper bound — a speculative decode past an
+        un-materialized EOS is discarded work, never corruption."""
+        window = len(cohort.pending)
+        return any(
+            not st.done
+            and len(st.generated) + window < st.request.max_new_tokens
+            for st in cohort.slots
+        )
+
+    def encode(self, cohort) -> None:
+        """Double-buffered packed-spike encode: dispatched against the
+        ON-DEVICE sampled tokens right after decode, so it overlaps the
+        next decode's dispatch instead of trailing a host sync; the cache
+        materializes it lazily (`PackedSpikeCache.update_async`)."""
+        e = self.engine
+        if not e.spiking_packed:
+            return
+        toks = cohort.next_tokens[: len(cohort.slots)]
+        cohort.spikes.update_async(e._encode_pack(e.params, toks))
+
+    def _drain_cohort(self, cohort) -> None:
+        """Materialize pending steps beyond the in-flight window.  The
+        np.asarray here is the host wait the window hides: it overlaps the
+        decode steps still executing on device."""
+        while len(cohort.pending) >= self.depth:
+            if self._materialize(cohort):
+                # a slot finished: flush so retire sees host-true state
+                self.flush(cohort)
+
+    def _materialize(self, cohort) -> bool:
+        """Land the oldest pending step on the host: emit tokens, capture
+        logits.  Returns True when a slot finished (EOS or budget)."""
+        e = self.engine
+        p = cohort.pending.pop(0)
+        toks = np.asarray(p.tokens)
+        if p.logits is not None:
+            e._capture(cohort.slots, np.asarray(p.logits)[:, None])
+        for st, tok in zip(cohort.slots, toks):
+            st.emit(int(tok), e.eos_id)
+        return any(st.done for st in cohort.slots)
+
+    def flush(self, cohort) -> None:
+        """Materialize ALL in-flight steps (forced before merge/retire and
+        when the cohort's budget is exhausted)."""
+        while cohort.pending:
+            self._materialize(cohort)
+        if self.engine.spiking_packed and cohort.spikes is not None:
+            self.engine._last_spike_sparsity = cohort.spikes.spike_sparsity()
+
+    def drain(self) -> None:
+        for cohort in self.engine.cohorts:
+            self.flush(cohort)
+
+    def rebalance(self, cohort) -> None:
+        """Re-pack a mesh cohort whose surviving rows stopped dividing the
+        data axis: pad dummy rows (zero cache rows, discarded outputs) up
+        to the next multiple so batch leaves stay sharded down the mesh
+        instead of replicating — the load-skew half of this executor."""
+        e = self.engine
+        if e.mesh is None or not e.row_independent:
+            return
+        dn = e.mesh.shape.get("data", 1)
+        pad = rebalance_pad(len(cohort.slots), dn)
+        if pad == 0:
+            return
+        cohort.cache = cache_pad_rows(cohort.cache, e._axes, pad)
+        cohort.n_dummy = pad
+        e.metrics.n_rebalances += 1
+        e.metrics.n_padded_rows += pad
+
+
+def make_executor(engine, policy, *, depth: int = 2) -> SyncExecutor:
+    """Build the executor the policy's ``execution`` axis names."""
+    if policy.execution == "pipelined":
+        return PipelinedExecutor(engine, depth=depth)
+    return SyncExecutor(engine)

@@ -43,8 +43,16 @@ class EngineMetrics:
     n_decode_rows: int = 0        # sum of cohort batch sizes over decode calls
     n_merges: int = 0
     n_padded_rows: int = 0        # dummy rows added for batch alignment
+    n_rebalances: int = 0         # mesh cohorts re-packed on load skew
     queue_depth_samples: list[int] = field(default_factory=list)
     wall_s: float = 0.0
+    # Per-stage wall time, filled by the step executor (serve/executor.py):
+    # admit / prefill / merge / decode / sample_sync / encode / retire.
+    # Under execution='sync' the per-step host wait lands in sample_sync;
+    # under 'pipelined' decode is dispatch-only and sample_sync is the
+    # deferred drain that overlaps in-flight device work — the breakdown
+    # that makes the pipelined-vs-sync difference attributable.
+    stage_s: dict[str, float] = field(default_factory=dict)
 
     def record(self, m: RequestMetrics) -> None:
         self.completed.append(m)
@@ -80,5 +88,7 @@ class EngineMetrics:
             "mean_decode_batch": self.mean_decode_batch,
             "cohort_merges": self.n_merges,
             "padded_rows": self.n_padded_rows,
+            "rebalances": self.n_rebalances,
             "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "stage_s": {k: self.stage_s[k] for k in sorted(self.stage_s)},
         }

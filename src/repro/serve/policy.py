@@ -20,6 +20,14 @@ execution choice is one frozen, hashable dataclass-pytree with four axes:
   rule must preserve) or ``approximate(tol)`` (cross-shard float reductions
   allowed — psum tensor-parallel attention/MLP — with logit drift bounded
   by ``tol`` instead of token identity).
+* ``execution``       — how the engine's step loop runs: ``"sync"`` (each
+  decode step host-syncs its sampled tokens before the next dispatches —
+  the reference semantics) or ``"pipelined"`` (the staged executor in
+  `serve/executor.py`: sampled tokens stay on device between decode steps,
+  host materialization is deferred behind an in-flight window, the packed-
+  spike encode double-buffers against the next decode, and mesh cohorts
+  re-pack on load skew).  Orthogonal to exactness: a bitwise pipelined
+  policy is still token-identical — only the host/device overlap changes.
 
 Everything downstream consumes the policy: ``Engine(policy=...)``,
 ``kernels.ops.dispatch(a, weights_or_plan, policy, T)``, the serve CLI
@@ -49,6 +57,7 @@ from .sharding import (
 SPIKE_FORMATS = ("float", "packed")
 WEIGHT_SPARSITIES = ("dense", "dual_sparse")
 EXACTNESS_MODES = ("bitwise", "approximate")
+EXECUTION_MODES = ("sync", "pipelined")
 
 
 # ---------------------------------------------------------------------------
@@ -160,8 +169,13 @@ class ExecutionPolicy:
     weight_sparsity: str = "dense"
     placement: Placement = field(default_factory=Placement)
     exactness: Exactness = field(default_factory=bitwise)
+    execution: str = "sync"
 
     def __post_init__(self):
+        if self.execution not in EXECUTION_MODES:
+            raise ValueError(
+                f"execution {self.execution!r} not in {EXECUTION_MODES}"
+            )
         if self.spike_format not in SPIKE_FORMATS:
             raise ValueError(
                 f"spike_format {self.spike_format!r} not in {SPIKE_FORMATS}"
@@ -220,7 +234,8 @@ class ExecutionPolicy:
             ex += f"(tol={self.exactness.tol})"
         return (f"spike_format={self.spike_format!r}, "
                 f"weight_sparsity={self.weight_sparsity!r}, "
-                f"placement={self.placement.describe()}, exactness={ex}")
+                f"placement={self.placement.describe()}, exactness={ex}, "
+                f"execution={self.execution!r}")
 
     # -- arch-aware validation / construction -------------------------------
     def validate_for(self, cfg) -> "ExecutionPolicy":
@@ -246,10 +261,11 @@ class ExecutionPolicy:
     def for_arch(cls, cfg, *, spike_format: str | None = None,
                  weight_sparsity: str | None = None,
                  placement: Placement | None = None,
-                 exactness: Exactness | None = None) -> "ExecutionPolicy":
+                 exactness: Exactness | None = None,
+                 execution: str | None = None) -> "ExecutionPolicy":
         """Arch-aware constructor with ``None`` = the natural default:
         packed spikes for spiking archs, dual-sparse when weights are
-        pruned, single-device bitwise placement."""
+        pruned, single-device bitwise placement, sync execution."""
         if spike_format is None:
             spike_format = "packed" if cfg.spiking_ffn else "float"
         if weight_sparsity is None:
@@ -263,6 +279,7 @@ class ExecutionPolicy:
             weight_sparsity=weight_sparsity,
             placement=placement if placement is not None else Placement(),
             exactness=exactness if exactness is not None else bitwise(),
+            execution=execution if execution is not None else "sync",
         )
         return pol.validate_for(cfg)
 

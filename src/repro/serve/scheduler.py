@@ -13,6 +13,12 @@ Policy (preemption-free continuous batching):
 * Decode merging: cohorts (batches sharing one cache) at the same sequence
   position are merged, so new prefills join in-flight decode instead of
   running in their own lane forever.  Running requests are never evicted.
+* Load-skew rebalancing (`rebalance_pad`): under a device mesh, retirement
+  shrinks cohorts unevenly until their row counts stop dividing the data
+  axis.  The scheduling policy for that skew is computed here (how many
+  dummy rows re-pack a cohort to the next data-axis multiple); the
+  pipelined executor applies it (`executor.PipelinedExecutor.rebalance`)
+  instead of the sync path's replicated-placement fallback.
 """
 from __future__ import annotations
 
@@ -69,6 +75,21 @@ class RequestState:
             self.finish_reason, self.finish_time = "eos", now
         elif len(self.generated) >= self.request.max_new_tokens:
             self.finish_reason, self.finish_time = "length", now
+
+
+def rebalance_pad(n_rows: int, data_axis: int) -> int:
+    """Dummy rows needed to re-pack a cohort of ``n_rows`` live requests
+    onto a mesh data axis of size ``data_axis``.
+
+    0 when the cohort already divides the axis (nothing to fix), when the
+    axis is trivial, or when the cohort is empty (nothing to place).  The
+    policy is pad-to-next-multiple — the cheapest re-split that keeps
+    whole rows per shard (`sharding.cache_sharding` requires batch %
+    data_axis == 0 to shard; anything else replicates).
+    """
+    if data_axis <= 1 or n_rows <= 0:
+        return 0
+    return (-n_rows) % data_axis
 
 
 class AdmissionError(RuntimeError):

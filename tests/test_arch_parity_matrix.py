@@ -1,11 +1,17 @@
 """Cross-arch serving parity matrix.
 
 Every registry arch x {batch-1, staggered continuous batching} x
-{float, packed, dual-sparse where applicable} asserting TOKEN IDENTITY
-against the single-shot reference loop (`launch.serve.generate`, solo per
-request) — so a new arch or serving path can never silently skip the
-identity guarantee: it either appears here and passes, or it carries an
-EXPLICIT structural skip with the reason in the report.
+{float, packed, dual-sparse where applicable} x {sync, pipelined
+execution} asserting TOKEN IDENTITY against the single-shot reference
+loop (`launch.serve.generate`, solo per request) — so a new arch or
+serving path can never silently skip the identity guarantee: it either
+appears here and passes, or it carries an EXPLICIT structural skip with
+the reason in the report.
+
+The execution axis rides every cell because the pipelined executor's
+claim (`serve/executor.py`) is precisely that deferring host work never
+changes device inputs: bitwise policies must stay token-identical whether
+sampled tokens round-trip through the host each step or stay on device.
 
 Structural exclusions (skipped, not silently absent):
 * encoder-only archs (no decode path — the engine refuses them);
@@ -31,6 +37,7 @@ from repro.serve import Engine, ExecutionPolicy, check_parity
 
 MODES = ("float", "packed", "dual")
 SCENARIOS = ("batch1", "staggered")
+EXECUTIONS = ("sync", "pipelined")
 
 _MODEL_CACHE: dict = {}
 _REF_CACHE: dict = {}
@@ -78,12 +85,15 @@ def _params():
     for arch in list_archs():
         for mode in MODES:
             for scenario in SCENARIOS:
-                reason = _skip_reason(arch, mode)
-                marks = [pytest.mark.skip(reason=reason)] if reason else []
-                out.append(pytest.param(
-                    arch, mode, scenario,
-                    id=f"{arch}-{mode}-{scenario}", marks=marks,
-                ))
+                for execution in EXECUTIONS:
+                    reason = _skip_reason(arch, mode)
+                    marks = ([pytest.mark.skip(reason=reason)]
+                             if reason else [])
+                    out.append(pytest.param(
+                        arch, mode, scenario, execution,
+                        id=f"{arch}-{mode}-{scenario}-{execution}",
+                        marks=marks,
+                    ))
     return out
 
 
@@ -112,8 +122,10 @@ def _reference(arch, mode, model, params, prompts, gens, max_len):
     return _REF_CACHE[key]
 
 
-@pytest.mark.parametrize("arch,mode,scenario", _params())
-def test_arch_serving_parity(arch, mode, scenario):
+@pytest.mark.parametrize("arch,mode,scenario,execution", _params())
+def test_arch_serving_parity(arch, mode, scenario, execution):
+    from repro.kernels import ops
+
     cfg, model, params = _model(arch, mode)
     lens, gens, arrivals = _scenario(cfg, scenario)
     rng = np.random.default_rng(11)
@@ -124,7 +136,7 @@ def test_arch_serving_parity(arch, mode, scenario):
 
     # `for_arch` derives the serving mode from the (mode-overridden) config:
     # float -> float/dense, packed -> packed/dense, dual -> packed/dual_sparse
-    policy = ExecutionPolicy.for_arch(cfg)
+    policy = ExecutionPolicy.for_arch(cfg, execution=execution)
     if mode != "float":
         assert policy.spike_format == "packed"
     engine = Engine(model, params, max_len=max_len, max_slots=2,
@@ -141,8 +153,28 @@ def test_arch_serving_parity(arch, mode, scenario):
     got = [np.asarray(engine.results[r.rid].generated, np.int32)
            for r in reqs]
     # the parity assertion is GATED on the policy's exactness: every matrix
-    # policy is bitwise, so check_parity asserts token identity; approximate
+    # policy is bitwise (in BOTH execution modes — pipelining reorders host
+    # work only), so check_parity asserts token identity; approximate
     # policies (tests/test_serve_policy.py) assert a drift bound instead
     assert policy.token_identical
     check_parity(policy, refs, got)
     assert engine.summary()["n_requests"] == len(prompts)
+    if mode == "dual":
+        # zero retrace across requests: replaying the SAME arrival pattern
+        # with new prompt values (new spike activity, identical shapes)
+        # must hit the jit cache in either execution mode
+        warm = ops.BSR_TRACE_COUNT
+        prompts2 = [
+            np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens
+        ]
+        i, step = 0, 0
+        while not (engine.idle and i == len(prompts2)):
+            while i < len(prompts2) and arrivals[i] <= step:
+                engine.submit(prompts2[i], gens[i])
+                i += 1
+            engine.step()
+            step += 1
+        assert ops.BSR_TRACE_COUNT == warm, (
+            f"{execution} serving retraced on a new request"
+        )

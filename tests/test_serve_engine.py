@@ -224,10 +224,11 @@ def test_engine_matches_reference_loop(arch):
     assert s["mean_decode_batch"] == B  # one cohort, fully batched
 
 
-def test_engine_continuous_batching_matches_isolated_runs():
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+def test_engine_continuous_batching_matches_isolated_runs(execution):
     """Staggered arrivals, mixed prompt lengths, limited slots, batch
     padding, cohort merging — every request's tokens still equal a solo
-    (batch-1) reference run."""
+    (batch-1) reference run, under both step executors."""
     cfg, model, params = _model("llama3_2_1b")
     max_len = 48
     lens = [8, 8, 12, 8, 12, 8, 16]
@@ -241,7 +242,10 @@ def test_engine_continuous_batching_matches_isolated_runs():
             np.asarray(generate(model, params, jnp.asarray(p)[None], cache, g))[0]
         )
 
-    engine = Engine(model, params, max_len=max_len, max_slots=4, batch_align=2)
+    engine = Engine(
+        model, params, max_len=max_len, max_slots=4, batch_align=2,
+        policy=ExecutionPolicy.for_arch(cfg, execution=execution),
+    )
     reqs, i, step = [], 0, 0
     while not (engine.idle and i == len(prompts)):
         while i < len(prompts) and arrivals[i] <= step:
@@ -255,9 +259,13 @@ def test_engine_continuous_batching_matches_isolated_runs():
         )
     s = engine.summary()
     assert s["n_requests"] == len(prompts)
-    assert s["cohort_merges"] >= 1      # prefills joined in-flight decode
     assert s["padded_rows"] >= 1        # batch alignment exercised
     assert s["max_queue_depth"] >= 1    # slots were contended
+    if execution == "sync":
+        # merge opportunities are timing-dependent: retirement lag shifts
+        # them under the pipelined executor (its deterministic-merge case
+        # lives in tests/test_serve_executor.py)
+        assert s["cohort_merges"] >= 1  # prefills joined in-flight decode
 
 
 def test_engine_spiking_packed_path_token_identical():

@@ -1,0 +1,519 @@
+"""Staged-executor tests (`serve/executor.py`).
+
+The pipelined executor's contract: reordering HOST work (deferred token
+materialization, double-buffered spike encode, load-skew re-packing) must
+never change device inputs — so bitwise policies stay token-identical and
+zero-retrace in either execution mode.  Mesh-dependent tests run on the
+suite-wide 8 fake XLA devices (tests/conftest.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.serve import generate
+from repro.models.registry import build_model
+from repro.serve import (
+    Engine,
+    ExecutionPolicy,
+    PipelinedExecutor,
+    Placement,
+    SyncExecutor,
+    cache_pad_rows,
+    make_serve_mesh,
+    rebalance_pad,
+)
+
+STAGES = ("admit", "prefill", "merge", "decode", "sample_sync", "encode",
+          "retire")
+
+_MODEL_CACHE: dict = {}
+
+
+def _model(arch="llama3_2_1b", **overrides):
+    key = (arch, tuple(sorted(overrides.items())))
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config(arch))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+def _pipelined(cfg, **over):
+    return ExecutionPolicy.for_arch(cfg, execution="pipelined", **over)
+
+
+# ---------------------------------------------------------------------------
+# units: policy axis, executor selection, rebalance arithmetic
+# ---------------------------------------------------------------------------
+
+def test_execution_axis_validated_and_described():
+    with pytest.raises(ValueError, match="execution"):
+        ExecutionPolicy(execution="async")
+    pol = ExecutionPolicy(execution="pipelined")
+    assert "execution='pipelined'" in pol.describe()
+    assert ExecutionPolicy().execution == "sync"
+    assert pol.token_identical  # pipelining never relaxes exactness
+
+
+def test_executor_selected_by_policy():
+    cfg, model, params = _model()
+    e_sync = Engine(model, params, max_len=16)
+    assert type(e_sync.executor) is SyncExecutor
+    e_pipe = Engine(model, params, max_len=16,
+                    policy=_pipelined(cfg), pipeline_depth=3)
+    assert type(e_pipe.executor) is PipelinedExecutor
+    assert e_pipe.executor.depth == 3
+    assert e_pipe.summary()["execution"] == "pipelined"
+    with pytest.raises(ValueError, match="depth"):
+        Engine(model, params, max_len=16, policy=_pipelined(cfg),
+               pipeline_depth=0)
+
+
+def test_rebalance_pad_policy():
+    assert rebalance_pad(4, 4) == 0     # already divides
+    assert rebalance_pad(3, 4) == 1
+    assert rebalance_pad(5, 4) == 3
+    assert rebalance_pad(1, 8) == 7
+    assert rebalance_pad(3, 1) == 0     # trivial axis
+    assert rebalance_pad(0, 4) == 0     # empty cohort: nothing to place
+
+
+def test_cache_pad_rows_appends_zero_rows():
+    cfg, model, params = _model()
+    axes = model.cache_axes()
+    cache = model.init_cache(3, 16)
+    padded = cache_pad_rows(cache, axes, 2)
+    from repro.serve import cache_batch_size
+
+    assert cache_batch_size(padded, axes) == 5
+    # original rows intact, new rows zero
+    np.testing.assert_array_equal(
+        np.asarray(padded["k"][:, :3]), np.asarray(cache["k"])
+    )
+    assert not np.asarray(padded["k"][:, 3:]).any()
+    # position-like leaves untouched
+    np.testing.assert_array_equal(
+        np.asarray(padded["kv_pos"]), np.asarray(cache["kv_pos"])
+    )
+    assert cache_pad_rows(cache, axes, 0) is cache
+
+
+def test_dispatch_pipelined_refuses_per_call_plan_building():
+    """Per-call plan building host-materializes weights — a forced sync the
+    pipelined dispatch contract forbids."""
+    from repro.kernels import ops
+    from repro.serve.policy import PACKED_DUAL
+
+    pol = dataclasses.replace(PACKED_DUAL, execution="pipelined")
+    with pytest.raises(ValueError, match="pipelined"):
+        ops.dispatch(jnp.zeros((8, 32), jnp.uint32),
+                     jnp.zeros((32, 16), jnp.float32), pol, 4)
+    # a prebuilt plan is exactly what the pipelined path wants
+    from repro.kernels.join_plan import build_weight_plan
+
+    rng = np.random.default_rng(0)
+    w = np.where(rng.random((32, 16)) < 0.3,
+                 rng.standard_normal((32, 16)).astype(np.float32), 0.0)
+    plan = build_weight_plan(w)
+    a = jnp.asarray((rng.random((8, 32)) < 0.5).astype(np.uint32))
+    out, _ = ops.dispatch(a, plan, pol, 4, n_out=16, fuse_lif=True)
+    want, _ = ops.dispatch(a, plan, PACKED_DUAL, 4, n_out=16, fuse_lif=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# pipelined == sync token identity (the tentpole contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_pipelined_matches_reference_loop(depth):
+    """On-device token feedback at any window depth must equal the
+    host-round-trip loop exactly."""
+    cfg, model, params = _model()
+    B, P, G = 4, 16, 8
+    prompts = _prompts(cfg, [P] * B, seed=0)
+    cache = model.init_cache(B, P + G)
+    want = np.asarray(
+        generate(model, params, jnp.asarray(np.stack(prompts)), cache, G)
+    )
+    engine = Engine(model, params, max_len=P + G, max_slots=B,
+                    policy=_pipelined(cfg), pipeline_depth=depth)
+    got = engine.generate_batch(prompts, G)
+    for i in range(B):
+        np.testing.assert_array_equal(want[i], got[i])
+    s = engine.summary()
+    assert s["total_tokens"] == B * G
+    assert set(STAGES) <= set(s["stage_s"])
+
+
+def test_pipelined_staggered_continuous_batching_matches_solo():
+    """Mixed lengths, staggered arrivals, a merge, retirement — under the
+    pipelined executor every request still equals its solo reference.
+
+    The len-10 request arrives at step 2, exactly when the (8, 8) cohort's
+    sequence position reaches 10 — cohort lengths advance at decode
+    DISPATCH (host-known), so this merge is deterministic in both
+    execution modes, unlike slot-release-timed merges, which shift with
+    the pipelined executor's retirement lag."""
+    cfg, model, params = _model()
+    max_len = 48
+    lens = [8, 8, 12, 10, 8, 14]
+    gens = [6, 6, 5, 5, 4, 6]
+    arrivals = [0, 0, 0, 2, 3, 4]
+    prompts = _prompts(cfg, lens, seed=1)
+    refs = []
+    for p, g in zip(prompts, gens):
+        cache = model.init_cache(1, max_len)
+        refs.append(np.asarray(
+            generate(model, params, jnp.asarray(p)[None], cache, g))[0])
+    engine = Engine(model, params, max_len=max_len, max_slots=6,
+                    batch_align=2, policy=_pipelined(cfg))
+    reqs, i, step = [], 0, 0
+    while not (engine.idle and i == len(prompts)):
+        while i < len(prompts) and arrivals[i] <= step:
+            reqs.append(engine.submit(prompts[i], gens[i]))
+            i += 1
+        engine.step()
+        step += 1
+    for j, r in enumerate(reqs):
+        np.testing.assert_array_equal(
+            refs[j], np.asarray(engine.results[r.rid].generated, np.int32)
+        )
+    s = engine.summary()
+    assert s["cohort_merges"] >= 1      # prefill joined in-flight decode
+    assert s["padded_rows"] >= 1        # batch alignment exercised
+
+
+def test_pipelined_eos_stops_early_despite_speculation():
+    """EOS lives in a not-yet-materialized step: the executor discovers it
+    up to depth-1 steps late, discards the speculative decodes, and the
+    output still ends exactly at EOS."""
+    cfg, model, params = _model()
+    (p,) = _prompts(cfg, [8], seed=3)
+    cache = model.init_cache(1, 40)
+    ref = np.asarray(generate(model, params, jnp.asarray(p)[None], cache, 32))[0]
+    eos = int(ref[3])
+    engine = Engine(model, params, max_len=40, max_slots=1, eos_id=eos,
+                    policy=_pipelined(cfg), pipeline_depth=3)
+    (out,) = engine.generate_batch([p], 32)
+    assert len(out) == 4 and out[-1] == eos
+    assert engine.metrics.completed[0].finish_reason == "eos"
+    # speculative decodes were dispatched (more steps than emitted tokens)
+    # yet never corrupted the output
+    assert engine.metrics.n_decode_batches >= 3
+
+
+def test_pipelined_max_new_one_never_decodes():
+    """Budget exhaustion is host-known from token COUNTS (no sync): a
+    request satisfied at prefill must never dispatch a decode."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, [8, 8, 8], seed=4)
+    engine = Engine(model, params, max_len=16, max_slots=4,
+                    policy=_pipelined(cfg))
+    outs = engine.generate_batch(prompts, 1)
+    assert all(len(o) == 1 for o in outs)
+    assert engine.summary()["decode_batches"] == 0
+
+
+def test_pipelined_flush_exposes_inflight_tokens():
+    """`Engine.flush()` is the migration hatch for external steppers: after
+    it, `generated` reflects every dispatched decode."""
+    cfg, model, params = _model()
+    (p,) = _prompts(cfg, [8], seed=5)
+    engine = Engine(model, params, max_len=32, max_slots=1,
+                    policy=_pipelined(cfg), pipeline_depth=4)
+    req = engine.submit(p, 8)
+    engine.step()   # prefill + decode 1 (in flight)
+    engine.step()   # decode 2 (in flight)
+    st = engine.cohorts[0].slots[0]
+    in_flight = len(engine.cohorts[0].pending)
+    assert in_flight >= 1                 # tokens still on device
+    n_before = len(st.generated)
+    engine.flush()
+    assert len(st.generated) == n_before + in_flight
+    assert not engine.cohorts[0].pending
+    engine.run()
+    assert len(engine.results[req.rid].generated) == 8
+
+
+# ---------------------------------------------------------------------------
+# per-stage timing + trace window (satellites)
+# ---------------------------------------------------------------------------
+
+def test_stage_timing_attributes_sync_vs_pipelined():
+    """Both executors fill the same stage vocabulary; the sync executor's
+    per-step host wait is attributed to sample_sync, and the pipelined
+    decode stage is dispatch-only (its sample_sync is the deferred drain)."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, [12] * 4, seed=6)
+    for execution in ("sync", "pipelined"):
+        engine = Engine(
+            model, params, max_len=24, max_slots=4,
+            policy=ExecutionPolicy.for_arch(cfg, execution=execution),
+        )
+        engine.generate_batch(prompts, 6)
+        s = engine.summary()
+        assert s["execution"] == execution
+        stage_s = s["stage_s"]
+        assert set(STAGES) <= set(stage_s)
+        assert all(v >= 0.0 for v in stage_s.values())
+        # stages were actually exercised, not just zero-initialized
+        assert stage_s["decode"] > 0.0 and stage_s["prefill"] > 0.0
+        # stage time is a decomposition of (at most) the step wall time
+        assert sum(stage_s.values()) <= s["wall_s"] * 1.5
+
+
+def test_pipelined_moe_clamps_window_and_keeps_identity():
+    """MoE capacity routing couples batch rows, so a done-but-unflushed
+    slot riding through a speculative decode would change the OTHER rows
+    vs sync (which retires it first).  The executor clamps the in-flight
+    window to 1 for row-coupled archs — per-decode cohort membership then
+    matches sync exactly.  Scenario: same-length prompts (one batched MoE
+    cohort) with uneven budgets, so retirement timing is load-bearing."""
+    cfg, model, params = _model("mixtral_8x22b")
+    assert cfg.n_experts > 0
+    engine = Engine(model, params, max_len=24, max_slots=2,
+                    policy=_pipelined(cfg), pipeline_depth=4)
+    assert engine.executor.depth == 1   # clamped, not the requested 4
+    prompts = _prompts(cfg, [10, 10], seed=14)
+    gens = [2, 5]
+    sync = Engine(model, params, max_len=24, max_slots=2,
+                  policy=ExecutionPolicy.for_arch(cfg))
+    sref = [sync.submit(p, g) for p, g in zip(prompts, gens)]
+    sync.run()
+    preq = [engine.submit(p, g) for p, g in zip(prompts, gens)]
+    engine.run()
+    for a, b in zip(sref, preq):
+        np.testing.assert_array_equal(
+            np.asarray(sync.results[a.rid].generated, np.int32),
+            np.asarray(engine.results[b.rid].generated, np.int32),
+        )
+
+
+def test_pipelined_eos_speculation_never_grows_logit_traces():
+    """Speculative steps past an un-materialized EOS are discarded by emit
+    AND by capture: each request's trace stays one row per EMITTED token,
+    exactly as under sync."""
+    cfg, model, params = _model()
+    (p,) = _prompts(cfg, [8], seed=3)
+    cache = model.init_cache(1, 40)
+    ref = np.asarray(generate(model, params, jnp.asarray(p)[None], cache, 32))[0]
+    eos = int(ref[3])
+    traces = {}
+    for execution in ("sync", "pipelined"):
+        engine = Engine(
+            model, params, max_len=40, max_slots=1, eos_id=eos,
+            capture_logits=True, pipeline_depth=3,
+            policy=ExecutionPolicy.for_arch(cfg, execution=execution),
+        )
+        (out,) = engine.generate_batch([p], 32)
+        assert len(out) == 4 and out[-1] == eos
+        traces[execution] = engine.drain_logit_traces()
+    (ts,), (tp,) = traces["sync"], traces["pipelined"]
+    assert len(ts) == len(tp) == 4      # one row per emitted token
+    for a, b in zip(ts, tp):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pipelined_logit_traces_match_sync():
+    """Deferred capture lands the SAME logit rows in the SAME order, so
+    drift measurement (approximate-mode parity) composes with pipelining
+    unchanged."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, [10, 10], seed=12)
+    traces = {}
+    for execution in ("sync", "pipelined"):
+        engine = Engine(
+            model, params, max_len=20, max_slots=2, capture_logits=True,
+            policy=ExecutionPolicy.for_arch(cfg, execution=execution),
+        )
+        engine.generate_batch(prompts, 5)
+        traces[execution] = engine.drain_logit_traces()
+    for ts, tp in zip(traces["sync"], traces["pipelined"]):
+        assert len(ts) == len(tp)
+        for a, b in zip(ts, tp):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_logit_trace_window_bounds_capture_buffer():
+    """Opt-in window caps each request's trace at its most recent W rows,
+    so long approximate serves don't leak memory; drain still clears."""
+    cfg, model, params = _model()
+    prompts = _prompts(cfg, [8, 8], seed=7)
+    engine = Engine(model, params, max_len=24, max_slots=2,
+                    capture_logits=True, logit_trace_window=3)
+    engine.generate_batch(prompts, 8)
+    assert all(len(t) == 3 for t in engine.logit_traces.values())
+    drained = engine.drain_logit_traces()
+    assert len(drained) == 2 and not engine.logit_traces
+    # unbounded capture keeps every row (the pre-window behavior)
+    engine2 = Engine(model, params, max_len=24, max_slots=2,
+                     capture_logits=True)
+    engine2.generate_batch(prompts, 8)
+    assert all(len(t) == 8 for t in engine2.logit_traces.values())
+    with pytest.raises(ValueError, match="logit_trace_window"):
+        Engine(model, params, max_len=24, capture_logits=True,
+               logit_trace_window=0)
+
+
+# ---------------------------------------------------------------------------
+# load-skew rebalancing on the mesh
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 fake devices (conftest sets XLA_FLAGS)")
+def test_pipelined_mesh_rebalance_repacks_skewed_cohorts():
+    """Uneven budgets shrink the cohort 4 -> 3 -> 2 on a data=4 mesh: the
+    pipelined executor re-packs with dummy rows (sync falls back to
+    replicated placement) and tokens stay identical to solo runs."""
+    cfg, model, params = _model()
+    mesh = make_serve_mesh("data=4,model=2")
+    prompts = _prompts(cfg, [10] * 4, seed=8)
+    gens = [3, 5, 7, 7]
+    refs = []
+    for p, g in zip(prompts, gens):
+        cache = model.init_cache(1, 20)
+        refs.append(np.asarray(
+            generate(model, params, jnp.asarray(p)[None], cache, g))[0])
+
+    engine = Engine(
+        model, params, max_len=20, max_slots=4,
+        policy=_pipelined(cfg, placement=Placement(mesh=mesh)),
+    )
+    reqs = [engine.submit(p, g) for p, g in zip(prompts, gens)]
+    engine.run()
+    for r, w in zip(reqs, refs):
+        np.testing.assert_array_equal(
+            w, np.asarray(engine.results[r.rid].generated, np.int32)
+        )
+    s = engine.summary()
+    assert s["rebalances"] >= 2          # 3 -> pad 1, 2 -> pad 2
+    assert s["padded_rows"] >= 3
+
+    # the sync executor on the same skew keeps the replicated fallback
+    sync = Engine(
+        model, params, max_len=20, max_slots=4,
+        policy=ExecutionPolicy.for_arch(cfg, placement=Placement(mesh=mesh)),
+    )
+    sreqs = [sync.submit(p, g) for p, g in zip(prompts, gens)]
+    sync.run()
+    for r, w in zip(sreqs, refs):
+        np.testing.assert_array_equal(
+            w, np.asarray(sync.results[r.rid].generated, np.int32)
+        )
+    assert sync.summary()["rebalances"] == 0
+
+
+@pytest.mark.skipif(jax.device_count() < 8,
+                    reason="needs 8 fake devices (conftest sets XLA_FLAGS)")
+def test_rebalanced_cohort_cache_shards_down_data_axis():
+    """After a re-pack the cohort's batched cache leaves actually carry the
+    `data` axis again (the point of rebalancing vs replication)."""
+    cfg, model, params = _model()
+    mesh = make_serve_mesh("data=4,model=2")
+    prompts = _prompts(cfg, [10] * 4, seed=9)
+    gens = [2, 8, 8, 8]  # one early retirement -> 3 live rows -> pad to 4
+    engine = Engine(
+        model, params, max_len=20, max_slots=4,
+        policy=_pipelined(cfg, placement=Placement(mesh=mesh)),
+    )
+    for p, g in zip(prompts, gens):
+        engine.submit(p, g)
+    seen_sharded_repack = False
+    while not engine.idle:
+        engine.step()
+        for c in engine.cohorts:
+            if c.n_dummy > 0 and len(c.slots) == 3:
+                spec = c.cache["k"].sharding.spec
+                # after the next decode's place_cache the batch dim shards;
+                # right after the eager pad it may still be ad hoc — accept
+                # either, but require the row count to divide the axis
+                assert (len(c.slots) + c.n_dummy) % 4 == 0
+                if len(spec) > 1 and spec[1] == "data":
+                    seen_sharded_repack = True
+    assert engine.metrics.n_rebalances >= 1
+    assert seen_sharded_repack
+
+
+# ---------------------------------------------------------------------------
+# spiking paths: deferred encode + zero retrace
+# ---------------------------------------------------------------------------
+
+def test_pipelined_spiking_packed_token_identical_and_telemetry():
+    """Double-buffered encode changes when the device->host copy happens,
+    never what is encoded: tokens and spike telemetry match sync."""
+    from repro.models import layers as model_layers
+
+    cfg, model, params = _model(
+        "llama3_2_1b", spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=0.5,
+    )
+    prompts = _prompts(cfg, [12, 12, 12], seed=2)
+    try:
+        e_sync = Engine(model, params, max_len=24, max_slots=4,
+                        policy=ExecutionPolicy.for_arch(cfg))
+        a = e_sync.generate_batch(prompts, 6)
+        e_pipe = Engine(model, params, max_len=24, max_slots=4,
+                        policy=_pipelined(cfg))
+        b = e_pipe.generate_batch(prompts, 6)
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    ss, sp = e_sync.summary(), e_pipe.summary()
+    assert sp["spike_sparsity"] == ss["spike_sparsity"]
+    assert sp["stage_s"]["encode"] >= 0.0
+
+
+def test_packed_spike_cache_update_async_defers_materialization():
+    from repro.serve import PackedSpikeCache
+
+    c = PackedSpikeCache(T=4, width=8)
+    c.append(np.zeros((2, 8), np.uint32))
+    c.update_async(jnp.full((2, 8), 0b0101, jnp.uint32))
+    assert c._pending_dev is not None      # still on device
+    assert c.spike_sparsity() < 1.0        # first access materializes
+    assert c._pending_dev is None
+    np.testing.assert_array_equal(c.words, np.full((2, 8), 0b0101, np.uint32))
+    # newest async update wins without materializing the one it replaces
+    c.update_async(jnp.zeros((2, 8), jnp.uint32))
+    c.update_async(jnp.ones((2, 8), jnp.uint32))
+    c.take([0])
+    np.testing.assert_array_equal(c.words, np.ones((1, 8), np.uint32))
+
+
+def test_pipelined_dual_sparse_zero_retrace(cold_bsr_cache):
+    """The no-retrace contract survives pipelining: device-fed tokens have
+    the same avals as host-built ones, so new requests hit the jit cache."""
+    from repro.kernels import ops
+    from repro.models import layers as model_layers
+
+    cfg, model, params = _model(
+        "llama3_2_1b", spiking_ffn=True, spiking_T=4,
+        spiking_weight_density=0.3,
+    )
+    prompts = _prompts(cfg, [12, 12, 12], seed=10)
+    try:
+        engine = Engine(model, params, max_len=24, max_slots=4,
+                        policy=_pipelined(cfg))
+        assert engine.spiking_dual_sparse
+        engine.generate_batch(prompts, 6)
+        warm = ops.BSR_TRACE_COUNT
+        assert warm > 0
+        engine.generate_batch(_prompts(cfg, [12, 12, 12], seed=11), 6)
+        assert ops.BSR_TRACE_COUNT == warm, "pipelined serving retraced"
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
