@@ -1,7 +1,126 @@
-"""Paper Fig. 13 (on-/off-chip traffic per network) and Fig. 14 (off-chip
-traffic breakdown per single-layer workload + compressed-format overhead)."""
+"""Traffic benchmarks: the paper's hardware-sim figures + a serve-side
+arrival-trace driver.
+
+Part 1 (`rows()`): paper Fig. 13 (on-/off-chip traffic per network) and
+Fig. 14 (off-chip traffic breakdown per single-layer workload +
+compressed-format overhead) through the cycle-level hardware sim.
+
+Part 2 (`make_trace` / `replay_trace`): the same traffic-shaping question
+asked of the SERVING engine — request arrival patterns instead of DRAM
+bursts.  Three mixes:
+
+* ``poisson``  — independent arrivals (geometric gaps in engine steps),
+  every prompt distinct: the no-reuse baseline;
+* ``bursty``   — arrivals clumped into back-to-back bursts: stresses
+  admission batching and cohort merging;
+* ``shared_prefix`` — a small pool of distinct full prompts sampled
+  repeatedly (the shared-system-prompt pattern): under
+  ``paging='paged'`` + the radix prefix index, repeats skip prefill
+  entirely (`PAPER.md`'s "fetch once, reuse across the temporal loop"
+  applied to prompt state across REQUESTS).
+
+`replay_trace` drives an `Engine` through a trace with engine steps as the
+arrival clock; `benchmarks.serve_bench.bench_prefix_cache` uses it for the
+prefix-reuse row in BENCH_serve.json, and `main()` exposes it as a CLI:
+
+    PYTHONPATH=src python -m benchmarks.fig13_14_traffic \
+        --serve-trace shared_prefix --arch llama3_2_1b --paging paged
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
 from repro.sim import HwConfig, run_design, run_layer
 from repro.sim.runner import DESIGNS
+
+TRACE_MIXES = ("poisson", "bursty", "shared_prefix")
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceRequest:
+    """One trace entry: submit `prompt` when the engine reaches `step`."""
+
+    step: int
+    prompt: np.ndarray
+    max_new_tokens: int
+
+
+def make_trace(
+    mix: str,
+    n_requests: int = 16,
+    *,
+    vocab: int = 32000,
+    prompt_len: int = 16,
+    gen: int = 8,
+    mean_gap: float = 1.0,
+    burst_size: int = 4,
+    n_shared_prompts: int = 3,
+    seed: int = 0,
+) -> list[TraceRequest]:
+    """Deterministic arrival trace for one traffic mix (see module doc).
+
+    Arrivals are in ENGINE STEPS (the serving clock `replay_trace` uses),
+    so traces are reproducible across hosts and wall-clock noise.  The
+    ``shared_prefix`` mix samples full prompts from a small pool — prefix
+    hits are exact full-prompt matches (state leaves and position locals
+    depend on the whole prompt), so repetition, not truncation, is what
+    the index can reuse.
+    """
+    if mix not in TRACE_MIXES:
+        raise ValueError(f"unknown trace mix {mix!r}; pick one of {TRACE_MIXES}")
+    rng = np.random.default_rng(seed)
+
+    def fresh():
+        return np.asarray(
+            rng.integers(0, vocab, size=(prompt_len,)), np.int32
+        )
+
+    if mix == "bursty":
+        arrivals: list[int] = []
+        t = 0
+        while len(arrivals) < n_requests:
+            n = min(burst_size, n_requests - len(arrivals))
+            arrivals.extend([t] * n)
+            t += 1 + int(rng.poisson(mean_gap * burst_size))
+    else:
+        gaps = rng.poisson(mean_gap, size=n_requests)
+        gaps[0] = 0
+        arrivals = np.cumsum(gaps).tolist()
+    if mix == "shared_prefix":
+        pool = [fresh() for _ in range(n_shared_prompts)]
+        prompts = [pool[int(rng.integers(n_shared_prompts))]
+                   for _ in range(n_requests)]
+    else:
+        prompts = [fresh() for _ in range(n_requests)]
+    return [TraceRequest(int(s), p, gen)
+            for s, p in zip(arrivals, prompts)]
+
+
+def replay_trace(engine, trace: list[TraceRequest], max_steps: int = 10_000):
+    """Drive `engine` through `trace` (engine steps are the arrival clock).
+
+    Returns ``(tickets, outputs)`` in submission order — tickets carry the
+    admission outcome and prefix-hit info; outputs are the generated
+    tokens, so two engines replaying the same trace can be compared
+    token-for-token.
+    """
+    trace = sorted(trace, key=lambda r: r.step)
+    tickets, i, t = [], 0, 0
+    while i < len(trace) or not engine.idle:
+        while i < len(trace) and trace[i].step <= t:
+            tickets.append(
+                engine.submit(trace[i].prompt, trace[i].max_new_tokens)
+            )
+            i += 1
+        engine.step()
+        t += 1
+        if t > max_steps:
+            raise RuntimeError(f"trace did not drain in {max_steps} steps")
+    engine.flush()
+    outs = [np.asarray(engine.results[tk.rid].generated, np.int32)
+            for tk in tickets]
+    return tickets, outs
 
 
 def rows():
@@ -33,3 +152,60 @@ def rows():
         out.append((f"fig14/{lname}/format_overhead", 0.0,
                     f"loas_vs_sparten_format={fmt_ratio:.2f}x (paper ~2.1x: extra A bitmasks)"))
     return out
+
+
+def main(argv=None):
+    """Serve-trace CLI: replay one traffic mix through the engine."""
+    import json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve-trace", choices=TRACE_MIXES, required=True,
+                    help="arrival-trace mix to replay through the engine")
+    ap.add_argument("--arch", default="llama3_2_1b")
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--max-slots", type=int, default=8)
+    ap.add_argument("--paging", choices=("none", "paged"), default="paged")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    import jax
+
+    from repro.configs import get_config, smoke_variant
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ExecutionPolicy, Paging, paged
+
+    cfg = smoke_variant(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    paging = (paged(args.page_size) if args.paging == "paged" else Paging())
+    max_len = args.prompt_len + args.gen
+    if paging.enabled:
+        max_len = -(-max_len // paging.page_size) * paging.page_size
+    engine = Engine(
+        model, params, max_len=max_len, max_slots=args.max_slots,
+        policy=ExecutionPolicy.for_arch(cfg, paging=paging),
+    )
+    trace = make_trace(
+        args.serve_trace, args.n_requests, vocab=cfg.vocab,
+        prompt_len=args.prompt_len, gen=args.gen, seed=args.seed,
+    )
+    tickets, _ = replay_trace(engine, trace)
+    s = engine.summary()
+    hits = sum(tk.prefix_hit for tk in tickets)
+    print(f"mix={args.serve_trace} n={len(tickets)} "
+          f"prefix_hits={hits} ({hits / len(tickets):.0%}) "
+          f"ttft_p50={s['ttft_s_p50'] * 1e3:.1f}ms "
+          f"ttft_p99={s['ttft_s_p99'] * 1e3:.1f}ms "
+          f"tok_s={s['throughput_tok_s']:.1f}")
+    print("summary:", json.dumps(
+        {k: s[k] for k in ("prefill_batches", "cohort_merges", "page_moves",
+                           "prefix_hits", "prefix_tokens_reused")
+         if k in s}))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -320,11 +320,113 @@ def bench_pipelined(batch=8, prompt_len=32, gen=16, depth=2) -> dict:
     return out
 
 
+def bench_prefix_cache(
+    n_requests=12, prompt_len=16, gen=8, page_size=8, n_shared_prompts=3
+) -> dict:
+    """Prefix-reuse row: the paged engine + radix prefix index vs the dense
+    engine on the same shared-system-prompt arrival trace
+    (`benchmarks.fig13_14_traffic.make_trace`).
+
+    The row the JSON must hold: ``token_identical: true`` — every
+    prefix-hit request (its prefill skipped, its KV prefix pages shared by
+    ref-count) emits exactly the cold-prefill engine's tokens; `SystemExit`
+    otherwise, so the row doubles as a CI identity gate.  Alongside:
+    p50/p99 TTFT for both engines, the measured hit rate, prefill batches
+    saved, and the page-move count (publish snapshots + COW clones only —
+    merges/retires move zero pages).  Poisson and bursty mixes replay on
+    the paged engine too, as the no-reuse contrast (distinct prompts, zero
+    hits).
+    """
+    from benchmarks.fig13_14_traffic import TRACE_MIXES, make_trace, replay_trace
+    from repro.configs import get_config, smoke_variant
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ExecutionPolicy, paged
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len = -(-(prompt_len + gen) // page_size) * page_size
+    out = {"arch": "llama3_2_1b", "n_requests": n_requests,
+           "prompt_len": prompt_len, "gen": gen, "page_size": page_size,
+           "n_shared_prompts": n_shared_prompts}
+
+    def fresh_engine(paging):
+        pol = (ExecutionPolicy.for_arch(cfg, paging=paged(page_size))
+               if paging else ExecutionPolicy.for_arch(cfg))
+        return Engine(model, params, max_len=max_len, max_slots=8,
+                      policy=pol)
+
+    trace = make_trace(
+        "shared_prefix", n_requests, vocab=cfg.vocab,
+        prompt_len=prompt_len, gen=gen,
+        n_shared_prompts=n_shared_prompts, seed=0,
+    )
+    # warm both engines on an unrelated prompt so jit compile time doesn't
+    # land in the first trace request's TTFT (the warm-up prompt enters the
+    # paged engine's prefix index but matches nothing in the trace)
+    warm = np.asarray(
+        np.random.default_rng(99).integers(0, cfg.vocab, size=(prompt_len,)),
+        np.int32,
+    )
+    results = {}
+    for key, paging in (("dense_cold", False), ("paged_prefix", True)):
+        engine = fresh_engine(paging)
+        engine.generate_batch([warm], gen)
+        engine.metrics = EngineMetrics()
+        if engine.store is not None:
+            engine.store.metrics = engine.metrics
+        tickets, outs = replay_trace(engine, trace)
+        s = engine.summary()
+        results[key] = (tickets, outs)
+        out[key] = {
+            "tok_s": s["throughput_tok_s"],
+            "ttft_s_p50": s["ttft_s_p50"],
+            "ttft_s_p99": s["ttft_s_p99"],
+            "prefill_batches": s["prefill_batches"],
+        }
+        if paging:
+            out[key]["prefix_hits"] = s["prefix_hits"]
+            out[key]["prefix_tokens_reused"] = s["prefix_tokens_reused"]
+            out[key]["page_moves"] = s["page_moves"]
+            out[key]["hit_rate"] = s["prefix_hits"] / n_requests
+    out["hit_rate"] = out["paged_prefix"]["hit_rate"]
+    out["prefill_batches_saved"] = (
+        out["dense_cold"]["prefill_batches"]
+        - out["paged_prefix"]["prefill_batches"]
+    )
+    out["token_identical"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(results["dense_cold"][1], results["paged_prefix"][1])
+    )
+    if not out["token_identical"]:  # the row doubles as a CI identity gate
+        raise SystemExit(
+            "prefix-cache serving broke token identity vs cold prefill"
+        )
+    # no-reuse contrast: distinct-prompt mixes replay on a paged engine and
+    # must score zero hits (the index only ever matches exact full prompts)
+    for mix in ("poisson", "bursty"):
+        engine = fresh_engine(True)
+        engine.generate_batch([warm], gen)
+        engine.metrics = EngineMetrics()
+        engine.store.metrics = engine.metrics
+        tickets, _ = replay_trace(engine, trace=make_trace(
+            mix, n_requests, vocab=cfg.vocab, prompt_len=prompt_len,
+            gen=gen, seed=1,
+        ))
+        s = engine.summary()
+        out[f"{mix}_hit_rate"] = s["prefix_hits"] / n_requests
+        out[f"{mix}_ttft_s_p50"] = s["ttft_s_p50"]
+    assert set(("poisson", "bursty", "shared_prefix")) <= set(TRACE_MIXES)
+    return out
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
     rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
-                "--no-sharded-row", "--no-approx-row", "--no-pipelined-row"])
+                "--no-sharded-row", "--no-approx-row", "--no-pipelined-row",
+                "--no-prefix-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -358,6 +460,8 @@ def main(argv=None):
                     help="skip the approximate-TP (psum attention/MLP) row")
     ap.add_argument("--no-pipelined-row", action="store_true",
                     help="skip the pipelined-vs-sync executor row")
+    ap.add_argument("--no-prefix-row", action="store_true",
+                    help="skip the paged + prefix-reuse arrival-trace row")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -420,6 +524,17 @@ def main(argv=None):
               f"token_identical={pl['token_identical']}; "
               f"sync sample_sync {pl['sync_sample_sync_s']*1e3:.1f}ms vs "
               f"pipelined {pl['pipelined_sample_sync_s']*1e3:.1f}ms)")
+    if not args.no_prefix_row:
+        pc = bench_prefix_cache()
+        report["bench_prefix_cache"] = pc
+        print(f"  prefix cache (shared-prompt trace): hit rate "
+              f"{pc['hit_rate']:.0%}, "
+              f"{pc['prefill_batches_saved']} prefill batches saved, "
+              f"ttft_p50 {pc['paged_prefix']['ttft_s_p50']*1e3:.1f}ms vs "
+              f"cold {pc['dense_cold']['ttft_s_p50']*1e3:.1f}ms "
+              f"(token_identical={pc['token_identical']}; poisson/bursty "
+              f"contrast hit rates {pc['poisson_hit_rate']:.0%}/"
+              f"{pc['bursty_hit_rate']:.0%})")
     if not args.no_write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)

@@ -82,6 +82,9 @@ def build_policy(args, cfg):
     exactness = (
         approximate(args.tol) if args.exactness == "approximate" else bitwise()
     )
+    from repro.serve import Paging, paged
+
+    paging = (paged(args.page_size) if args.paging == "paged" else Paging())
     return ExecutionPolicy.for_arch(
         cfg,
         spike_format=spike_format,
@@ -89,6 +92,7 @@ def build_policy(args, cfg):
         placement=placement,
         exactness=exactness,
         execution=args.execution,
+        paging=paging,
     )
 
 
@@ -139,6 +143,16 @@ def main(argv=None):
     ap.add_argument("--pipeline-depth", type=int, default=2,
                     help="in-flight decode window under --execution "
                          "pipelined (>= 1; 1 degenerates to sync cadence)")
+    ap.add_argument("--paging", choices=("none", "paged"), default="none",
+                    help="policy.paging: paged = cache state lives in "
+                         "fixed pages owned by a CacheStore (cohort "
+                         "merge/retire are page-table edits) with a radix "
+                         "prefix index serving repeated prompts without a "
+                         "prefill; none = per-cohort dense caches")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="cache positions per page under --paging paged "
+                         "(multiple of 8; max_len is rounded up to a "
+                         "multiple of it)")
     # -- arch surgery -------------------------------------------------------
     ap.add_argument("--spiking", action="store_true",
                     help="swap the arch's MLP blocks for dual-sparse "
@@ -179,6 +193,12 @@ def main(argv=None):
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
     policy = build_policy(args, cfg)
     print(f"policy: {policy.describe()}")
+    max_len = args.prompt_len + args.gen
+    if policy.paging.enabled:
+        # paged layout needs the cache sequence extent to divide into whole
+        # pages; round capacity up (spare positions are masked, never read)
+        ps = policy.paging.page_size
+        max_len = -(-max_len // ps) * ps
     mesh = policy.mesh
     if args.mesh and mesh is None:
         print("mesh: single device — auto fallback to unsharded serving")
@@ -196,7 +216,7 @@ def main(argv=None):
     engine = Engine(
         model,
         params,
-        max_len=args.prompt_len + args.gen,
+        max_len=max_len,
         max_slots=args.max_slots or args.batch,
         batch_align=args.batch_align,
         policy=policy,
@@ -219,7 +239,7 @@ def main(argv=None):
         )
         ref = Engine(
             model, params,
-            max_len=args.prompt_len + args.gen,
+            max_len=max_len,
             max_slots=args.max_slots or args.batch,
             batch_align=args.batch_align,
             policy=ref_policy,

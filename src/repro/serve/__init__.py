@@ -1,11 +1,20 @@
 """Continuous-batching serving engine (see `engine.py` for the design).
 
 Execution configuration is one declarative `ExecutionPolicy`
-(`policy.py`): spike format x weight sparsity x placement x exactness —
-consumed by the engine, the kernel dispatcher (`repro.kernels.ops.dispatch`)
-and the serve CLI.
+(`policy.py`): spike format x weight sparsity x placement x exactness x
+execution x paging — consumed by the engine, the kernel dispatcher
+(`repro.kernels.ops.dispatch`) and the serve CLI.
+
+Cache manipulation goes through the `CacheOps` facade (`batching.py`):
+`DenseCacheOps` for per-cohort dense pytrees, `PagedCacheOps`
+(`paging.py`) for page-table cohorts over a shared `CacheStore` with a
+`RadixPrefixIndex` for prefix reuse.  The loose ``cache_concat`` /
+``cache_take`` / ``cache_pad_rows`` / ``batch_axis_tree`` helpers are
+deprecated shims over the same implementations.
 """
 from .batching import (
+    CacheOps,
+    DenseCacheOps,
     PackedSpikeCache,
     bucket_key,
     cache_batch_size,
@@ -17,9 +26,20 @@ from .batching import (
 from .engine import Cohort, Engine
 from .executor import PipelinedExecutor, SyncExecutor, make_executor
 from .metrics import EngineMetrics, RequestMetrics
+from .paging import (
+    CacheStore,
+    PagedCache,
+    PagedCacheOps,
+    PagedSpikeCache,
+    PageLayout,
+    PagePoolExhausted,
+    PrefixEntry,
+    RadixPrefixIndex,
+)
 from .policy import (
     Exactness,
     ExecutionPolicy,
+    Paging,
     ParityError,
     Placement,
     approximate,
@@ -27,9 +47,11 @@ from .policy import (
     check_parity,
     drift_report,
     max_logit_drift,
+    paged,
 )
 from .scheduler import (
     AdmissionError,
+    AdmissionTicket,
     Request,
     RequestState,
     Scheduler,
@@ -39,15 +61,27 @@ from .sharding import make_serve_mesh, mesh_summary, parse_mesh_spec
 
 __all__ = [
     "AdmissionError",
+    "AdmissionTicket",
+    "CacheOps",
+    "CacheStore",
     "Cohort",
+    "DenseCacheOps",
     "Engine",
     "EngineMetrics",
     "Exactness",
     "ExecutionPolicy",
     "PackedSpikeCache",
+    "PageLayout",
+    "PagePoolExhausted",
+    "PagedCache",
+    "PagedCacheOps",
+    "PagedSpikeCache",
+    "Paging",
     "ParityError",
     "PipelinedExecutor",
     "Placement",
+    "PrefixEntry",
+    "RadixPrefixIndex",
     "Request",
     "RequestMetrics",
     "RequestState",
@@ -67,6 +101,7 @@ __all__ = [
     "max_logit_drift",
     "mesh_summary",
     "pad_batch",
+    "paged",
     "parse_mesh_spec",
     "rebalance_pad",
 ]

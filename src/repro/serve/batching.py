@@ -19,9 +19,17 @@ Also here: `PackedSpikeCache`, the engine-side store that carries SNN
 activations between engine steps as packed uint32 spike words (bit t =
 timestep t, LSB = t0) instead of unpacked ``(T, ...)`` float32 planes — the
 serving-side continuation of the paper's §IV-A compression argument.
+
+API NOTE: the loose per-operation functions (`cache_concat` / `cache_take`
+/ `cache_pad_rows` / `batch_axis_tree`) are DEPRECATED shims.  The engine
+and executors consume one `CacheOps` facade instead — `DenseCacheOps`
+(this module, the eager concat/gather layout) or
+`serve.paging.PagedCacheOps` (page-table edits over a shared page pool) —
+so the cache backend is swappable behind ``ExecutionPolicy.paging``.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -33,9 +41,7 @@ def _axes_leaves(axes):
     return jax.tree.leaves(axes, is_leaf=lambda x: isinstance(x, tuple))
 
 
-def batch_axis_tree(cache, axes) -> list[int | None]:
-    """Per-leaf index of the ``"batch"`` axis (None when the leaf has no
-    batch dimension), in `jax.tree.leaves` order of ``cache``."""
+def _batch_axis_tree(cache, axes) -> list[int | None]:
     cl = jax.tree.leaves(cache)
     al = _axes_leaves(axes)
     if len(cl) != len(al):
@@ -54,7 +60,7 @@ def cache_batch_size(cache, axes) -> int:
     """Batch size of a cache pytree (asserts all batched leaves agree)."""
     sizes = {
         leaf.shape[b]
-        for leaf, b in zip(jax.tree.leaves(cache), batch_axis_tree(cache, axes))
+        for leaf, b in zip(jax.tree.leaves(cache), _batch_axis_tree(cache, axes))
         if b is not None
     }
     if len(sizes) != 1:
@@ -62,16 +68,10 @@ def cache_batch_size(cache, axes) -> int:
     return sizes.pop()
 
 
-def cache_concat(caches: list, axes):
-    """Merge cohort caches along their batch axes.
-
-    Position-like leaves (no batch axis) must be identical across cohorts —
-    the caller guarantees this by only merging cohorts at the same sequence
-    position; we verify cheaply on the host.
-    """
+def _cache_concat(caches: list, axes):
     if len(caches) == 1:
         return caches[0]
-    baxes = batch_axis_tree(caches[0], axes)
+    baxes = _batch_axis_tree(caches[0], axes)
     flats = [jax.tree.leaves(c) for c in caches]
     treedef = jax.tree.structure(caches[0])
     out = []
@@ -91,10 +91,9 @@ def cache_concat(caches: list, axes):
     return jax.tree.unflatten(treedef, out)
 
 
-def cache_take(cache, axes, idx):
-    """Gather a subset of batch rows (``idx``: host ints) from a cache."""
+def _cache_take(cache, axes, idx):
     idx = jnp.asarray(idx, jnp.int32)
-    baxes = batch_axis_tree(cache, axes)
+    baxes = _batch_axis_tree(cache, axes)
     leaves = [
         leaf if b is None else jnp.take(leaf, idx, axis=b)
         for leaf, b in zip(jax.tree.leaves(cache), baxes)
@@ -102,19 +101,10 @@ def cache_take(cache, axes, idx):
     return jax.tree.unflatten(jax.tree.structure(cache), leaves)
 
 
-def cache_pad_rows(cache, axes, n: int):
-    """Append ``n`` zero rows along every batched leaf's batch axis.
-
-    The cache-side half of load-skew rebalancing (`executor.rebalance`):
-    when retirement shrinks a mesh cohort below a multiple of the data
-    axis, zero rows re-pack it so batch leaves keep sharding down the mesh
-    instead of replicating.  Zero cache rows behave exactly like the dummy
-    rows `pad_batch` creates at prefill — independent rows whose outputs
-    are discarded.  Position-like leaves (no batch axis) are untouched.
-    """
+def _cache_pad_rows(cache, axes, n: int):
     if n <= 0:
         return cache
-    baxes = batch_axis_tree(cache, axes)
+    baxes = _batch_axis_tree(cache, axes)
     leaves = []
     for leaf, b in zip(jax.tree.leaves(cache), baxes):
         if b is None:
@@ -126,6 +116,97 @@ def cache_pad_rows(cache, axes, n: int):
             [leaf, jnp.zeros(pad_shape, leaf.dtype)], axis=b
         ))
     return jax.tree.unflatten(jax.tree.structure(cache), leaves)
+
+
+# ---------------------------------------------------------------------------
+# CacheOps: the one cache-manipulation surface
+# ---------------------------------------------------------------------------
+
+class CacheOps:
+    """Facade over cohort-cache manipulation: everything the engine and the
+    step executors do to a cache BETWEEN model calls.
+
+    Two backends implement it — `DenseCacheOps` (per-cohort dense pytrees;
+    concat/take/pad are whole-cache array ops, the pre-paging layout) and
+    `serve.paging.PagedCacheOps` (cohorts hold page tables into a shared
+    `CacheStore` pool; the same operations are host page-table edits that
+    move no cache data).  The executor never branches on the backend: it
+    calls these four methods and the engine's dispatch hooks.
+    """
+
+    def batch_size(self, cache) -> int:
+        raise NotImplementedError
+
+    def concat(self, caches: list):
+        """Merge cohort caches (same sequence position) into one."""
+        raise NotImplementedError
+
+    def take(self, cache, idx: list[int]):
+        """Keep only rows ``idx`` (host ints); other rows are discarded."""
+        raise NotImplementedError
+
+    def pad_rows(self, cache, n: int):
+        """Append ``n`` dummy (zero) rows for alignment/rebalance."""
+        raise NotImplementedError
+
+
+class DenseCacheOps(CacheOps):
+    """Dense backend: cohort caches are plain pytrees; batch-axis concat /
+    gather / zero-pad located via the model's logical-axes tree."""
+
+    def __init__(self, axes_tree):
+        self.axes = axes_tree
+
+    def batch_size(self, cache) -> int:
+        return cache_batch_size(cache, self.axes)
+
+    def concat(self, caches: list):
+        return _cache_concat(caches, self.axes)
+
+    def take(self, cache, idx):
+        return _cache_take(cache, self.axes, idx)
+
+    def pad_rows(self, cache, n: int):
+        return _cache_pad_rows(cache, self.axes, n)
+
+
+# ---------------------------------------------------------------------------
+# deprecated per-operation shims (the pre-CacheOps surface)
+# ---------------------------------------------------------------------------
+
+def _warn_cache_helper(name: str, repl: str):
+    warnings.warn(
+        f"serve.batching.{name} is deprecated; use {repl} "
+        "(serve.batching.DenseCacheOps / serve.paging.PagedCacheOps)",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def batch_axis_tree(cache, axes) -> list[int | None]:
+    """DEPRECATED: per-leaf index of the ``"batch"`` axis (None when the
+    leaf has no batch dimension), in `jax.tree.leaves` order."""
+    _warn_cache_helper("batch_axis_tree", "the CacheOps facade")
+    return _batch_axis_tree(cache, axes)
+
+
+def cache_concat(caches: list, axes):
+    """DEPRECATED: merge cohort caches along their batch axes — use
+    ``CacheOps.concat``."""
+    _warn_cache_helper("cache_concat", "CacheOps.concat")
+    return _cache_concat(caches, axes)
+
+
+def cache_take(cache, axes, idx):
+    """DEPRECATED: gather a subset of batch rows — use ``CacheOps.take``."""
+    _warn_cache_helper("cache_take", "CacheOps.take")
+    return _cache_take(cache, axes, idx)
+
+
+def cache_pad_rows(cache, axes, n: int):
+    """DEPRECATED: append ``n`` zero rows — use ``CacheOps.pad_rows``."""
+    _warn_cache_helper("cache_pad_rows", "CacheOps.pad_rows")
+    return _cache_pad_rows(cache, axes, n)
 
 
 def pad_batch(tokens: np.ndarray, align: int) -> tuple[np.ndarray, int]:

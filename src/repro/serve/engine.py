@@ -93,11 +93,11 @@ import numpy as np
 from repro.core.lif import direct_encode
 from repro.core.packing import pack_spikes
 
-from .batching import PackedSpikeCache, cache_take
+from .batching import DenseCacheOps, PackedSpikeCache
 from .executor import make_executor
 from .metrics import EngineMetrics, RequestMetrics
 from .policy import ExecutionPolicy
-from .scheduler import Request, RequestState, Scheduler
+from .scheduler import AdmissionTicket, Request, RequestState, Scheduler
 
 
 @dataclass
@@ -143,6 +143,8 @@ class Engine:
         capture_logits: bool | None = None,
         logit_trace_window: int | None = None,
         pipeline_depth: int = 2,
+        page_pool_rows: int | None = None,   # paging='paged': pool capacity
+        prefix_cache: bool | None = None,    # paging='paged': radix index
         spiking_packed: bool | None = None,  # deprecated -> policy
         dual_sparse: bool | None = None,     # deprecated -> policy
         mesh=None,                           # deprecated -> policy.placement
@@ -184,14 +186,60 @@ class Engine:
             dn = mesh.shape.get("data", 1)
             self.batch_align = max(self.batch_align, dn)
         self.merge_cohorts = merge_cohorts and self.row_independent
+        self.metrics = EngineMetrics()
+        self._axes = model.cache_axes()
+        # -- cache backend (ExecutionPolicy.paging) --------------------------
+        # dense: per-cohort pytrees, eager concat/take/pad.  paged: page
+        # tables into one engine-wide CacheStore; cohort membership changes
+        # are table edits, and a radix prefix index can serve repeated
+        # prompts without a prefill (serve/paging.py).
+        self.paged = policy.paging.enabled
+        self.store = None
+        self.prefix_index = None
+        if self.paged:
+            from .paging import CacheStore, PageLayout, PagedCacheOps, RadixPrefixIndex
+
+            template = model.init_cache(1, max_len)
+            self._page_layout = PageLayout(
+                template, self._axes, policy.paging.page_size
+            )
+            n_rows = (page_pool_rows if page_pool_rows is not None
+                      else 2 * max_slots + 4)
+            self.store = CacheStore(
+                self._page_layout, n_rows, mesh=mesh, metrics=self.metrics
+            )
+            self.cache_ops = PagedCacheOps(self.store)
+            # prefix reuse needs: deterministic tokens (the entry caches the
+            # first greedy token), independent rows, exact-length buckets
+            # (a bucket-padded row's cache holds pad-token state), and no
+            # logit capture (a hit emits its first token with no logits row)
+            auto_prefix = (
+                policy.token_identical and self.row_independent
+                and bucket_align == 1 and not self.capture_logits
+            )
+            if prefix_cache is True and not auto_prefix:
+                raise ValueError(
+                    "prefix_cache=True needs a bitwise policy with "
+                    "independent rows, bucket_align=1 and capture_logits "
+                    "off — the hit path re-emits a cached greedy first "
+                    "token and skips its prefill (no logits to capture)"
+                )
+            want_prefix = (auto_prefix if prefix_cache is None
+                           else bool(prefix_cache))
+            if want_prefix:
+                self.prefix_index = RadixPrefixIndex(self.store)
+        else:
+            if prefix_cache:
+                raise ValueError(
+                    "prefix_cache=True requires policy.paging='paged'"
+                )
+            self.cache_ops = DenseCacheOps(self._axes)
         self.scheduler = Scheduler(
             max_slots=max_slots, max_queue=max_queue, max_len=max_len,
-            bucket_align=bucket_align,
+            bucket_align=bucket_align, prefix_index=self.prefix_index,
         )
-        self.metrics = EngineMetrics()
         self.cohorts: list[Cohort] = []
         self.results: dict[int, RequestState] = {}
-        self._axes = model.cache_axes()
         if mesh is not None:
             # weights on the model axis; the POLICY picks the dim set —
             # reduction-free under bitwise exactness, psum-TP attention/MLP
@@ -239,6 +287,29 @@ class Engine:
                     )
                 )
             )
+        self._spike_pool = None
+        if self.paged:
+            # paged model wrappers: gather page tables -> dense view ->
+            # unchanged model fn -> scatter written pages (serve/paging.py).
+            # Pools are donated so the scatter updates them in place.
+            self._paged_prefill = self._engine_scope(jax.jit(
+                self._page_layout.make_prefill(
+                    model, max_len, self.mesh, self._axes
+                ),
+                donate_argnums=(2,),
+            ))
+            self._paged_decode = self._engine_scope(jax.jit(
+                self._page_layout.make_decode(model, self.mesh, self._axes),
+                donate_argnums=(2,),
+            ))
+            if self.spiking_packed:
+                from .paging import SpikeSlotPool
+
+                self._spike_pool = SpikeSlotPool(
+                    self.cfg.d_model,
+                    (page_pool_rows if page_pool_rows is not None
+                     else 2 * max_slots + 4),
+                )
         self.executor = make_executor(self, policy, depth=pipeline_depth)
 
     @staticmethod
@@ -300,8 +371,10 @@ class Engine:
         return scoped
 
     # -- request API --------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> Request:
-        """Admit one request (raises AdmissionError when rejected)."""
+    def submit(self, prompt, max_new_tokens: int) -> AdmissionTicket:
+        """Queue one request; returns its `AdmissionTicket` (outcome,
+        prefix-hit info).  Raises `AdmissionError` (carrying a rejected
+        ticket) when the request cannot be accepted."""
         return self.scheduler.submit(prompt, max_new_tokens)
 
     @property
@@ -352,12 +425,152 @@ class Engine:
         )
         return np.asarray(self._encode_pack(self.params, toks))
 
+    def new_spike_cache(self):
+        """Per-cohort packed-spike store matching the cache backend."""
+        if self._spike_pool is not None:
+            from .paging import PagedSpikeCache
+
+            return PagedSpikeCache(
+                self.cfg.spiking_T, self.cfg.d_model, self._spike_pool
+            )
+        return PackedSpikeCache(self.cfg.spiking_T, self.cfg.d_model)
+
     def _live_cache(self, cohort: Cohort):
         if cohort.n_dummy == 0:
             return cohort.cache
         idx = list(range(len(cohort.slots)))
         cohort.n_dummy = 0
-        return cache_take(cohort.cache, self._axes, idx)
+        return self.cache_ops.take(cohort.cache, idx)
+
+    # -- model dispatch (cache-backend aware) -------------------------------
+    def dispatch_prefill(self, tokens: np.ndarray):
+        """Run one batched prefill over host tokens (B, P); returns
+        (device logits, cohort cache) — a dense pytree or a `PagedCache`
+        whose freshly allocated pages the prefill scattered in full."""
+        if not self.paged:
+            cache = self.model.init_cache(tokens.shape[0], self.max_len)
+            tokens_dev = jnp.asarray(tokens)
+            if self.mesh is not None:
+                from .sharding import place_cache, place_tokens
+
+                cache = place_cache(cache, self._axes, self.mesh)
+                tokens_dev = place_tokens(tokens_dev, self.mesh)
+            return self._prefill(
+                self.params, {"tokens": tokens_dev}, cache
+            )
+        from .paging import PagedCache
+
+        seq_t, state_t = self.store.alloc_rows(tokens.shape[0])
+        tokens_dev = jnp.asarray(tokens)
+        if self.mesh is not None:
+            from .sharding import place_tokens
+
+            tokens_dev = place_tokens(tokens_dev, self.mesh)
+        seq_dev, state_dev = self._tables_dev(seq_t, state_t)
+        logits, pools, locals_ = self._paged_prefill(
+            self.params, tokens_dev, self.store.pools, seq_dev, state_dev
+        )
+        self.store.pools = pools
+        return logits, PagedCache(self.store, seq_t, state_t, locals_)
+
+    def dispatch_decode(self, tokens, cache):
+        """One decode step for a cohort; returns (device logits, cache').
+        Owns mesh placement in both backends, so the executor never
+        branches on the cache layout."""
+        if not self.paged:
+            if self.mesh is not None:
+                # re-normalize placement: merge/retire build caches with
+                # eager concat/gather whose output layout is ad hoc; one
+                # canonical sharding per cache shape keeps the jit warm
+                from .sharding import place_cache, place_tokens
+
+                cache = place_cache(cache, self._axes, self.mesh)
+                tokens = place_tokens(tokens, self.mesh)
+            return self._decode(self.params, tokens, cache)
+        if self.mesh is not None:
+            from .sharding import place_tokens
+
+            tokens = place_tokens(tokens, self.mesh)
+        seq_dev, state_dev = self._tables_dev(
+            cache.seq_table, cache.state_table
+        )
+        logits, pools, locals_ = self._paged_decode(
+            self.params, tokens, self.store.pools, seq_dev, state_dev,
+            cache.locals,
+        )
+        self.store.pools = pools
+        cache.locals = locals_
+        return logits, cache
+
+    def _tables_dev(self, seq_t: np.ndarray, state_t: np.ndarray):
+        if self.mesh is not None:
+            from .sharding import place_replicated
+
+            return (place_replicated(seq_t, self.mesh),
+                    place_replicated(state_t, self.mesh))
+        return jnp.asarray(seq_t), jnp.asarray(state_t)
+
+    # -- prefix reuse -------------------------------------------------------
+    def publish_prefix(self, cohort: Cohort) -> None:
+        """Publish each just-prefilled row's full prompt into the radix
+        index (before any decode writes the row's tail page — the index
+        snapshots that page plus the state page and position locals)."""
+        if self.prefix_index is None:
+            return
+        cache = cohort.cache
+        locals_np = [np.asarray(x) for x in cache.locals]
+        for i, st in enumerate(cohort.slots):
+            if st.request.prompt_len != cohort.length:
+                continue  # bucket-padded row: cache holds pad-token state
+            self.prefix_index.publish(
+                st.request.prompt,
+                cache.seq_table[i],
+                int(cache.state_table[i]),
+                locals_np,
+                st.generated[0],
+            )
+
+    def admit_prefix_hits(self, group: list) -> None:
+        """Admit one same-length prefix-hit group [(Request, PrefixEntry)]
+        as a cohort with the shared pages materialized: no prefill runs;
+        each request's first token is the entry's cached greedy token."""
+        from .paging import PagedCache
+
+        P = group[0][0].prompt_len
+        rows = [self.prefix_index.admit(entry) for _, entry in group]
+        seq_t = np.stack([r for r, _ in rows])
+        state_t = np.concatenate([s for _, s in rows])
+        n_dummy = (-len(group)) % max(1, self.batch_align)
+        if n_dummy:
+            dseq, dstate = self.store.alloc_rows_zeroed(n_dummy)
+            seq_t = np.concatenate([seq_t, dseq], axis=0)
+            state_t = np.concatenate([state_t, dstate], axis=0)
+            self.metrics.n_padded_rows += n_dummy
+        entry0 = group[0][1]
+        cache = PagedCache(
+            self.store, seq_t, state_t,
+            [jnp.asarray(x) for x in entry0.locals_np],
+        )
+        slots = [RequestState(req) for req, _ in group]
+        for st, (_, entry) in zip(slots, group):
+            st.emit(int(entry.first_token), self.eos_id)
+        cohort = self.new_cohort(
+            slots=slots, cache=cache, length=P, n_dummy=n_dummy
+        )
+        if self.spiking_packed:
+            cohort.spikes = self.new_spike_cache()
+            cohort.spikes.append(self._slot_spikes(cohort))
+        self.cohorts.append(cohort)
+        self.metrics.n_prefix_hits += len(group)
+        self.metrics.n_prefix_tokens_reused += P * len(group)
+
+    def release_cohort(self, cohort: Cohort) -> None:
+        """Return a fully-retired cohort's backing storage to the pools
+        (dense cohorts are garbage-collected with their arrays)."""
+        if self.paged and cohort.cache is not None:
+            cohort.cache.release()
+        if self.paged and cohort.spikes is not None:
+            cohort.spikes.take([])
 
     def drain_logit_traces(self) -> list[list[np.ndarray]]:
         """Per-request logit traces in rid order, CLEARING the store.
@@ -426,6 +639,11 @@ class Engine:
         s["exactness"] = self.policy.exactness.mode
         s["execution"] = self.policy.execution
         s["token_identical"] = self.policy.token_identical
+        s["paging"] = self.policy.paging.describe()
+        if self.paged:
+            s["page_pool"] = self.store.summary()
+            if self.prefix_index is not None:
+                s["prefix_index"] = self.prefix_index.summary()
         if not self.policy.token_identical:
             s["drift_tol"] = self.policy.exactness.tol
         if self.spiking_packed:

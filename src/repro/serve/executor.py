@@ -65,14 +65,7 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 import numpy as np
 
-from .batching import (
-    PackedSpikeCache,
-    bucket_key,
-    cache_concat,
-    cache_pad_rows,
-    cache_take,
-    pad_batch,
-)
+from .batching import bucket_key, pad_batch
 from .scheduler import Request, RequestState, rebalance_pad
 
 
@@ -131,7 +124,14 @@ class SyncExecutor:
         t0 = time.perf_counter()
         e.metrics.queue_depth_samples.append(e.scheduler.queue_depth)
         with self._clock("admit"):
+            # prefix hits first: they are prefill-free admissions, so they
+            # use free slots at page-table cost before any prefill batch
+            hit_groups = (e.scheduler.schedule_prefix_hits()
+                          if e.prefix_index is not None else [])
             groups = e.scheduler.schedule()
+        for group in hit_groups:
+            with self._clock("admit_hits"):
+                e.admit_prefix_hits(group)
         for group in groups:
             self.prefill(group)
         with self._clock("merge"):
@@ -167,14 +167,7 @@ class SyncExecutor:
                 tokens[i, : r.prompt_len] = r.prompt
             tokens, n_dummy = pad_batch(tokens, e.batch_align)
             e.metrics.n_padded_rows += n_dummy
-            cache = e.model.init_cache(tokens.shape[0], e.max_len)
-            tokens_dev = jnp.asarray(tokens)
-            if e.mesh is not None:
-                from .sharding import place_cache, place_tokens
-
-                cache = place_cache(cache, e._axes, e.mesh)
-                tokens_dev = place_tokens(tokens_dev, e.mesh)
-            logits, cache = e._prefill(e.params, {"tokens": tokens_dev}, cache)
+            logits, cache = e.dispatch_prefill(tokens)
             e.metrics.n_prefill_batches += 1
             first_dev = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
             first = np.asarray(first_dev)
@@ -187,11 +180,12 @@ class SyncExecutor:
             )
             cohort.next_tokens = first_dev  # device feedback for pipelining
             if e.spiking_packed:
-                cohort.spikes = PackedSpikeCache(
-                    e.cfg.spiking_T, e.cfg.d_model
-                )
+                cohort.spikes = e.new_spike_cache()
                 cohort.spikes.append(e._slot_spikes(cohort))
             e.cohorts.append(cohort)
+            # publish prompts into the radix index NOW, before any decode
+            # writes the rows' tail pages (no-op without a prefix index)
+            e.publish_prefix(cohort)
 
     def merge(self) -> None:
         """Merge cohorts at the same sequence position (continuous
@@ -211,7 +205,7 @@ class SyncExecutor:
             for c in group:
                 self.flush(c)  # host state authoritative before re-batching
             caches = [e._live_cache(c) for c in group]
-            cache = cache_concat(caches, e._axes)
+            cache = e.cache_ops.concat(caches)
             slots = [s for c in group for s in c.slots]
             cohort = e.new_cohort(slots=slots, cache=cache, length=length)
             if e.spiking_packed:
@@ -246,15 +240,7 @@ class SyncExecutor:
             last = [st.generated[-1] for st in cohort.slots]
             last += [0] * cohort.n_dummy
             tokens = jnp.asarray(last, jnp.int32)[:, None]
-        if e.mesh is not None:
-            # re-normalize placement: merge/retire build caches with eager
-            # concat/gather whose output layout is ad hoc; one canonical
-            # sharding per cache shape keeps the decode jit cache warm
-            from .sharding import place_cache, place_tokens
-
-            cohort.cache = place_cache(cohort.cache, e._axes, e.mesh)
-            tokens = place_tokens(tokens, e.mesh)
-        logits, cohort.cache = e._decode(e.params, tokens, cohort.cache)
+        logits, cohort.cache = e.dispatch_decode(tokens, cohort.cache)
         e.metrics.n_decode_batches += 1
         e.metrics.n_decode_rows += len(cohort.slots)
         cohort.next_tokens = jnp.argmax(
@@ -291,8 +277,9 @@ class SyncExecutor:
             e.scheduler.release(len(done))
             alive_idx = [i for i, st in enumerate(cohort.slots) if not st.done]
             if not alive_idx:
+                e.release_cohort(cohort)  # paged: pages back to the pool
                 continue
-            cohort.cache = cache_take(cohort.cache, e._axes, alive_idx)
+            cohort.cache = e.cache_ops.take(cohort.cache, alive_idx)
             cohort.slots = [cohort.slots[i] for i in alive_idx]
             cohort.n_dummy = 0
             cohort.next_tokens = None  # membership changed: host rebuilds
@@ -431,7 +418,7 @@ class PipelinedExecutor(SyncExecutor):
         pad = rebalance_pad(len(cohort.slots), dn)
         if pad == 0:
             return
-        cohort.cache = cache_pad_rows(cohort.cache, e._axes, pad)
+        cohort.cache = e.cache_ops.pad_rows(cohort.cache, pad)
         cohort.n_dummy = pad
         e.metrics.n_rebalances += 1
         e.metrics.n_padded_rows += pad

@@ -44,6 +44,13 @@ class EngineMetrics:
     n_merges: int = 0
     n_padded_rows: int = 0        # dummy rows added for batch alignment
     n_rebalances: int = 0         # mesh cohorts re-packed on load skew
+    # paging='paged' counters.  n_page_moves counts page-granular COPIES
+    # (prefix publish snapshots + copy-on-write at the divergence page);
+    # cohort merge/retire/rebalance are page-table edits and must add 0 —
+    # the invariant the paging tests assert.
+    n_page_moves: int = 0
+    n_prefix_hits: int = 0        # requests admitted from the radix index
+    n_prefix_tokens_reused: int = 0   # prompt tokens whose prefill was skipped
     queue_depth_samples: list[int] = field(default_factory=list)
     wall_s: float = 0.0
     # Per-stage wall time, filled by the step executor (serve/executor.py):
@@ -89,6 +96,9 @@ class EngineMetrics:
             "cohort_merges": self.n_merges,
             "padded_rows": self.n_padded_rows,
             "rebalances": self.n_rebalances,
+            "page_moves": self.n_page_moves,
+            "prefix_hits": self.n_prefix_hits,
+            "prefix_tokens_reused": self.n_prefix_tokens_reused,
             "max_queue_depth": max(self.queue_depth_samples, default=0),
             "stage_s": {k: self.stage_s[k] for k in sorted(self.stage_s)},
         }

@@ -58,6 +58,7 @@ SPIKE_FORMATS = ("float", "packed")
 WEIGHT_SPARSITIES = ("dense", "dual_sparse")
 EXACTNESS_MODES = ("bitwise", "approximate")
 EXECUTION_MODES = ("sync", "pipelined")
+PAGING_MODES = ("none", "paged")
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +151,49 @@ class Placement:
         return "x".join(f"{k}={v}" for k, v in self.mesh.shape.items())
 
 
+@register_static
+@dataclass(frozen=True)
+class Paging:
+    """How cohort caches are stored: ``"none"`` (dense per-cohort pytrees,
+    merged/gathered by whole-cache concat/take — the pre-paging layout) or
+    ``"paged"`` (KV + packed-spike state lives in fixed MXU-aligned pages
+    owned by a `serve.paging.CacheStore`; cohorts hold page tables, so
+    merge/retire/rebalance are page-table edits and shared prompt prefixes
+    are ref-counted pages instead of re-prefilled rows).
+
+    ``page_size`` is the sequence-positions-per-page granule; it must be a
+    positive multiple of 8 (MXU sublane alignment) and must divide every
+    cache sequence extent the engine serves (checked at engine
+    construction, where the extents are known).
+    """
+
+    mode: str = "none"
+    page_size: int = 8
+
+    def __post_init__(self):
+        if self.mode not in PAGING_MODES:
+            raise ValueError(f"paging mode {self.mode!r} not in {PAGING_MODES}")
+        if self.page_size < 8 or self.page_size % 8:
+            raise ValueError(
+                "paging.page_size must be a positive multiple of 8 (MXU "
+                f"sublane alignment), got {self.page_size}"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode == "paged"
+
+    def describe(self) -> str:
+        if self.mode == "none":
+            return "none"
+        return f"paged(page_size={self.page_size})"
+
+
+def paged(page_size: int = 8) -> Paging:
+    """Paged cache storage (see `serve.paging`)."""
+    return Paging("paged", page_size)
+
+
 # ---------------------------------------------------------------------------
 # the policy
 # ---------------------------------------------------------------------------
@@ -170,6 +214,7 @@ class ExecutionPolicy:
     placement: Placement = field(default_factory=Placement)
     exactness: Exactness = field(default_factory=bitwise)
     execution: str = "sync"
+    paging: Paging = field(default_factory=Paging)
 
     def __post_init__(self):
         if self.execution not in EXECUTION_MODES:
@@ -235,7 +280,8 @@ class ExecutionPolicy:
         return (f"spike_format={self.spike_format!r}, "
                 f"weight_sparsity={self.weight_sparsity!r}, "
                 f"placement={self.placement.describe()}, exactness={ex}, "
-                f"execution={self.execution!r}")
+                f"execution={self.execution!r}, "
+                f"paging={self.paging.describe()}")
 
     # -- arch-aware validation / construction -------------------------------
     def validate_for(self, cfg) -> "ExecutionPolicy":
@@ -262,10 +308,12 @@ class ExecutionPolicy:
                  weight_sparsity: str | None = None,
                  placement: Placement | None = None,
                  exactness: Exactness | None = None,
-                 execution: str | None = None) -> "ExecutionPolicy":
+                 execution: str | None = None,
+                 paging: Paging | None = None) -> "ExecutionPolicy":
         """Arch-aware constructor with ``None`` = the natural default:
         packed spikes for spiking archs, dual-sparse when weights are
-        pruned, single-device bitwise placement, sync execution."""
+        pruned, single-device bitwise placement, sync execution, dense
+        (non-paged) cache storage."""
         if spike_format is None:
             spike_format = "packed" if cfg.spiking_ffn else "float"
         if weight_sparsity is None:
@@ -280,6 +328,7 @@ class ExecutionPolicy:
             placement=placement if placement is not None else Placement(),
             exactness=exactness if exactness is not None else bitwise(),
             execution=execution if execution is not None else "sync",
+            paging=paging if paging is not None else Paging(),
         )
         return pol.validate_for(cfg)
 

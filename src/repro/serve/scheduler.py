@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import itertools
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 
@@ -93,11 +94,72 @@ def rebalance_pad(n_rows: int, data_axis: int) -> int:
 
 
 class AdmissionError(RuntimeError):
-    """Request rejected at submit time (queue full / cannot ever fit)."""
+    """Request rejected at submit time (queue full / cannot ever fit).
+
+    Carries the rejection's `AdmissionTicket` as ``.ticket``.
+    """
+
+    def __init__(self, msg: str, ticket: "AdmissionTicket | None" = None):
+        super().__init__(msg)
+        self.ticket = ticket if ticket is not None else AdmissionTicket(
+            request=None, outcome="rejected", reason=msg
+        )
+
+
+_TICKET_SHIM_ATTRS = ("prompt", "prompt_len", "max_new_tokens", "submit_time")
+
+
+@dataclass
+class AdmissionTicket:
+    """Structured admission outcome returned by `Scheduler.submit`.
+
+    ``outcome`` follows the request lifecycle: ``"queued"`` at submit,
+    flipped to ``"admitted"`` when the scheduler hands the request to a
+    prefill group or a prefix-hit cohort; ``"rejected"`` tickets ride on
+    the `AdmissionError`.  ``prefix_hit`` is sticky — it records that the
+    prompt matched a published prefix at submit time and the request will
+    skip prefill for its ``reused_tokens`` shared tokens.
+
+    The pre-ticket `submit` return shape (a bare `Request`) is shimmed:
+    ``rid`` is first-class, while ``prompt``/``prompt_len``/
+    ``max_new_tokens``/``submit_time`` delegate to ``.request`` under a
+    DeprecationWarning.
+    """
+
+    request: Request | None
+    outcome: str = "queued"        # queued | admitted | rejected
+    prefix_hit: bool = False
+    reused_tokens: int = 0
+    reason: str | None = None      # rejection reason
+
+    @property
+    def rid(self) -> int | None:
+        return None if self.request is None else self.request.rid
+
+    def __getattr__(self, name: str):
+        if name in _TICKET_SHIM_ATTRS:
+            warnings.warn(
+                f"AdmissionTicket.{name} is a deprecated Request shim; "
+                f"use ticket.request.{name}",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if self.request is None:
+                raise AttributeError(f"rejected ticket has no request.{name}")
+            return getattr(self.request, name)
+        raise AttributeError(name)
 
 
 class Scheduler:
-    """FIFO waiting queue with bucketed prefill-batch selection."""
+    """FIFO waiting queue with bucketed prefill-batch selection.
+
+    With a `RadixPrefixIndex` attached, `submit` additionally looks the
+    prompt up in the index; exact full-prompt hits queue in a separate
+    lane (`next_prefix_hits`) that admits them into cohorts with the
+    shared pages materialized instead of running a prefill.  Matched
+    entries are pinned until admission so eviction can never invalidate a
+    queued hit.
+    """
 
     def __init__(
         self,
@@ -106,6 +168,7 @@ class Scheduler:
         max_queue: int,
         max_len: int,
         bucket_align: int = 1,
+        prefix_index=None,
     ):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
@@ -113,32 +176,52 @@ class Scheduler:
         self.max_queue = max_queue
         self.max_len = max_len
         self.bucket_align = bucket_align
+        self.prefix_index = prefix_index
         self.waiting: deque[Request] = deque()
+        self.hit_waiting: deque[tuple[Request, object]] = deque()
         self.active_slots = 0
         self._ids = itertools.count()
+        self._tickets: dict[int, AdmissionTicket] = {}
         self.n_rejected = 0
 
     # -- admission ----------------------------------------------------------
-    def submit(self, prompt, max_new_tokens: int) -> Request:
+    def _reject(self, msg: str) -> AdmissionError:
+        self.n_rejected += 1
+        return AdmissionError(msg)
+
+    def submit(self, prompt, max_new_tokens: int) -> AdmissionTicket:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] < 1 or max_new_tokens < 1:
-            raise AdmissionError("empty prompt or non-positive max_new_tokens")
+            raise self._reject("empty prompt or non-positive max_new_tokens")
         need = bucket_key(prompt.shape[0], self.bucket_align) + max_new_tokens
         if need > self.max_len:
-            self.n_rejected += 1
-            raise AdmissionError(
+            raise self._reject(
                 f"request needs {need} cache slots > engine max_len {self.max_len}"
             )
-        if len(self.waiting) >= self.max_queue:
-            self.n_rejected += 1
-            raise AdmissionError(f"queue full ({self.max_queue} waiting)")
+        if len(self.waiting) + len(self.hit_waiting) >= self.max_queue:
+            raise self._reject(f"queue full ({self.max_queue} waiting)")
         req = Request(next(self._ids), prompt, max_new_tokens)
-        self.waiting.append(req)
-        return req
+        ticket = AdmissionTicket(request=req)
+        entry = (self.prefix_index.lookup(prompt)
+                 if self.prefix_index is not None else None)
+        if entry is not None:
+            entry.pins += 1
+            ticket.prefix_hit = True
+            ticket.reused_tokens = entry.prompt_len
+            self.hit_waiting.append((req, entry))
+        else:
+            self.waiting.append(req)
+        self._tickets[req.rid] = ticket
+        return ticket
+
+    def _mark_admitted(self, rid: int) -> None:
+        t = self._tickets.pop(rid, None)
+        if t is not None:
+            t.outcome = "admitted"
 
     @property
     def queue_depth(self) -> int:
-        return len(self.waiting)
+        return len(self.waiting) + len(self.hit_waiting)
 
     @property
     def free_slots(self) -> int:
@@ -170,7 +253,42 @@ class Scheduler:
                 kept.append(req)
         self.waiting = kept
         self.active_slots += len(group)
+        for req in group:
+            self._mark_admitted(req.rid)
         return group
+
+    # -- prefix-hit selection -----------------------------------------------
+    def next_prefix_hits(self) -> list[tuple[Request, object]]:
+        """Pop the next prefix-hit admission group: hits whose prompts have
+        the same length (they join one cohort at sequence position
+        ``prompt_len``), FIFO order led by the oldest hit, capped by free
+        slots.  Unpins the matched entries."""
+        if not self.hit_waiting or self.free_slots <= 0:
+            return []
+        lead_len = self.hit_waiting[0][0].prompt_len
+        group: list[tuple[Request, object]] = []
+        kept: deque = deque()
+        budget = self.free_slots
+        for req, entry in self.hit_waiting:
+            if len(group) < budget and req.prompt_len == lead_len:
+                group.append((req, entry))
+            else:
+                kept.append((req, entry))
+        self.hit_waiting = kept
+        self.active_slots += len(group)
+        for req, entry in group:
+            entry.pins -= 1
+            self._mark_admitted(req.rid)
+        return group
+
+    def schedule_prefix_hits(self) -> list[list[tuple[Request, object]]]:
+        """All prefix-hit groups runnable this step."""
+        groups = []
+        while True:
+            g = self.next_prefix_hits()
+            if not g:
+                return groups
+            groups.append(g)
 
     def schedule(self) -> list[list[Request]]:
         """All prefill groups runnable this step (distinct buckets until

@@ -246,3 +246,22 @@ def place_tokens(tokens, mesh: Mesh):
     if dn > 1 and tokens.shape[0] % dn == 0:
         spec[0] = "data"
     return jax.device_put(tokens, NamedSharding(mesh, P(*spec)))
+
+
+def place_pool(pool, mesh: Mesh):
+    """Place one `CacheStore` page pool: the leading page axis shards over
+    `data` when divisible (pages are whole-row fragments, so any page lives
+    entirely on one shard), otherwise the pool replicates.  Inside the jit
+    the gathered dense view is re-constrained to `cache_sharding` — pool
+    placement is pure storage layout and never changes values."""
+    dn = mesh.shape.get("data", 1)
+    spec = [None] * pool.ndim
+    if dn > 1 and pool.shape[0] % dn == 0:
+        spec[0] = "data"
+    return jax.device_put(pool, NamedSharding(mesh, P(*spec)))
+
+
+def place_replicated(x, mesh: Mesh):
+    """Fully replicate a host array on the mesh (page tables: every shard
+    needs every row's page ids to gather/scatter its slice)."""
+    return jax.device_put(x, _replicated(mesh, np.ndim(x)))

@@ -13,14 +13,13 @@ from repro.launch.serve import generate
 from repro.models.registry import build_model
 from repro.serve import (
     AdmissionError,
+    DenseCacheOps,
     Engine,
     ExecutionPolicy,
     PackedSpikeCache,
     Scheduler,
     bucket_key,
     cache_batch_size,
-    cache_concat,
-    cache_take,
     pad_batch,
 )
 
@@ -108,24 +107,48 @@ def test_bucket_key_alignment():
 @pytest.mark.parametrize("arch", ["llama3_2_1b", "rwkv6_1_6b", "zamba2_7b"])
 def test_cache_concat_take_roundtrip(arch):
     cfg, model, params = _model(arch)
-    axes = model.cache_axes()
+    ops = DenseCacheOps(model.cache_axes())
     a = model.init_cache(2, 16)
     b = model.init_cache(3, 16)
-    merged = cache_concat([a, b], axes)
-    assert cache_batch_size(merged, axes) == 5
-    back = cache_take(merged, axes, [0, 1])
+    merged = ops.concat([a, b])
+    assert ops.batch_size(merged) == 5
+    back = ops.take(merged, [0, 1])
     for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(back)):
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
 
 def test_cache_concat_refuses_mismatched_positions():
     cfg, model, params = _model("llama3_2_1b")
-    axes = model.cache_axes()
+    ops = DenseCacheOps(model.cache_axes())
     a = model.init_cache(2, 16)
     b = model.init_cache(2, 16)
     b = dict(b, pos=b["pos"] + 3)  # cohorts at different sequence positions
     with pytest.raises(ValueError):
-        cache_concat([a, b], axes)
+        ops.concat([a, b])
+
+
+def test_deprecated_cache_helpers_warn_and_delegate():
+    """The pre-CacheOps helper family still works but warns (tier-1 runs
+    -W error::DeprecationWarning, so internal callers must be migrated)."""
+    from repro.serve import cache_concat, cache_pad_rows, cache_take
+    from repro.serve.batching import batch_axis_tree
+
+    cfg, model, params = _model("llama3_2_1b")
+    axes = model.cache_axes()
+    a = model.init_cache(2, 16)
+    ops = DenseCacheOps(axes)
+    with pytest.warns(DeprecationWarning, match="cache_concat"):
+        merged = cache_concat([a, model.init_cache(1, 16)], axes)
+    assert cache_batch_size(merged, axes) == 3
+    with pytest.warns(DeprecationWarning, match="cache_take"):
+        back = cache_take(merged, axes, [0, 1])
+    for la, lb in zip(jax.tree.leaves(back), jax.tree.leaves(ops.take(merged, [0, 1]))):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    with pytest.warns(DeprecationWarning, match="cache_pad_rows"):
+        padded = cache_pad_rows(a, axes, 2)
+    assert cache_batch_size(padded, axes) == 4
+    with pytest.warns(DeprecationWarning, match="batch_axis_tree"):
+        batch_axis_tree(a, axes)
 
 
 def test_pad_batch():

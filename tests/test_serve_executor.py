@@ -17,12 +17,12 @@ from repro.configs import get_config, smoke_variant
 from repro.launch.serve import generate
 from repro.models.registry import build_model
 from repro.serve import (
+    DenseCacheOps,
     Engine,
     ExecutionPolicy,
     PipelinedExecutor,
     Placement,
     SyncExecutor,
-    cache_pad_rows,
     make_serve_mesh,
     rebalance_pad,
 )
@@ -94,8 +94,9 @@ def test_rebalance_pad_policy():
 def test_cache_pad_rows_appends_zero_rows():
     cfg, model, params = _model()
     axes = model.cache_axes()
+    ops = DenseCacheOps(axes)
     cache = model.init_cache(3, 16)
-    padded = cache_pad_rows(cache, axes, 2)
+    padded = ops.pad_rows(cache, 2)
     from repro.serve import cache_batch_size
 
     assert cache_batch_size(padded, axes) == 5
@@ -108,7 +109,7 @@ def test_cache_pad_rows_appends_zero_rows():
     np.testing.assert_array_equal(
         np.asarray(padded["kv_pos"]), np.asarray(cache["kv_pos"])
     )
-    assert cache_pad_rows(cache, axes, 0) is cache
+    assert ops.pad_rows(cache, 0) is cache
 
 
 def test_dispatch_pipelined_refuses_per_call_plan_building():
