@@ -1,0 +1,22 @@
+"""Backend honesty stamp shared by the bench writers.
+
+Every BENCH_*.json body carries the same three fields so a row produced on
+the CPU container (interpret-mode Pallas, fake XLA devices) can never be
+mistaken for a hardware number when reports are compared across machines.
+"""
+import jax
+
+
+def backend_info() -> dict:
+    """{"backend", "interpret_mode", "jax_version"} for the current process.
+
+    ``interpret_mode`` mirrors the kernels' own dispatch rule
+    (`ops._on_tpu`): off-TPU, every pallas_call runs the interpreter, so
+    wall-times are schedule-comparison signals, not hardware claims.
+    """
+    backend = jax.default_backend()
+    return {
+        "backend": backend,
+        "interpret_mode": backend != "tpu",
+        "jax_version": jax.__version__,
+    }

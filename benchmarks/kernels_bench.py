@@ -26,10 +26,20 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ftp_spmspm, pack_spikes, sequential_spmspm
+from repro.core.packing import mask_low_activity_timesteps
 from repro.core.snn_layers import prune_by_magnitude
 from repro.kernels import ops, ref
 from repro.kernels.join_plan import build_weight_plan
-from repro.serve.policy import PACKED_DENSE, PACKED_DUAL
+from repro.serve.policy import (
+    PACKED_DENSE,
+    PACKED_DUAL,
+    PACKED_DUAL_ADAPTIVE,
+    ExecutionPolicy,
+    adaptive_t,
+    approximate,
+)
+
+from benchmarks._backend import backend_info
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -97,7 +107,7 @@ def dual_sparse_bench(smoke: bool = False) -> dict:
 
     nkb, nnb = plan.nkb, plan.nnb
     return {
-        "backend": jax.default_backend(),
+        **backend_info(),
         "smoke": smoke,
         "shape": {"T": T, "M": M, "K": K, "N": N},
         "weight_density": w_density,
@@ -111,6 +121,95 @@ def dual_sparse_bench(smoke: bool = False) -> dict:
         "parity": parity,
         "note": "wall-times are XLA:CPU interpret-mode schedule signals; "
                 "block-structured LTH pruning (MXU-tile granularity)",
+    }
+
+
+def adaptive_t_bench(smoke: bool = False) -> dict:
+    """Adaptive temporal sparsity vs the full temporal walk on a bursty
+    spike trace — the `bench_adaptive_t` row.
+
+    The trace leaves 75 % of the timestep planes all-silent (direct-encoded
+    SNN activity is front-silent: membranes take several steps to charge
+    past v_th), comfortably past the >= 25 % burstiness this row targets.
+    Gates: exact parity at min_spikes=1 (vs the full kernel AND the jnp
+    oracle), min_spikes=2 equal to the full kernel on the masked input (the
+    lossy semantics are exactly "drop the scored planes"), and zero retrace
+    across requests with different silent sets.
+    """
+    T = 16
+    M, K, N = (64, 512, 256) if smoke else (128, 2304, 512)
+    n_silent = 12  # 75 % of planes silent
+    # ELEMENT-wise LTH pruning here, deliberately: block-structured pruning
+    # would let the WEIGHT join skip most k-blocks and leave the temporal
+    # axis nothing to save.  This row measures the temporal skip at fixed
+    # weight-join work (every block survives the join), i.e. the axis it
+    # adds is orthogonal to the one dual_sparse_bench measures.
+    w_density = 0.03
+    rng = np.random.default_rng(0)
+    spikes = (rng.random((T, M, K)) < 0.15).astype(np.float32)
+    spikes[:n_silent] = 0.0  # front-silence, as under direct encoding
+    packed = np.asarray(pack_spikes(jnp.asarray(spikes)))
+    w = rng.normal(size=(K, N)).astype(np.float32)
+    w = np.asarray(prune_by_magnitude(jnp.asarray(w), w_density))
+    # 256-wide blocks: fewer, larger grid steps so the per-plane dots (the
+    # work the temporal axis removes) dominate the per-step fixed cost —
+    # at 128-wide blocks the interpret-mode step overhead flattens the
+    # measured speedup even though the skipped FLOPs are identical
+    bk, bn = min(256, K), min(256, N)
+    plan = build_weight_plan(w, bk=bk, bn=bn)
+    a = jnp.asarray(packed)
+
+    f_full = lambda x: ops.dispatch(x, plan, PACKED_DUAL, T, n_out=N,
+                                    fuse_lif=True)[0]
+    f_adaptive = lambda x: ops.dispatch(x, plan, PACKED_DUAL_ADAPTIVE, T,
+                                        n_out=N, fuse_lif=True)[0]
+
+    # parity gates first (the speedup is only meaningful if exact)
+    c_full, c_ad = np.asarray(f_full(a)), np.asarray(f_adaptive(a))
+    c_ref = np.asarray(ref.ftp_spmm_fused_lif_ref(a, jnp.asarray(w), T)[0])
+    # lossy contract: min_spikes=2 == full kernel on the masked operand
+    lossy_pol = ExecutionPolicy(
+        spike_format="packed", weight_sparsity="dual_sparse",
+        temporal=adaptive_t(2), exactness=approximate(8.0),
+    )
+    c_lossy = np.asarray(ops.dispatch(a, plan, lossy_pol, T, n_out=N,
+                                      fuse_lif=True)[0])
+    a_masked = mask_low_activity_timesteps(a, T, 2)
+    c_masked_ref = np.asarray(f_full(a_masked))
+    parity = {
+        "full_vs_oracle_exact": bool((c_full == c_ref).all()),
+        "adaptive_vs_full_exact": bool((c_ad == c_full).all()),
+        "lossy_equals_full_on_masked_input": bool(
+            (c_lossy == c_masked_ref).all()
+        ),
+    }
+
+    t_full = _time(f_full, a, reps=2)
+    t_adaptive = _time(f_adaptive, a, reps=2)
+
+    # zero retrace across requests with DIFFERENT silent-plane sets
+    before = ops.BSR_TRACE_COUNT
+    for seed in (1, 2):
+        r = np.random.default_rng(seed)
+        s2 = (r.random((T, M, K)) < 0.1).astype(np.float32)
+        s2[r.choice(T, size=int(r.integers(2, 8)), replace=False)] = 0.0
+        jax.block_until_ready(
+            f_adaptive(jnp.asarray(np.asarray(pack_spikes(jnp.asarray(s2)))))
+        )
+    parity["no_retrace_on_new_activity"] = ops.BSR_TRACE_COUNT == before
+
+    return {
+        **backend_info(),
+        "smoke": smoke,
+        "shape": {"T": T, "M": M, "K": K, "N": N},
+        "weight_density": w_density,
+        "silent_timestep_fraction": n_silent / T,
+        "full_us": t_full,
+        "adaptive_us": t_adaptive,
+        "adaptive_speedup": t_full / t_adaptive,
+        "parity": parity,
+        "note": "bursty trace (front-silent planes, direct-encode shaped); "
+                "wall-times are XLA:CPU interpret-mode schedule signals",
     }
 
 
@@ -165,6 +264,14 @@ def rows():
                 f"speedup={d['dual_sparse_speedup']:.2f}x "
                 f"jmax={d['join_width_jmax']} vs nk={d['dense_k_blocks']} "
                 f"parity_ok={all(d['parity'].values())} (XLA:CPU)"))
+
+    # adaptive temporal sparsity (third axis) vs the full temporal walk
+    at = adaptive_t_bench(smoke=True)
+    out.append(("kernels/adaptive_t_vs_full", at["adaptive_us"],
+                f"full_us={at['full_us']:.0f} "
+                f"speedup={at['adaptive_speedup']:.2f}x "
+                f"silent={at['silent_timestep_fraction']:.0%} "
+                f"parity_ok={all(at['parity'].values())} (XLA:CPU)"))
     return out
 
 
@@ -179,18 +286,27 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     report = dual_sparse_bench(smoke=args.smoke)
+    report["bench_adaptive_t"] = adaptive_t_bench(smoke=args.smoke)
     print(json.dumps(report, indent=2))
     write = (not args.no_write) and (not args.smoke or args.write)
     if write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)
         print(f"wrote {OUT_PATH}")
-    if not all(report["parity"].values()):
-        print("PARITY FAILURE:", report["parity"], file=sys.stderr)
+    at = report["bench_adaptive_t"]
+    if not all(report["parity"].values()) or not all(at["parity"].values()):
+        print("PARITY FAILURE:", report["parity"], at["parity"],
+              file=sys.stderr)
         return 1
     print(f"dual-sparse {report['dual_sparse_speedup']:.2f}x vs dense "
           f"(jmax={report['join_width_jmax']} of {report['dense_k_blocks']} "
           f"k-blocks)")
+    print(f"adaptive-T {at['adaptive_speedup']:.2f}x vs full temporal walk "
+          f"({at['silent_timestep_fraction']:.0%} silent planes)")
+    if at["adaptive_speedup"] < 1.3:
+        print(f"ADAPTIVE-T SPEEDUP GATE FAILURE: "
+              f"{at['adaptive_speedup']:.2f}x < 1.3x", file=sys.stderr)
+        return 1
     return 0
 
 

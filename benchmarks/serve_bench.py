@@ -12,11 +12,15 @@ layers, over all T timesteps — the paper's FTP argument applied at the
 serving level).
 
 Extra rows (each an `ExecutionPolicy` variant): dual-sparse spiking
-(token-identical), sharded bitwise mesh serving (token-identical),
+(token-identical), sharded bitwise mesh serving (token-identical, with an
+``hlo_attribution`` sub-dict from `repro.roofline.hlo_stats` attributing
+the compiled decode's flops/bytes/collective traffic per placement),
 approximate-TP (``token_identical: false`` by contract, measured max logit
-drift vs. the bitwise reference recorded and bounded), and pipelined
+drift vs. the bitwise reference recorded and bounded), pipelined
 execution (token-identical, with per-stage timing for both executors so
-the sync path's per-step host wait — ``sample_sync`` — is attributable).
+the sync path's per-step host wait — ``sample_sync`` — is attributable),
+and adaptive temporal sparsity (token-identical at min_spikes=1, with the
+measured ``timesteps_skipped`` counter gated > 0).
 """
 import argparse
 import dataclasses
@@ -26,8 +30,52 @@ import os
 import jax
 import numpy as np
 
+from benchmarks._backend import backend_info
+
 OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                         "BENCH_serve.json")
+
+
+def _decode_hlo_attribution(engine, batch: int) -> dict:
+    """AOT-lower the engine's decode and attribute its compiled HLO
+    (`repro.roofline.hlo_stats`): flops, bytes, collective traffic.
+
+    This is where the sharded rows' overhead becomes attributable instead
+    of a bare wall-time delta: on fake CPU devices every "device" shares
+    one socket, so the only honest sharding signal is WHAT the compiled
+    module does (collective ops/bytes), not how long it takes.  The lower
+    runs under the engine's trace-time scope (packed-inference spiking
+    mode + serve mesh) so the analyzed module is the one the engine runs.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels import ops
+    from repro.models import layers as model_layers
+    from repro.roofline.hlo_stats import analyze
+
+    cache = engine.model.init_cache(batch, engine.max_len)
+    toks = jnp.zeros((batch, 1), jnp.int32)
+    if engine.mesh is not None:
+        from repro.serve.sharding import place_cache, place_tokens
+
+        cache = place_cache(cache, engine._axes, engine.mesh)
+        toks = place_tokens(toks, engine.mesh)
+    prev = model_layers.get_spiking_ffn_mode()
+    prev_mesh = ops.get_serve_mesh()
+    if engine.spiking_packed:
+        model_layers.set_spiking_ffn_mode("infer")
+    if engine.mesh is not None:
+        ops.set_serve_mesh(engine.mesh)
+    try:
+        hlo = (jax.jit(engine.model.decode)
+               .lower(engine.params, toks, cache).compile().as_text())
+    finally:
+        model_layers.set_spiking_ffn_mode(prev)
+        ops.set_serve_mesh(prev_mesh)
+    st = analyze(hlo).asdict()
+    keep = ("flops", "bytes_accessed", "collective_bytes",
+            "n_collective_ops", "collectives")
+    return {k: st[k] for k in keep if k in st}
 
 
 def bench_engine(arch: str, batches=(1, 2, 4, 8), prompt_len=32, gen=16):
@@ -163,6 +211,7 @@ def bench_sharded_serving(
         for _ in range(batch)
     ]
     tokens = {}
+    hlo_attr = {}
     try:
         for key, m in (("single_device", None), ("sharded", mesh)):
             engine = Engine(
@@ -174,12 +223,81 @@ def bench_sharded_serving(
             engine.metrics = EngineMetrics()
             tokens[key] = engine.generate_batch(prompts, gen)
             out[f"{key}_tok_s"] = engine.summary()["throughput_tok_s"]
+            hlo_attr[key] = _decode_hlo_attribution(engine, batch)
     finally:
         model_layers.set_spiking_ffn_mode("train")
+    out["hlo_attribution"] = hlo_attr
     out["token_identical"] = all(
         np.array_equal(a, b)
         for a, b in zip(tokens["single_device"], tokens["sharded"])
     )
+    return out
+
+
+def bench_adaptive_temporal(
+    weight_density=0.3, batch=4, prompt_len=16, gen=8, spiking_T=8
+) -> dict:
+    """Adaptive-T serving row: the dual-sparse spiking engine with
+    ``temporal=adaptive(min_spikes=1)`` vs the same engine at
+    ``temporal='full'``.
+
+    The gates this row doubles as: ``token_identical: true`` (min_spikes=1
+    only ever skips all-silent planes — provably bitwise) and
+    ``timesteps_skipped > 0`` (the scorer actually fires on the engine's
+    direct-encoded traffic, which is front-silent: membranes take several
+    of the T steps to charge past v_th).  `SystemExit` on either failure.
+    """
+    from repro.configs import get_config, smoke_variant
+    from repro.models import layers as model_layers
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ExecutionPolicy, adaptive_t
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg, spiking_ffn=True, spiking_T=spiking_T,
+        spiking_weight_density=weight_density,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    out = {"arch": "llama3_2_1b+spiking_ffn", "spiking_T": spiking_T,
+           "weight_density": weight_density, "batch": batch,
+           "prompt_len": prompt_len, "gen": gen, "min_spikes": 1}
+    tokens = {}
+    try:
+        for key, temporal in (("full", None), ("adaptive", adaptive_t())):
+            engine = Engine(
+                model, params, max_len=prompt_len + gen, max_slots=batch,
+                policy=ExecutionPolicy.for_arch(cfg, temporal=temporal),
+            )
+            engine.generate_batch(prompts, gen)   # warm-up: jit compiles
+            engine.metrics = EngineMetrics()
+            tokens[key] = engine.generate_batch(prompts, gen)
+            s = engine.summary()
+            out[f"{key}_tok_s"] = s["throughput_tok_s"]
+            if key == "adaptive":
+                out["timesteps_skipped"] = s["timesteps_skipped"]
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    out["adaptive_speedup"] = out["adaptive_tok_s"] / out["full_tok_s"]
+    out["token_identical"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(tokens["full"], tokens["adaptive"])
+    )
+    if not out["token_identical"]:  # the row doubles as a CI identity gate
+        raise SystemExit(
+            "adaptive temporal (min_spikes=1) broke token identity vs full"
+        )
+    if out["timesteps_skipped"] <= 0:
+        raise SystemExit(
+            "adaptive temporal row measured timesteps_skipped == 0 — the "
+            "scorer never fired; the row is not exercising the skip path"
+        )
     return out
 
 
@@ -426,7 +544,7 @@ def rows():
     full-sweep BENCH_serve.json untouched)."""
     rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
                 "--no-sharded-row", "--no-approx-row", "--no-pipelined-row",
-                "--no-prefix-row"])
+                "--no-prefix-row", "--no-adaptive-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -462,6 +580,8 @@ def main(argv=None):
                     help="skip the pipelined-vs-sync executor row")
     ap.add_argument("--no-prefix-row", action="store_true",
                     help="skip the paged + prefix-reuse arrival-trace row")
+    ap.add_argument("--no-adaptive-row", action="store_true",
+                    help="skip the adaptive temporal-sparsity serving row")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -479,7 +599,7 @@ def main(argv=None):
     )
     report = {
         "arch": args.arch,
-        "backend": jax.default_backend(),
+        **backend_info(),
         "prompt_len": args.prompt_len,
         "gen": args.gen,
         "results": results,
@@ -524,6 +644,14 @@ def main(argv=None):
               f"token_identical={pl['token_identical']}; "
               f"sync sample_sync {pl['sync_sample_sync_s']*1e3:.1f}ms vs "
               f"pipelined {pl['pipelined_sample_sync_s']*1e3:.1f}ms)")
+    if not args.no_adaptive_row:
+        at = bench_adaptive_temporal()
+        report["bench_adaptive_t"] = at
+        print(f"  adaptive-T (min_spikes=1): {at['adaptive_tok_s']:.1f} "
+              f"tok/s vs full {at['full_tok_s']:.1f} tok/s "
+              f"({at['adaptive_speedup']:.2f}x, "
+              f"timesteps_skipped={at['timesteps_skipped']}, "
+              f"token_identical={at['token_identical']})")
     if not args.no_prefix_row:
         pc = bench_prefix_cache()
         report["bench_prefix_cache"] = pc

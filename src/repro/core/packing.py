@@ -85,6 +85,66 @@ def mask_low_activity_spikes(spikes: jax.Array, min_spikes: int = 2) -> jax.Arra
 
 
 # ---------------------------------------------------------------------------
+# Timestep-activity scoring: the TEMPORAL analogue of the silent-neuron /
+# silent-block skipping above.  Real SNN activity is temporally bursty —
+# whole bit-planes of the packed payload (bit t across every neuron) are
+# often silent, especially early timesteps under direct encoding, where
+# membranes have not charged past v_th yet.  A silent plane contributes
+# exactly zero to every accumulator, so skipping its GEMM work is bitwise
+# (the LIF recurrence still runs over all T — a silent input timestep still
+# leaks and may fire from carried membrane potential).  Scoring is popcount
+# arithmetic over words already resident on device: near-free next to the
+# GEMMs it gates.
+# ---------------------------------------------------------------------------
+
+def timestep_popcount(packed: jax.Array, T: int) -> jax.Array:
+    """Per-timestep spike totals of a packed tensor: (...) uint32 -> (T,)
+    int32, entry t = number of set bits at bit position t over all words."""
+    if T > MAX_T:
+        raise ValueError(f"T={T} exceeds MAX_T={MAX_T}")
+    shifts = jnp.arange(T, dtype=jnp.uint32).reshape((T,) + (1,) * packed.ndim)
+    bits = (packed[None].astype(jnp.uint32) >> shifts) & jnp.uint32(1)
+    return jnp.sum(
+        bits.astype(jnp.int32), axis=tuple(range(1, packed.ndim + 1))
+    )
+
+
+def timestep_activity_map(
+    packed: jax.Array, T: int, min_spikes: int = 1
+) -> jax.Array:
+    """(...) packed words -> (T,) bool, True where timestep plane t carries
+    at least ``min_spikes`` spikes in total — the temporal sibling of
+    `block_activity_map`.  ``min_spikes=1`` marks exactly the all-silent
+    planes inactive (skipping them is provably bitwise); larger thresholds
+    also drop near-silent planes (approximate, drift bounded by the policy's
+    exactness tol)."""
+    return timestep_popcount(packed, T) >= min_spikes
+
+
+def mask_low_activity_timesteps(
+    packed: jax.Array, T: int, min_spikes: int = 1
+) -> jax.Array:
+    """Zero out the bits of every timestep plane scoring below
+    ``min_spikes`` — the value-level realization of adaptive temporal
+    sparsity for kernels without an in-kernel timestep skip (the dense-
+    weight path).  Identity for ``min_spikes=1`` (an all-silent plane has
+    no bits to clear), and idempotent: surviving planes keep every spike,
+    so re-scoring can only confirm them."""
+    keep = timestep_activity_map(packed, T, min_spikes)
+    word = jnp.sum(
+        jnp.where(
+            keep,
+            jnp.uint32(1) << jnp.arange(T, dtype=jnp.uint32),
+            jnp.uint32(0),
+        ),
+        dtype=jnp.uint32,
+    )
+    full = jnp.uint32(0xFFFFFFFF) if T == MAX_T else jnp.uint32((1 << T) - 1)
+    # bits at t >= T are out-of-range payload; preserve them untouched
+    return (packed & ~full) | (packed & word)
+
+
+# ---------------------------------------------------------------------------
 # Block-activity maps: the TPU-granularity analogue of LoAS's silent-neuron
 # skipping (DESIGN.md D1).  A (bm, bk) block of packed words that is entirely
 # silent contributes nothing to any output tile and can be skipped by the

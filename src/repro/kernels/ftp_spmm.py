@@ -16,6 +16,12 @@ Three kernels:
                             the spike side is a per-request device-computed
                             activity map consumed in-kernel with @pl.when —
                             no host join, no recompile across requests.
+                            With ``tmap`` (timestep-activity map) the same
+                            machinery gates a third axis: per-timestep bit
+                            planes whose total spike score is below the
+                            policy threshold skip their MXU work entirely
+                            (adaptive temporal sparsity; value change only,
+                            zero retrace).
 
 Dataflow notes (why this is FTP):
   The grid is (m, n, k) — the inner-product loop nest.  Inside one grid step
@@ -240,6 +246,61 @@ def _ftp_bsr_kernel(
             u_ref[...] = jnp.zeros_like(u_ref)
 
 
+def _ftp_bsr_adaptive_kernel(
+    kidx_ref, vidx_ref, cnt_ref, act_ref, tmap_ref,  # scalar-prefetch
+    a_ref, bv_ref, c_ref, u_ref, acc_ref,
+    *, T, jmax, v_th, tau, fuse_lif,
+):
+    """Triple-sparse body: weight join x spike activity x TIMESTEP activity.
+
+    Identical to `_ftp_bsr_kernel` except the folded single (T*bm, bk) MXU
+    call is split into T per-plane (bm, bk) calls, each gated by the
+    scalar-prefetched timestep-activity map ``tmap`` — the temporal third of
+    the join.  The walk over timesteps is unrolled at trace time and the
+    grid stays (nm, nnb, jmax): a change in which timesteps are silent is a
+    pure value change of ``tmap`` (same shapes -> no retrace), and a skipped
+    plane skips its MXU work entirely.  The LIF epilogue still runs over ALL
+    T timesteps — a silent input plane contributes exactly zero current, but
+    the membrane recurrence (leak, threshold, carried potential) must see it,
+    which is what keeps min_spikes=1 skipping bitwise.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    jj = pl.program_id(2)
+
+    @pl.when(jj == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kb = kidx_ref[j, jj]
+    bm = a_ref.shape[0]
+
+    @pl.when(jnp.logical_and(jj < cnt_ref[j], act_ref[i, kb] > 0))
+    def _():
+        a_word = a_ref[...]
+        b = bv_ref[0].astype(jnp.float32)
+        for t in range(T):
+
+            @pl.when(tmap_ref[t] > 0)
+            def _(t=t):
+                plane = ((a_word >> jnp.uint32(t)) & jnp.uint32(1)).astype(
+                    jnp.float32
+                )
+                acc_ref[t * bm : (t + 1) * bm, :] += jnp.dot(
+                    plane, b, preferred_element_type=jnp.float32
+                )
+
+    @pl.when(jj == jmax - 1)
+    def _():
+        if fuse_lif:
+            packed, u = _lif_epilogue(acc_ref[...], T, v_th, tau)
+            c_ref[...] = packed
+            u_ref[...] = u.astype(u_ref.dtype)
+        else:
+            c_ref[...] = acc_ref[...].reshape(c_ref.shape)
+            u_ref[...] = jnp.zeros_like(u_ref)
+
+
 def ftp_spmm_bsr(
     a_packed: jax.Array,
     b_vals: jax.Array,
@@ -252,6 +313,7 @@ def ftp_spmm_bsr(
     v_th: float = DEFAULT_VTH,
     tau: float = DEFAULT_TAU,
     *,
+    tmap: jax.Array | None = None,
     bm: int = BM,
     fuse_lif: bool = True,
     interpret: bool = False,
@@ -268,6 +330,11 @@ def ftp_spmm_bsr(
     cnt:      (nnb,) int32 — live join slots per column block.
     act:      (nm, nkb) int32 — device-computed spike block-activity map
               (>0 where the (bm, bk) spike block has any non-silent neuron).
+    tmap:     optional (T,) int32 device-computed timestep-activity map
+              (>0 where timestep plane t clears the policy's min_spikes
+              score).  When given, the adaptive triple-sparse kernel runs
+              and inactive planes skip their MXU work; when None, the folded
+              single-MXU-call kernel runs (temporal='full').
     """
     M, K = a_packed.shape
     nnzb, bk, bn = b_vals.shape
@@ -275,17 +342,28 @@ def ftp_spmm_bsr(
     nm, nkb = act.shape
     assert M % bm == 0 and K == nkb * bk and N == nnb * bn and nm == M // bm
 
+    adaptive = tmap is not None
+    if adaptive:
+        assert tmap.shape == (T,), (tmap.shape, T)
+        kernel = _ftp_bsr_adaptive_kernel
+        prefetch = (kidx, vidx, cnt, act, tmap)
+    else:
+        kernel = _ftp_bsr_kernel
+        prefetch = (kidx, vidx, cnt, act)
+
+    # index maps take (grid ids..., *scalar-prefetch refs); written with *_
+    # so the same lambdas serve both prefetch arities (4 or 5 operands)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=4,
+        num_scalar_prefetch=len(prefetch),
         grid=(nm, nnb, jmax),
         in_specs=[
             pl.BlockSpec(
                 (bm, bk),
-                lambda i, j, jj, kidx, vidx, cnt, act: (i, kidx[j, jj]),
+                lambda i, j, jj, kidx, *_: (i, kidx[j, jj]),
             ),
             pl.BlockSpec(
                 (1, bk, bn),
-                lambda i, j, jj, kidx, vidx, cnt, act: (vidx[j, jj], 0, 0),
+                lambda i, j, jj, kidx, vidx, *_: (vidx[j, jj], 0, 0),
             ),
         ],
         out_specs=[
@@ -308,7 +386,7 @@ def ftp_spmm_bsr(
     ]
     c, u = pl.pallas_call(
         functools.partial(
-            _ftp_bsr_kernel,
+            kernel,
             T=T,
             jmax=jmax,
             v_th=v_th,
@@ -318,5 +396,5 @@ def ftp_spmm_bsr(
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-    )(kidx, vidx, cnt, act, a_packed, b_vals)
+    )(*prefetch, a_packed, b_vals)
     return c, u

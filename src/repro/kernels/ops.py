@@ -39,7 +39,11 @@ from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core.lif import DEFAULT_TAU, DEFAULT_VTH
-from repro.core.packing import block_activity_map
+from repro.core.packing import (
+    block_activity_map,
+    mask_low_activity_timesteps,
+    timestep_activity_map,
+)
 
 from . import ftp_spmm as _k
 from .join_plan import (
@@ -268,10 +272,14 @@ BSR_TRACE_COUNT = 0
 
 @functools.partial(
     jax.jit,
-    static_argnames=("T", "v_th", "tau", "bm", "n_out", "fuse_lif", "interpret"),
+    static_argnames=(
+        "T", "v_th", "tau", "bm", "n_out", "fuse_lif", "interpret",
+        "adaptive", "min_spikes",
+    ),
 )
 def _bsr_call(
-    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret
+    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret,
+    adaptive=False, min_spikes=1,
 ):
     global BSR_TRACE_COUNT
     BSR_TRACE_COUNT += 1  # trace-time side effect, by design
@@ -284,6 +292,15 @@ def _bsr_call(
     ap = jnp.pad(a_packed, pads) if any(p for _, p in pads) else a_packed
     # Device-side spike join: the activity map never leaves the accelerator.
     act = block_activity_map(ap, bm, plan.bk).astype(jnp.int32)
+    # Temporal third of the join (policy temporal='adaptive'): score each
+    # timestep bit-plane on device; planes below min_spikes skip their MXU
+    # work in-kernel.  Like `act`, a change in which planes are silent is a
+    # pure value change — same shapes, zero retrace.
+    tmap = (
+        timestep_activity_map(ap, T, min_spikes).astype(jnp.int32)
+        if adaptive
+        else None
+    )
     c, u = _k.ftp_spmm_bsr(
         ap,
         plan.payload,
@@ -295,6 +312,7 @@ def _bsr_call(
         T,
         v_th,
         tau,
+        tmap=tmap,
         bm=bm,
         fuse_lif=fuse_lif,
         interpret=interpret,
@@ -308,10 +326,12 @@ def _bsr_call(
     jax.jit,
     static_argnames=(
         "T", "v_th", "tau", "bm", "n_out", "fuse_lif", "interpret", "mesh",
+        "adaptive", "min_spikes",
     ),
 )
 def _bsr_call_sharded(
-    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret, mesh
+    a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret, mesh,
+    adaptive=False, min_spikes=1,
 ):
     """shard_map entry for the BSR kernel: plan column slabs on `model`,
     spike rows on `data` (when divisible).
@@ -322,6 +342,12 @@ def _bsr_call_sharded(
     so concatenating slabs equals the unsharded kernel bit-for-bit (no
     cross-shard reduction).  Per-request spike activity stays a pure value
     change: same shapes, same shardings, zero retrace.
+
+    Under ``adaptive`` each shard also scores its LOCAL timestep planes.
+    At min_spikes=1 this stays bitwise: a plane silent over a shard's rows
+    contributes exactly zero to that shard's outputs whether or not other
+    shards fire at that timestep.  min_spikes>1 thresholds per-shard counts
+    (approximate by policy anyway, drift gated by exactness tol).
     """
     global BSR_TRACE_COUNT
     BSR_TRACE_COUNT += 1  # trace-time side effect, by design (see _bsr_call)
@@ -335,7 +361,7 @@ def _bsr_call_sharded(
         bm_l = min(_k.BM, max(8, a_loc.shape[0])) if bm is None else bm
         return _bsr_call(
             a_loc, plan_l, T, v_th, tau, bm_l, plan_l.n_padded, fuse_lif,
-            interpret,
+            interpret, adaptive=adaptive, min_spikes=min_spikes,
         )
 
     c_spec = P(row, "model") if fuse_lif else P(None, row, "model")
@@ -372,6 +398,8 @@ def _bsr(
     n_out: int | None = None,
     fuse_lif: bool = True,
     interpret: bool | None = None,
+    adaptive: bool = False,
+    min_spikes: int = 1,
 ):
     """Dual-sparse FTP spMspM against a load-time `WeightJoinPlan`.
 
@@ -404,13 +432,14 @@ def _bsr(
         n_out = mp * plan.n_padded if n_out is None else n_out
         return _bsr_call_sharded(
             a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret,
-            mesh,
+            mesh, adaptive=adaptive, min_spikes=min_spikes,
         )
     M = a_packed.shape[0]
     bm = min(_k.BM, max(8, M)) if bm is None else bm
     n_out = plan.n_padded if n_out is None else n_out
     return _bsr_call(
-        a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret
+        a_packed, plan, T, v_th, tau, bm, n_out, fuse_lif, interpret,
+        adaptive=adaptive, min_spikes=min_spikes,
     )
 
 
@@ -425,14 +454,20 @@ def _bsr_batched(
     n_out: int | None = None,
     fuse_lif: bool = True,
     interpret: bool | None = None,
+    adaptive: bool = False,
+    min_spikes: int = 1,
 ):
     """(B, M, K) batched dual-sparse entry — the batch folds into rows (same
     trick as `_spmm_batched`), so one weight-plan fetch serves the whole
-    batch and all T timesteps."""
+    batch and all T timesteps.  Temporal scoring under ``adaptive`` is then
+    over the folded batch: a timestep is skipped only when silent across
+    EVERY request in the batch (conservative, and what keeps min_spikes=1
+    bitwise per request)."""
     B, M, K = a_packed.shape
     out, u = _bsr(
         a_packed.reshape(B * M, K), plan, T, v_th, tau,
         bm=bm, n_out=n_out, fuse_lif=fuse_lif, interpret=interpret,
+        adaptive=adaptive, min_spikes=min_spikes,
     )
     N = out.shape[-1]
     if fuse_lif:
@@ -452,6 +487,8 @@ def _dual_sparse_once(
     bn=_k.BN,
     fuse_lif: bool = True,
     interpret: bool | None = None,
+    adaptive: bool = False,
+    min_spikes: int = 1,
 ):
     """End-to-end dual-sparse LoAS layer: plan construction + BSR kernel.
 
@@ -468,6 +505,7 @@ def _dual_sparse_once(
     return _bsr(
         jnp.asarray(a_packed), plan, T, v_th, tau,
         bm=bm_, n_out=N, fuse_lif=fuse_lif, interpret=interpret,
+        adaptive=adaptive, min_spikes=min_spikes,
     )
 
 
@@ -556,19 +594,31 @@ def dispatch(
     bk_ = _k.BK if bk is None else bk
     bn_ = _k.BN if bn is None else bn
     batched = a.ndim == 3
+    # Temporal axis of the policy: the BSR kernels take the scored map
+    # in-kernel (real skipped MXU work); the dense-weight kernels have no
+    # in-kernel timestep walk, so lossy thresholds (min_spikes>1) realize as
+    # value-level bit masking of the operand instead.  min_spikes=1 masking
+    # is the identity (an all-silent plane has no bits), so the dense path
+    # skips it outright.
+    adaptive = policy.temporal.enabled
+    min_spikes = policy.temporal.min_spikes if adaptive else 1
     with serve_mesh_scope(mesh):
         if plan_like:
             fn = _bsr_batched if batched else _bsr
             return fn(
                 a, weights_or_plan, T, v_th, tau,
                 bm=bm, n_out=n_out, fuse_lif=fuse_lif, interpret=interpret,
+                adaptive=adaptive, min_spikes=min_spikes,
             )
+        if adaptive and min_spikes > 1 and policy.weight_sparsity == "dense":
+            a = mask_low_activity_timesteps(a, T, min_spikes)
         if policy.weight_sparsity == "dual_sparse":
             a2 = a.reshape(-1, a.shape[-1]) if batched else a
             out, u = _dual_sparse_once(
                 a2, weights_or_plan, T, v_th, tau,
                 bm=bm_, bk=bk_, bn=bn_, fuse_lif=fuse_lif,
                 interpret=interpret,
+                adaptive=adaptive, min_spikes=min_spikes,
             )
             if batched:
                 B, M = a.shape[:2]

@@ -24,6 +24,12 @@ reference is printed and bounded by ``--tol``):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --mesh data,model --fake-devices 8 --exactness approximate --batch 4
 
+Adaptive temporal sparsity (skip silent timestep planes in-kernel — the
+third sparsity axis; bitwise at the default --min-spikes 1):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --spiking --weight-density 0.3 --temporal adaptive --batch 4
+
 Requests (`--batch` of them) are submitted to `repro.serve.Engine`, which
 batches prefills, merges decode cohorts, and reports TTFT / throughput.
 `generate` below is the original single-shot loop, kept as the reference
@@ -82,9 +88,14 @@ def build_policy(args, cfg):
     exactness = (
         approximate(args.tol) if args.exactness == "approximate" else bitwise()
     )
-    from repro.serve import Paging, paged
+    from repro.serve import Paging, Temporal, adaptive_t, paged
 
     paging = (paged(args.page_size) if args.paging == "paged" else Paging())
+    temporal = (
+        adaptive_t(args.min_spikes)
+        if args.temporal == "adaptive"
+        else Temporal()
+    )
     return ExecutionPolicy.for_arch(
         cfg,
         spike_format=spike_format,
@@ -93,6 +104,7 @@ def build_policy(args, cfg):
         exactness=exactness,
         execution=args.execution,
         paging=paging,
+        temporal=temporal,
     )
 
 
@@ -153,6 +165,17 @@ def main(argv=None):
                     help="cache positions per page under --paging paged "
                          "(multiple of 8; max_len is rounded up to a "
                          "multiple of it)")
+    ap.add_argument("--temporal", choices=("full", "adaptive"),
+                    default="full",
+                    help="policy.temporal: adaptive = score each timestep "
+                         "bit-plane of the packed payload on device and "
+                         "skip planes below --min-spikes in-kernel (the "
+                         "third sparsity axis); full = walk every timestep")
+    ap.add_argument("--min-spikes", type=int, default=1,
+                    help="minimum total spikes for a timestep plane to be "
+                         "walked under --temporal adaptive; 1 (default) "
+                         "skips only all-silent planes and stays bitwise, "
+                         ">1 requires --exactness approximate")
     # -- arch surgery -------------------------------------------------------
     ap.add_argument("--spiking", action="store_true",
                     help="swap the arch's MLP blocks for dual-sparse "
@@ -227,15 +250,17 @@ def main(argv=None):
     if not policy.token_identical:
         # measure drift against a bitwise single-device run of the same
         # prompts — the contract --tol bounds.  The reference keeps the SAME
-        # spike format / weight sparsity (only placement + exactness reset),
-        # so the measured drift is pure psum-TP reassociation, not
-        # float-vs-packed kernel arithmetic differences.
+        # spike format / weight sparsity (placement + exactness + temporal
+        # reset), so the measured drift is pure psum-TP reassociation and/or
+        # lossy timestep skipping — the approximations the policy opted
+        # into — not float-vs-packed kernel arithmetic differences.
         import dataclasses as _dc
 
-        from repro.serve import Placement, bitwise
+        from repro.serve import Placement, Temporal, bitwise
 
         ref_policy = _dc.replace(
-            policy, placement=Placement(), exactness=bitwise()
+            policy, placement=Placement(), exactness=bitwise(),
+            temporal=Temporal(),
         )
         ref = Engine(
             model, params,
@@ -255,9 +280,12 @@ def main(argv=None):
         # the measured facts get their own keys
         s["max_logit_drift"] = rep["max_logit_drift"]
         s["token_match_fraction"] = rep["token_match_fraction"]
-        print(f"approximate-TP drift: max |logit drift| "
+        print(f"approximate drift: max |logit drift| "
               f"{rep['max_logit_drift']:.3e} <= tol {policy.exactness.tol} "
               f"(token match {rep['token_match_fraction']:.0%})")
+    if policy.temporal.enabled:
+        print(f"temporal: {policy.temporal.describe()} — "
+              f"{s['timesteps_skipped']} timestep planes skipped")
     print(f"served {s['n_requests']} requests / {s['total_tokens']} tokens "
           f"in {s['wall_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
           f"ttft_p50 {s['ttft_s_p50']*1e3:.0f}ms, "

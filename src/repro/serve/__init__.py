@@ -42,6 +42,8 @@ from .policy import (
     Paging,
     ParityError,
     Placement,
+    Temporal,
+    adaptive_t,
     approximate,
     bitwise,
     check_parity,
@@ -87,6 +89,8 @@ __all__ = [
     "RequestState",
     "Scheduler",
     "SyncExecutor",
+    "Temporal",
+    "adaptive_t",
     "approximate",
     "bitwise",
     "bucket_key",

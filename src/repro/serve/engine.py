@@ -423,7 +423,29 @@ class Engine:
         toks = jnp.asarray(
             [st.generated[-1] for st in cohort.slots], jnp.int32
         )
-        return np.asarray(self._encode_pack(self.params, toks))
+        words = np.asarray(self._encode_pack(self.params, toks))
+        self.record_timestep_skips(words)
+        return words
+
+    def record_timestep_skips(self, words: np.ndarray) -> None:
+        """Count the timestep planes of one packed batch that the policy's
+        temporal scorer marks skippable (`EngineMetrics.timesteps_skipped`).
+
+        Host-side replica of `core.packing.timestep_activity_map`'s rule
+        over words already materialized for dispatch — the in-kernel skip
+        happens on device inside a jit trace and cannot report back, so the
+        engine scores the same planes at the encode boundary instead.
+        """
+        if not self.policy.temporal.enabled or words.size == 0:
+            return
+        T = self.cfg.spiking_T
+        bits = np.unpackbits(
+            np.ascontiguousarray(words, dtype=np.uint32).view(np.uint8),
+            bitorder="little",
+        )
+        counts = bits.reshape(-1, 32)[:, :T].sum(axis=0)
+        skipped = int((counts < self.policy.temporal.min_spikes).sum())
+        self.metrics.timesteps_skipped += skipped
 
     def new_spike_cache(self):
         """Per-cohort packed-spike store matching the cache backend."""
@@ -653,4 +675,5 @@ class Engine:
                 self.cfg.d_model * self.cfg.spiking_T * 4
             )
             s["dual_sparse"] = self.spiking_dual_sparse
+        s["temporal"] = self.policy.temporal.describe()
         return s

@@ -401,6 +401,13 @@ class PipelinedExecutor(SyncExecutor):
             self._materialize(cohort)
         if self.engine.spiking_packed and cohort.spikes is not None:
             self.engine._last_spike_sparsity = cohort.spikes.spike_sparsity()
+            # decode-step encodes stayed on device (update_async); score the
+            # flushed state so temporal='adaptive' telemetry reflects this
+            # executor too (a sampled lower bound — see EngineMetrics)
+            if self.engine.policy.temporal.enabled:
+                self.engine.record_timestep_skips(
+                    np.asarray(cohort.spikes.words)
+                )
 
     def drain(self) -> None:
         for cohort in self.engine.cohorts:

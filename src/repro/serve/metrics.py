@@ -51,6 +51,13 @@ class EngineMetrics:
     n_page_moves: int = 0
     n_prefix_hits: int = 0        # requests admitted from the radix index
     n_prefix_tokens_reused: int = 0   # prompt tokens whose prefill was skipped
+    # temporal='adaptive' counter: timestep planes of encoded spike batches
+    # scoring below the policy's min_spikes — the planes whose MXU work the
+    # kernel skips.  Counted host-side at encode (the engine's input-side
+    # proxy for the device-side in-kernel skip, which cannot report out of
+    # a jit trace); pipelined decode-step encodes stay on device and are
+    # sampled only at flush, so this is a lower bound there.
+    timesteps_skipped: int = 0
     queue_depth_samples: list[int] = field(default_factory=list)
     wall_s: float = 0.0
     # Per-stage wall time, filled by the step executor (serve/executor.py):
@@ -99,6 +106,7 @@ class EngineMetrics:
             "page_moves": self.n_page_moves,
             "prefix_hits": self.n_prefix_hits,
             "prefix_tokens_reused": self.n_prefix_tokens_reused,
+            "timesteps_skipped": self.timesteps_skipped,
             "max_queue_depth": max(self.queue_depth_samples, default=0),
             "stage_s": {k: self.stage_s[k] for k in sorted(self.stage_s)},
         }

@@ -28,6 +28,11 @@ execution choice is one frozen, hashable dataclass-pytree with four axes:
   spike encode double-buffers against the next decode, and mesh cohorts
   re-pack on load skew).  Orthogonal to exactness: a bitwise pipelined
   policy is still token-identical — only the host/device overlap changes.
+* ``temporal``        — which timesteps the FTP kernels walk: ``"full"``
+  (every plane, the folded kernel) or ``"adaptive"`` (a device-side
+  popcount scorer gates each timestep bit-plane in-kernel; min_spikes=1
+  skips only all-silent planes and stays bitwise, min_spikes>1 drops
+  near-silent planes and requires the approximate contract).
 
 Everything downstream consumes the policy: ``Engine(policy=...)``,
 ``kernels.ops.dispatch(a, weights_or_plan, policy, T)``, the serve CLI
@@ -59,6 +64,7 @@ WEIGHT_SPARSITIES = ("dense", "dual_sparse")
 EXACTNESS_MODES = ("bitwise", "approximate")
 EXECUTION_MODES = ("sync", "pipelined")
 PAGING_MODES = ("none", "paged")
+TEMPORAL_MODES = ("full", "adaptive")
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +200,72 @@ def paged(page_size: int = 8) -> Paging:
     return Paging("paged", page_size)
 
 
+@register_static
+@dataclass(frozen=True)
+class Temporal:
+    """The third sparsity axis: which timesteps the FTP kernels walk.
+
+    ``"full"``: every timestep plane of the packed payload is contracted
+    (the PR-2 folded kernel — T rides the MXU row dim unconditionally).
+    ``"adaptive"``: a near-free device-side scorer
+    (`core.packing.timestep_activity_map`) popcounts each timestep
+    bit-plane; planes carrying fewer than ``min_spikes`` spikes in total
+    skip their MXU work in-kernel, gated by the same scalar-prefetch +
+    ``@pl.when`` machinery the block join uses — a pure value change, zero
+    retrace across requests.
+
+    ``min_spikes=1`` (the default) skips only ALL-SILENT planes and is
+    provably bitwise: a silent plane contributes exactly zero current, and
+    the LIF recurrence still runs over all T timesteps (leak + threshold
+    continue over the skipped input).  It therefore composes with every
+    other axis — paged, pipelined, mesh — under the bitwise contract.
+    ``min_spikes>1`` also drops near-silent planes (real spikes discarded),
+    which is approximate by construction and requires
+    ``exactness=approximate(tol)`` so the drift is measured and bounded.
+    """
+
+    mode: str = "full"
+    min_spikes: int = 1
+
+    def __post_init__(self):
+        if self.mode not in TEMPORAL_MODES:
+            raise ValueError(
+                f"temporal mode {self.mode!r} not in {TEMPORAL_MODES}"
+            )
+        if self.min_spikes < 1:
+            raise ValueError(
+                "temporal.min_spikes must be >= 1 (a plane can only be "
+                f"skipped for carrying too FEW spikes), got {self.min_spikes}"
+            )
+        if self.mode == "full" and self.min_spikes != 1:
+            raise ValueError(
+                "temporal='full' walks every timestep; min_spikes="
+                f"{self.min_spikes} is meaningless — use "
+                "temporal=adaptive_t(min_spikes=...)"
+            )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode == "adaptive"
+
+    @property
+    def lossy(self) -> bool:
+        """True when the scorer may drop planes that carry real spikes."""
+        return self.mode == "adaptive" and self.min_spikes > 1
+
+    def describe(self) -> str:
+        if self.mode == "full":
+            return "full"
+        return f"adaptive(min_spikes={self.min_spikes})"
+
+
+def adaptive_t(min_spikes: int = 1) -> Temporal:
+    """Adaptive temporal sparsity: skip timestep planes scoring below
+    ``min_spikes``.  The default (1) skips only all-silent planes and stays
+    bitwise."""
+    return Temporal("adaptive", min_spikes)
+
+
 # ---------------------------------------------------------------------------
 # the policy
 # ---------------------------------------------------------------------------
@@ -215,6 +287,7 @@ class ExecutionPolicy:
     exactness: Exactness = field(default_factory=bitwise)
     execution: str = "sync"
     paging: Paging = field(default_factory=Paging)
+    temporal: Temporal = field(default_factory=Temporal)
 
     def __post_init__(self):
         if self.execution not in EXECUTION_MODES:
@@ -236,13 +309,33 @@ class ExecutionPolicy:
                 "kernel, which consumes packed uint32 spike words; it "
                 f"requires spike_format='packed' (got {self.spike_format!r})"
             )
-        if self.exactness.mode == "approximate" and self.placement.model_size < 2:
+        if self.temporal.enabled and self.spike_format != "packed":
+            raise ValueError(
+                "temporal='adaptive' scores the packed uint32 timestep "
+                "bit-planes; it requires spike_format='packed' (got "
+                f"{self.spike_format!r})"
+            )
+        if self.temporal.lossy and self.exactness.mode != "approximate":
+            raise ValueError(
+                f"temporal=adaptive(min_spikes={self.temporal.min_spikes}) "
+                "drops timestep planes that carry real spikes — an "
+                "approximation.  Pair it with exactness=approximate(tol) so "
+                "the drift is measured and bounded, or use min_spikes=1 "
+                "(skip only all-silent planes: provably bitwise)."
+            )
+        if (self.exactness.mode == "approximate"
+                and self.placement.model_size < 2
+                and not self.temporal.lossy):
+            # lossy temporal skipping is the one single-device source of
+            # approximation; without it, approximate needs psum-TP to relax
             raise ValueError(
                 "exactness='approximate' relaxes cross-shard reductions "
                 "(psum-TP on the model axis); it needs a placement whose "
                 "mesh has a model axis >= 2 — got "
                 f"{self.placement.describe()}.  For single-device serving "
-                "use exactness=bitwise (it is both exact and free here)."
+                "use exactness=bitwise (it is both exact and free here), "
+                "unless temporal=adaptive_t(min_spikes>1) supplies the "
+                "approximation being bounded."
             )
         if (self.exactness.mode == "bitwise"
                 and self.placement.model_dims is not None):
@@ -281,7 +374,8 @@ class ExecutionPolicy:
                 f"weight_sparsity={self.weight_sparsity!r}, "
                 f"placement={self.placement.describe()}, exactness={ex}, "
                 f"execution={self.execution!r}, "
-                f"paging={self.paging.describe()}")
+                f"paging={self.paging.describe()}, "
+                f"temporal={self.temporal.describe()}")
 
     # -- arch-aware validation / construction -------------------------------
     def validate_for(self, cfg) -> "ExecutionPolicy":
@@ -309,11 +403,12 @@ class ExecutionPolicy:
                  placement: Placement | None = None,
                  exactness: Exactness | None = None,
                  execution: str | None = None,
-                 paging: Paging | None = None) -> "ExecutionPolicy":
+                 paging: Paging | None = None,
+                 temporal: Temporal | None = None) -> "ExecutionPolicy":
         """Arch-aware constructor with ``None`` = the natural default:
         packed spikes for spiking archs, dual-sparse when weights are
         pruned, single-device bitwise placement, sync execution, dense
-        (non-paged) cache storage."""
+        (non-paged) cache storage, full temporal walk."""
         if spike_format is None:
             spike_format = "packed" if cfg.spiking_ffn else "float"
         if weight_sparsity is None:
@@ -329,6 +424,7 @@ class ExecutionPolicy:
             exactness=exactness if exactness is not None else bitwise(),
             execution=execution if execution is not None else "sync",
             paging=paging if paging is not None else Paging(),
+            temporal=temporal if temporal is not None else Temporal(),
         )
         return pol.validate_for(cfg)
 
@@ -360,6 +456,10 @@ FLOAT_DENSE = ExecutionPolicy()
 PACKED_DENSE = ExecutionPolicy(spike_format="packed")
 PACKED_DUAL = ExecutionPolicy(spike_format="packed",
                               weight_sparsity="dual_sparse")
+# Triple-sparse: weights x spikes x timesteps, bitwise (min_spikes=1).
+PACKED_DUAL_ADAPTIVE = ExecutionPolicy(spike_format="packed",
+                                       weight_sparsity="dual_sparse",
+                                       temporal=adaptive_t())
 
 
 # ---------------------------------------------------------------------------

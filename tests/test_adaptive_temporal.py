@@ -1,0 +1,302 @@
+"""Adaptive temporal sparsity (`ExecutionPolicy.temporal`) — the third
+sparsity axis (weights x spikes x timesteps).
+
+Contracts under test:
+
+* policy: the `Temporal` axis validates at construction time —
+  ``adaptive`` requires packed spikes; ``min_spikes > 1`` drops real
+  spikes and therefore requires an ``approximate`` exactness contract;
+  ``min_spikes = 1`` is provably bitwise (a globally-silent timestep
+  plane's GEMM contributes exactly zero, and the LIF epilogue still
+  walks ALL T, so leak/threshold dynamics are untouched).
+* kernel: the adaptive BSR kernel is bit-identical to the full kernel at
+  ``min_spikes=1``; at ``min_spikes>1`` its output is EXACTLY the full
+  kernel run on `mask_low_activity_timesteps(input)` — the lossy mode's
+  semantics are an input transform, not a numeric approximation.
+* zero retrace: the timestep-activity map is a traced VALUE (scalar
+  prefetch), so changing which planes are silent never recompiles.
+* serving: ``adaptive(min_spikes=1)`` is token-identical to
+  ``temporal=full`` across the whole execution matrix — both executors,
+  dense/paged cache storage, single-device and mesh placement — and the
+  engine's ``timesteps_skipped`` counter actually moves.
+
+Mesh tests run on the suite-wide 8 fake XLA devices (tests/conftest.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _data import mk_packed_and_weights as _mk
+from repro.configs import get_config, smoke_variant
+from repro.core.packing import mask_low_activity_timesteps
+from repro.kernels import ops, ref
+from repro.kernels.join_plan import build_weight_plan
+from repro.models.registry import build_model
+from repro.serve import Engine, ExecutionPolicy, make_serve_mesh
+from repro.serve.policy import (
+    PACKED_DUAL,
+    PACKED_DUAL_ADAPTIVE,
+    Placement,
+    Temporal,
+    adaptive_t,
+    approximate,
+    paged,
+)
+
+
+def _bursty(rng, T, M, K, N, silent, density=0.25, w_density=0.05):
+    """A packed trace where the planes in ``silent`` are globally silent
+    (the adaptive kernel's skip opportunity), plus a pruned weight."""
+    packed, w = _mk(rng, T, M, K, N, density=density, w_density=w_density)
+    keep = np.uint32(0)
+    for t in range(T):
+        if t not in silent:
+            keep |= np.uint32(1) << np.uint32(t)
+    return (packed & keep).astype(np.uint32), w
+
+
+# ---------------------------------------------------------------------------
+# policy axis: construction-time validation
+# ---------------------------------------------------------------------------
+
+
+def test_temporal_axis_validated_and_described():
+    assert Temporal().describe() == "full"
+    assert adaptive_t().describe() == "adaptive(min_spikes=1)"
+    assert adaptive_t(3).describe() == "adaptive(min_spikes=3)"
+    assert not Temporal().enabled
+    assert adaptive_t().enabled and not adaptive_t().lossy
+    assert adaptive_t(2).lossy
+    with pytest.raises(ValueError):
+        Temporal(mode="sometimes")
+    with pytest.raises(ValueError):
+        Temporal(min_spikes=0)
+    with pytest.raises(ValueError):
+        Temporal(mode="full", min_spikes=2)  # threshold without adaptive
+
+
+def test_adaptive_requires_packed_spikes():
+    with pytest.raises(ValueError, match="packed"):
+        ExecutionPolicy(spike_format="float", temporal=adaptive_t())
+
+
+def test_lossy_requires_approximate_contract():
+    # min_spikes=1 is bitwise: fine under the default exactness
+    ExecutionPolicy(spike_format="packed", weight_sparsity="dual_sparse",
+                    temporal=adaptive_t())
+    # min_spikes>1 drops real spikes: must be declared approximate
+    with pytest.raises(ValueError, match="approximate"):
+        ExecutionPolicy(spike_format="packed", weight_sparsity="dual_sparse",
+                        temporal=adaptive_t(2))
+    # ... and with the contract it is accepted even on a single device:
+    # the lossy temporal axis IS the approximation, no model axis needed
+    pol = ExecutionPolicy(spike_format="packed",
+                          weight_sparsity="dual_sparse",
+                          temporal=adaptive_t(2),
+                          exactness=approximate(1.0))
+    assert pol.temporal.lossy
+    assert "temporal=adaptive(min_spikes=2)" in pol.describe()
+
+
+def test_approximate_without_lossy_temporal_still_needs_model_axis():
+    """The PR-4 rule is only RELAXED for lossy temporal: a plain
+    single-device approximate policy (nothing supplying the approximation)
+    is still rejected."""
+    with pytest.raises(ValueError):
+        ExecutionPolicy(spike_format="packed", weight_sparsity="dual_sparse",
+                        exactness=approximate(0.05))
+
+
+def test_preset_and_for_arch_temporal():
+    assert PACKED_DUAL_ADAPTIVE.temporal.enabled
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(cfg, spiking_ffn=True,
+                              spiking_weight_density=0.3)
+    pol = ExecutionPolicy.for_arch(cfg, temporal=adaptive_t())
+    assert pol.temporal.enabled and pol.spike_format == "packed"
+    assert ExecutionPolicy.for_arch(cfg).temporal == Temporal()
+
+
+# ---------------------------------------------------------------------------
+# kernel: bitwise at min_spikes=1, masked-input semantics at min_spikes>1
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fuse", [True, False])
+def test_adaptive_bsr_bitwise_at_min_spikes_1(fuse):
+    """With >half the planes silent, the adaptive kernel skips them — and
+    still matches both the full kernel and the dense oracle exactly."""
+    rng = np.random.default_rng(42)
+    T, M, K, N = 8, 48, 160, 96
+    packed, w = _bursty(rng, T, M, K, N, silent={1, 3, 4, 6, 7})
+    plan = build_weight_plan(w)
+    a = jnp.asarray(packed)
+    out_a, u_a = ops.dispatch(a, plan, PACKED_DUAL_ADAPTIVE, T,
+                              n_out=N, fuse_lif=fuse)
+    out_f, u_f = ops.dispatch(a, plan, PACKED_DUAL, T,
+                              n_out=N, fuse_lif=fuse)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_f))
+    np.testing.assert_array_equal(np.asarray(u_a), np.asarray(u_f))
+    if fuse:
+        cw, uw = ref.ftp_spmm_fused_lif_ref(a, jnp.asarray(w), T)
+        np.testing.assert_array_equal(np.asarray(out_a), np.asarray(cw))
+        np.testing.assert_allclose(np.asarray(u_a), np.asarray(uw),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_adaptive_bsr_batched_bitwise():
+    rng = np.random.default_rng(7)
+    T, B, M, K, N = 4, 3, 16, 64, 32
+    packed = np.stack(
+        [_bursty(rng, T, M, K, N, silent={1, 2})[0] for _ in range(B)]
+    )
+    w = _bursty(rng, T, M, K, N, silent=set())[1]
+    plan = build_weight_plan(w)
+    out_a, u_a = ops.dispatch(jnp.asarray(packed), plan,
+                              PACKED_DUAL_ADAPTIVE, T, n_out=N, fuse_lif=True)
+    out_f, u_f = ops.dispatch(jnp.asarray(packed), plan,
+                              PACKED_DUAL, T, n_out=N, fuse_lif=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(out_f))
+    np.testing.assert_array_equal(np.asarray(u_a), np.asarray(u_f))
+
+
+@pytest.mark.parametrize("weight_sparsity", ["dual_sparse", "dense"])
+def test_lossy_equals_full_on_masked_input(weight_sparsity):
+    """min_spikes=2 semantics: EXACTLY the full kernel applied to
+    `mask_low_activity_timesteps(input, T, 2)` — on both weight paths."""
+    rng = np.random.default_rng(11)
+    T, M, K, N = 8, 32, 128, 64
+    packed, w = _mk(rng, T, M, K, N, density=0.15, w_density=0.2)
+    # plant low-activity planes the threshold must drop: planes 1/3 carry
+    # exactly ONE spike, planes 6/7 are globally silent
+    packed &= ~np.uint32((1 << 1) | (1 << 3) | (1 << 6) | (1 << 7))
+    packed[rng.integers(M), rng.integers(K)] |= np.uint32(1 << 1)
+    packed[rng.integers(M), rng.integers(K)] |= np.uint32(1 << 3)
+    lossy = ExecutionPolicy(spike_format="packed",
+                            weight_sparsity=weight_sparsity,
+                            temporal=adaptive_t(2),
+                            exactness=approximate(8.0))
+    full = ExecutionPolicy(spike_format="packed",
+                           weight_sparsity=weight_sparsity)
+    wop = build_weight_plan(w) if weight_sparsity == "dual_sparse" else (
+        jnp.asarray(w))
+    a = jnp.asarray(packed)
+    masked = mask_low_activity_timesteps(a, T, min_spikes=2)
+    assert not np.array_equal(np.asarray(masked), packed), (
+        "trace has no low-activity plane; lossy test is vacuous")
+    out_l, u_l = ops.dispatch(a, wop, lossy, T, n_out=N, fuse_lif=True)
+    out_m, u_m = ops.dispatch(masked, wop, full, T, n_out=N, fuse_lif=True)
+    np.testing.assert_array_equal(np.asarray(out_l), np.asarray(out_m))
+    np.testing.assert_array_equal(np.asarray(u_l), np.asarray(u_m))
+
+
+def test_adaptive_all_silent_input_is_zero():
+    rng = np.random.default_rng(3)
+    _, w = _mk(rng, 4, 16, 64, 32, w_density=0.3)
+    plan = build_weight_plan(w)
+    a = jnp.zeros((16, 64), jnp.uint32)
+    c, u = ops.dispatch(a, plan, PACKED_DUAL_ADAPTIVE, 4,
+                        n_out=32, fuse_lif=True)
+    assert (np.asarray(c) == 0).all() and (np.asarray(u) == 0).all()
+
+
+def test_adaptive_no_retrace_across_silent_sets(cold_bsr_cache):
+    """The serving contract extended to the temporal axis: requests whose
+    SILENT PLANES differ (same shapes) reuse one trace — the activity map
+    is a prefetched value, not a static."""
+    rng = np.random.default_rng(17)
+    T, M, K, N = 8, 16, 96, 64
+    w = _bursty(rng, T, M, K, N, silent=set())[1]
+    plan = build_weight_plan(w)
+    traces = [
+        _bursty(rng, T, M, K, N, silent=s)[0]
+        for s in ({0, 1, 2, 3}, {4, 5, 6, 7}, set(range(T)), set())
+    ]
+    call = lambda a: ops.dispatch(jnp.asarray(a), plan,
+                                  PACKED_DUAL_ADAPTIVE, T,
+                                  n_out=N, fuse_lif=True)
+    jax.block_until_ready(call(traces[0])[0])  # warm-up (traces once)
+    assert ops.BSR_TRACE_COUNT > 0, "adaptive BSR kernel path did not run"
+    before = ops.BSR_TRACE_COUNT
+    for a in traces[1:]:
+        jax.block_until_ready(call(a)[0])
+    assert ops.BSR_TRACE_COUNT == before, "silent-set change caused retrace"
+
+
+# ---------------------------------------------------------------------------
+# serving: token identity across the execution matrix + skip accounting
+# ---------------------------------------------------------------------------
+
+_MODEL_CACHE: dict = {}
+
+
+def _spiking_model():
+    if "m" not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config("llama3_2_1b"))
+        cfg = dataclasses.replace(cfg, spiking_ffn=True, spiking_T=4,
+                                  spiking_weight_density=0.3)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE["m"] = (cfg, model, params)
+    return _MODEL_CACHE["m"]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+@pytest.mark.parametrize("paging", ["dense", "paged"])
+@pytest.mark.parametrize("placement", ["single", "mesh"])
+def test_adaptive_token_identity_matrix(execution, paging, placement):
+    """adaptive(min_spikes=1) emits exactly the full-temporal engine's
+    tokens in every execution x paging x placement combination."""
+    cfg, model, params = _spiking_model()
+    mesh = make_serve_mesh("data,model") if placement == "mesh" else None
+    if placement == "mesh" and mesh is None:
+        pytest.skip("needs >= 2 fake devices")
+    kw = dict(
+        execution=execution,
+        paging=paged(8) if paging == "paged" else None,
+        placement=Placement(mesh=mesh),
+    )
+    prompts = _prompts(cfg, [9, 5, 12])
+    outs = {}
+    for key, temporal in (("full", None), ("adaptive", adaptive_t())):
+        engine = Engine(
+            model, params, max_len=24, max_slots=4,
+            policy=ExecutionPolicy.for_arch(cfg, temporal=temporal, **kw),
+        )
+        outs[key] = engine.generate_batch(prompts, 6)
+        if key == "adaptive":
+            assert engine.metrics.timesteps_skipped > 0
+            assert engine.summary()["temporal"] == "adaptive(min_spikes=1)"
+    for a, b in zip(outs["full"], outs["adaptive"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_record_timestep_skips_counts_planes():
+    """Unit check on the host-side skip accountant: with T=4 and words
+    whose only set bit is t0, exactly the 3 silent planes are counted —
+    and a full-temporal policy never counts anything."""
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=16,
+                    policy=ExecutionPolicy.for_arch(cfg,
+                                                    temporal=adaptive_t()))
+    engine.metrics.timesteps_skipped = 0
+    words = np.array([[1, 0, 0], [0, 0, 0]], np.uint32)  # one t0 spike
+    engine.record_timestep_skips(words)
+    assert engine.metrics.timesteps_skipped == cfg.spiking_T - 1
+    engine.record_timestep_skips(np.zeros((0,), np.uint32))  # empty: no-op
+    assert engine.metrics.timesteps_skipped == cfg.spiking_T - 1
+
+    full = Engine(model, params, max_len=16,
+                  policy=ExecutionPolicy.for_arch(cfg))
+    full.record_timestep_skips(words)
+    assert full.metrics.timesteps_skipped == 0
+    assert full.summary()["temporal"] == "full"

@@ -1,0 +1,179 @@
+"""Property tests for the packing helpers (`repro.core.packing`).
+
+These are the algebraic contracts the adaptive-temporal machinery leans on:
+
+- `popcount(pack_spikes(s))` is exactly the per-neuron spike count, so the
+  neuron-level activity scorer never needs the unpacked tensor;
+- `timestep_popcount(pack_spikes(s), T)` is exactly `s.sum()` per timestep
+  plane, so the timestep scorer (`timestep_activity_map`) is a faithful
+  device-side reduction of the original (T, ...) tensor;
+- both maskers are idempotent and `min_spikes=1` timestep masking is the
+  identity — the formal statement of "adaptive(min_spikes=1) is bitwise".
+
+Strategies draw T from the full supported range [1, 32] (MAX_T) plus
+density, so the all-silent and all-dense corners are hit both by dedicated
+tests and by the random sweep.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core.packing import (
+    MAX_T,
+    mask_low_activity,
+    mask_low_activity_timesteps,
+    pack_spikes,
+    popcount,
+    timestep_activity_map,
+    timestep_popcount,
+    unpack_spikes,
+)
+
+
+def _random_spikes(T: int, n: int, density: float, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return (rng.random((T, n)) < density).astype(np.float32)
+
+
+@settings(max_examples=30)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_popcount_equals_time_sum(T, density, seed):
+    """popcount(pack_spikes(s)) == s.sum(axis=0) for every neuron."""
+    s = _random_spikes(T, 64, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    np.testing.assert_array_equal(
+        np.asarray(popcount(packed)), s.sum(axis=0).astype(np.int32)
+    )
+
+
+@settings(max_examples=30)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_timestep_popcount_equals_plane_sum(T, density, seed):
+    """timestep_popcount(pack_spikes(s), T)[t] == s[t].sum() exactly."""
+    s = _random_spikes(T, 64, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    got = np.asarray(timestep_popcount(packed, T))
+    assert got.shape == (T,)
+    np.testing.assert_array_equal(got, s.sum(axis=1).astype(np.int32))
+
+
+@settings(max_examples=30)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_pack_unpack_roundtrip(T, density, seed):
+    s = _random_spikes(T, 48, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    np.testing.assert_array_equal(np.asarray(unpack_spikes(packed, T)), s)
+
+
+@settings(max_examples=25)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    min_spikes=st.integers(min_value=1, max_value=4),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_mask_low_activity_idempotent(T, min_spikes, density, seed):
+    """Masking an already-masked word changes nothing (neuron axis)."""
+    s = _random_spikes(T, 64, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    once = mask_low_activity(packed, min_spikes=min_spikes)
+    twice = mask_low_activity(once, min_spikes=min_spikes)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    # survivors still meet the threshold; victims are fully zeroed
+    pc = np.asarray(popcount(once))
+    assert np.all((pc == 0) | (pc >= min_spikes))
+
+
+@settings(max_examples=25)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    min_spikes=st.integers(min_value=1, max_value=4),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_mask_low_activity_timesteps_idempotent(T, min_spikes, density, seed):
+    """Masking an already-masked tensor changes nothing (timestep axis)."""
+    s = _random_spikes(T, 64, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    once = mask_low_activity_timesteps(packed, T, min_spikes=min_spikes)
+    twice = mask_low_activity_timesteps(once, T, min_spikes=min_spikes)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    # surviving planes still meet the threshold; dropped planes are zero
+    tpc = np.asarray(timestep_popcount(once, T))
+    assert np.all((tpc == 0) | (tpc >= min_spikes))
+
+
+@settings(max_examples=25)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    density=st.floats(min_value=0.0, max_value=1.0),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_mask_timesteps_min_spikes_1_is_identity(T, density, seed):
+    """min_spikes=1 keeps every plane with >=1 spike and only zeroes planes
+    that are already all-zero — i.e. it is the identity.  This is the
+    algebraic core of the bitwise guarantee for adaptive(min_spikes=1)."""
+    s = _random_spikes(T, 64, density, seed)
+    packed = pack_spikes(jnp.asarray(s))
+    masked = mask_low_activity_timesteps(packed, T, min_spikes=1)
+    np.testing.assert_array_equal(np.asarray(masked), np.asarray(packed))
+
+
+@pytest.mark.parametrize("T", [1, 3, 8, 16, MAX_T])
+def test_all_silent_edge(T):
+    """All-silent input: every plane scored inactive, masking is a no-op on
+    the zero word, popcounts are zero."""
+    packed = jnp.zeros((32,), jnp.uint32)
+    np.testing.assert_array_equal(
+        np.asarray(timestep_popcount(packed, T)), np.zeros((T,), np.int32)
+    )
+    assert not np.asarray(timestep_activity_map(packed, T)).any()
+    np.testing.assert_array_equal(
+        np.asarray(mask_low_activity_timesteps(packed, T, min_spikes=3)),
+        np.zeros((32,), np.uint32),
+    )
+
+
+@pytest.mark.parametrize("T", [1, 3, 8, 16, MAX_T])
+def test_all_dense_edge(T):
+    """All-dense input: every plane active at any threshold <= n, masking
+    preserves the word exactly (including at thresholds > 1)."""
+    s = np.ones((T, 16), np.float32)
+    packed = pack_spikes(jnp.asarray(s))
+    np.testing.assert_array_equal(
+        np.asarray(timestep_popcount(packed, T)), np.full((T,), 16, np.int32)
+    )
+    assert np.asarray(timestep_activity_map(packed, T, min_spikes=16)).all()
+    np.testing.assert_array_equal(
+        np.asarray(mask_low_activity_timesteps(packed, T, min_spikes=16)),
+        np.asarray(packed),
+    )
+
+
+def test_mask_timesteps_preserves_bits_above_T():
+    """Bits at positions >= T (not part of the logical trace) are never
+    touched by timestep masking — the mask word only covers [0, T)."""
+    # word with bit 7 set; logical T=4, plane threshold drops bits 0..3
+    packed = jnp.asarray([0b1000_0011], jnp.uint32)
+    masked = mask_low_activity_timesteps(packed, T=4, min_spikes=2)
+    # popcount per plane in [0,4) is 1 < 2 -> those bits cleared; bit 7 kept
+    assert int(np.asarray(masked)[0]) == 0b1000_0000
+
+
+def test_timestep_popcount_rejects_T_over_max():
+    with pytest.raises(ValueError):
+        timestep_popcount(jnp.zeros((4,), jnp.uint32), MAX_T + 1)
