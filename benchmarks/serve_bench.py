@@ -539,12 +539,94 @@ def bench_prefix_cache(
     return out
 
 
+def bench_drain(
+    batch=6, prompt_len=16, gen=12, max_slots=3, preempt_after=2,
+    drain_grace=4,
+) -> dict:
+    """Preemption-drain row: trigger a preemption notice mid-serve, drain
+    within ``drain_grace`` steps, hand off through an on-disk checkpoint,
+    and resume a successor engine.
+
+    The gates this row doubles as (`SystemExit` on failure): the drain
+    respects its grace budget, ZERO tokens are lost — every token the
+    preempted engine emitted rides the handoff and is re-asserted by the
+    successor's replay ledger (`Engine._resume_expect`) — and the
+    successor's results are token-identical to an engine that was never
+    preempted.
+    """
+    import tempfile
+    import time
+
+    from repro.configs import get_config, smoke_variant
+    from repro.ft import PreemptionHandler
+    from repro.models.registry import build_model
+    from repro.serve import Engine, Handoff
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    out = {"arch": "llama3_2_1b", "batch": batch, "prompt_len": prompt_len,
+           "gen": gen, "max_slots": max_slots,
+           "preempt_after_steps": preempt_after, "drain_grace": drain_grace}
+
+    ref = Engine(model, params, max_len=prompt_len + gen,
+                 max_slots=max_slots)
+    want = ref.generate_batch(prompts, gen)
+
+    h = PreemptionHandler(signals=())
+    victim = Engine(model, params, max_len=prompt_len + gen,
+                    max_slots=max_slots, preemption=h)
+    tickets = [victim.submit(p, gen) for p in prompts]
+    for _ in range(preempt_after):
+        victim.step()
+    h.trigger()
+    decode_batches_before = victim.metrics.n_decode_batches
+    t0 = time.perf_counter()
+    handoff = victim.drain(step_budget=drain_grace)
+    out["drain_wall_s"] = time.perf_counter() - t0
+    grace_used = victim.metrics.n_decode_batches - decode_batches_before
+    out["grace_steps_used"] = grace_used
+    # each grace step decodes every live cohort once (at most max_slots
+    # cohorts exist), so the decode-batch delta bounds the steps taken
+    if grace_used > drain_grace * max_slots:
+        raise SystemExit(
+            f"drain overran its grace: {grace_used} decode batches after "
+            f"the notice, budget {drain_grace} steps x {max_slots} cohorts"
+        )
+    c = handoff.counts()
+    out["handoff"] = c
+    if c["waiting"] + c["inflight"] + c["finished"] != batch:
+        raise SystemExit(f"handoff lost requests: {c} != {batch} submitted")
+
+    with tempfile.TemporaryDirectory() as d:
+        handoff.save(d)
+        loaded = Handoff.load(d)
+    t0 = time.perf_counter()
+    successor = Engine.resume(model, params, loaded)
+    got = successor.run()           # ParityError here = a token was lost
+    out["resume_wall_s"] = time.perf_counter() - t0
+    out["tokens_preserved"] = c["tokens_in_flight"]
+    out["token_identical"] = all(
+        np.array_equal(got[t.rid], w) for t, w in zip(tickets, want)
+    )
+    if not out["token_identical"]:  # the row doubles as a CI identity gate
+        raise SystemExit(
+            "drain/resume broke token identity vs an undisturbed engine"
+        )
+    return out
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
     rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
                 "--no-sharded-row", "--no-approx-row", "--no-pipelined-row",
-                "--no-prefix-row", "--no-adaptive-row"])
+                "--no-prefix-row", "--no-adaptive-row", "--no-drain-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -582,6 +664,8 @@ def main(argv=None):
                     help="skip the paged + prefix-reuse arrival-trace row")
     ap.add_argument("--no-adaptive-row", action="store_true",
                     help="skip the adaptive temporal-sparsity serving row")
+    ap.add_argument("--no-drain-row", action="store_true",
+                    help="skip the preemption drain/handoff/resume row")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -652,6 +736,16 @@ def main(argv=None):
               f"({at['adaptive_speedup']:.2f}x, "
               f"timesteps_skipped={at['timesteps_skipped']}, "
               f"token_identical={at['token_identical']})")
+    if not args.no_drain_row:
+        dr = bench_drain()
+        report["bench_drain"] = dr
+        print(f"  drain/resume: preempted after "
+              f"{dr['preempt_after_steps']} steps, grace "
+              f"{dr['drain_grace']} -> {dr['handoff']['finished']} finished "
+              f"+ {dr['handoff']['inflight']} in-flight "
+              f"({dr['tokens_preserved']} tokens preserved) + "
+              f"{dr['handoff']['waiting']} waiting; resume "
+              f"token_identical={dr['token_identical']}")
     if not args.no_prefix_row:
         pc = bench_prefix_cache()
         report["bench_prefix_cache"] = pc

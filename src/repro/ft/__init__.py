@@ -1,5 +1,11 @@
 from .preemption import PreemptionHandler
 from .straggler import StepTimer
-from .elastic import plan_mesh, reshard_state
+from .elastic import plan_mesh, plan_serve_mesh, reshard_state
 
-__all__ = ["PreemptionHandler", "StepTimer", "plan_mesh", "reshard_state"]
+__all__ = [
+    "PreemptionHandler",
+    "StepTimer",
+    "plan_mesh",
+    "plan_serve_mesh",
+    "reshard_state",
+]

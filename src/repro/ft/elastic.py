@@ -30,6 +30,35 @@ def plan_mesh(n_chips: int, model_parallel: int = 16, devices=None) -> Mesh:
     return Mesh(dev.reshape(shape), axes)
 
 
+def plan_serve_mesh(devices, model_parallel: int = 1) -> Mesh | None:
+    """Serve-side re-mesh planner: the largest ``(data, model)`` mesh the
+    surviving devices support at (up to) the requested TP degree.
+
+    Unlike the trainer's `plan_mesh`, survivors after a device loss rarely
+    divide evenly: the TP degree shrinks to the largest power-of-two
+    divisor it can keep, and trailing devices that don't fill a data row
+    are left idle.  Returns None when only one device is usable — the
+    engine's single-device (unsharded) mode.
+    """
+    devices = list(devices)
+    if not devices:
+        raise ValueError("no surviving devices to plan a serve mesh over")
+    n = len(devices)
+    mp = max(1, model_parallel)
+    while mp > 1 and n < mp:
+        mp //= 2
+    usable = (n // mp) * mp
+    if usable <= 1:
+        return None
+    mesh = plan_mesh(usable, model_parallel=mp, devices=devices[:usable])
+    if "pod" in mesh.axis_names:  # serving has no pod axis: fold into data
+        mesh = Mesh(
+            np.asarray(devices[:usable]).reshape(usable // mp, mp),
+            ("data", "model"),
+        )
+    return mesh
+
+
 def reshard_state(state_host, axes_tree, mesh: Mesh, rules: dict):
     """Place a host-side state pytree onto `mesh` per the logical axes."""
     shapes = jax.tree.map(

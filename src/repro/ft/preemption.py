@@ -28,5 +28,13 @@ class PreemptionHandler:
         self._flag = True
 
     def restore(self):
+        """Reinstate the previous signal handlers.  Mirrors `__init__`'s
+        non-main-thread guard (signal.signal raises ValueError there), and
+        clears `_old` so a double `restore()` is a no-op instead of
+        re-restoring handlers that may have been replaced since."""
         for s, h in self._old.items():
-            signal.signal(s, h)
+            try:
+                signal.signal(s, h)
+            except ValueError:
+                pass  # non-main thread (tests)
+        self._old = {}

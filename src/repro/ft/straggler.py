@@ -26,7 +26,13 @@ class StepTimer:
         return self
 
     def __exit__(self, *exc):
-        dt = time.monotonic() - self._t0
+        self.observe(time.monotonic() - self._t0)
+        return False
+
+    def observe(self, dt: float):
+        """Feed one externally-measured step time (same detection rule as
+        the context-manager path).  The serving executor uses this to fold
+        `EngineMetrics.stage_s` deltas in without owning the clock."""
         med = self.median()
         self.window.append(dt)
         if med is not None and dt > self.threshold * med:
@@ -34,7 +40,6 @@ class StepTimer:
             self.events.append(ev)
             if self.on_straggler:
                 self.on_straggler(ev)
-        return False
 
     def median(self):
         if len(self.window) < 5:

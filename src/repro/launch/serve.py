@@ -191,6 +191,29 @@ def main(argv=None):
                     help="force this many fake XLA host devices (must be "
                          "set before the jax backend initializes; CPU-only "
                          "mesh testing)")
+    # -- preemption / handoff (ft.preemption + serve/handoff.py) -------------
+    ap.add_argument("--handoff-path", default=None,
+                    help="directory for the drain handoff: a SIGTERM (or "
+                         "--preempt-after) closes admission, drains "
+                         "in-flight cohorts within --drain-grace steps, "
+                         "and checkpoints scheduler state here; with "
+                         "--resume, the directory to resume FROM")
+    ap.add_argument("--drain-grace", type=int, default=0,
+                    help="max engine steps granted to in-flight cohorts "
+                         "after a preemption notice (0 = run them to "
+                         "completion); unfinished requests ride the "
+                         "handoff")
+    ap.add_argument("--preempt-after", type=int, default=0,
+                    help="testing hook: deliver the preemption notice via "
+                         "PreemptionHandler.trigger() after this many "
+                         "engine steps (0 = only real SIGTERM preempts)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a successor engine from --handoff-path "
+                         "instead of submitting fresh requests")
+    ap.add_argument("--verify-resume", action="store_true",
+                    help="with --resume: replay ALL handoff requests on an "
+                         "undisturbed reference engine and exit nonzero "
+                         "unless the resumed results are token-identical")
     args = ap.parse_args(argv)
 
     if args.fake_devices:
@@ -236,6 +259,57 @@ def main(argv=None):
                    np.int32)
         for _ in range(args.batch)
     ]
+    if args.resume:
+        if not args.handoff_path:
+            raise SystemExit("--resume requires --handoff-path")
+        from repro.serve import Handoff
+
+        handoff = Handoff.load(args.handoff_path)
+        c = handoff.counts()
+        print(f"resuming from {args.handoff_path}: {c['waiting']} waiting + "
+              f"{c['inflight']} in-flight ({c['tokens_in_flight']} tokens "
+              f"already emitted) + {c['finished']} finished")
+        engine = Engine.resume(
+            model, params, handoff,
+            policy=policy,
+            batch_align=args.batch_align,
+            pipeline_depth=args.pipeline_depth,
+        )
+        out = engine.run()
+        s = engine.summary()
+        print(f"resumed {len(out)} results "
+              f"({sum(len(v) for v in out.values())} tokens total)")
+        if args.verify_resume:
+            ref = Engine(
+                model, params,
+                max_len=handoff.meta["max_len"],
+                max_slots=handoff.meta["max_slots"],
+                eos_id=handoff.meta["eos_id"],
+                batch_align=args.batch_align,
+                policy=policy,
+                pipeline_depth=args.pipeline_depth,
+            )
+            tickets = [ref.submit(r.prompt, r.max_new_tokens)
+                       for r in handoff.requests]
+            ref_out = ref.run()
+            for r, t in zip(handoff.requests, tickets):
+                if not np.array_equal(out[r.rid], ref_out[t.rid]):
+                    raise SystemExit(
+                        f"RESUME IDENTITY FAILED: rid {r.rid} "
+                        f"{out[r.rid][:8]} != {ref_out[t.rid][:8]}"
+                    )
+            print(f"resume identity: {len(tickets)} requests "
+                  "token-identical to an undisturbed engine")
+        print("summary:", json.dumps(
+            {k: round(v, 4) if isinstance(v, float) else v
+             for k, v in s.items()}))
+        return 0
+
+    preemption = None
+    if args.handoff_path:
+        from repro.ft import PreemptionHandler
+
+        preemption = PreemptionHandler()
     engine = Engine(
         model,
         params,
@@ -244,8 +318,36 @@ def main(argv=None):
         batch_align=args.batch_align,
         policy=policy,
         pipeline_depth=args.pipeline_depth,
+        preemption=preemption,
     )
-    outs = engine.generate_batch(prompts, args.gen)
+    if preemption is not None:
+        tickets = [engine.submit(p, args.gen) for p in prompts]
+        n_steps = 0
+        while not engine.idle and not engine.stopping:
+            if args.preempt_after and n_steps == args.preempt_after:
+                preemption.trigger()
+                break
+            engine.step()
+            n_steps += 1
+        if engine.stopping:
+            handoff = engine.drain(step_budget=args.drain_grace or None)
+            handoff.save(args.handoff_path)
+            c = handoff.counts()
+            print(f"preempted after {n_steps} steps; drained within "
+                  f"grace {args.drain_grace or 'unbounded'}: "
+                  f"{c['finished']} finished, {c['inflight']} in-flight "
+                  f"({c['tokens_in_flight']} tokens preserved), "
+                  f"{c['waiting']} waiting -> {args.handoff_path}")
+            print("summary:", json.dumps(
+                {k: round(v, 4) if isinstance(v, float) else v
+                 for k, v in engine.summary().items()}))
+            preemption.restore()
+            return 0
+        preemption.restore()
+        out = engine.run()
+        outs = [out[t.rid] for t in tickets]
+    else:
+        outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()
     if not policy.token_identical:
         # measure drift against a bitwise single-device run of the same

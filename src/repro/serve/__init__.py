@@ -25,6 +25,7 @@ from .batching import (
 )
 from .engine import Cohort, Engine
 from .executor import PipelinedExecutor, SyncExecutor, make_executor
+from .handoff import Handoff, HandoffRequest, capture_handoff
 from .metrics import EngineMetrics, RequestMetrics
 from .paging import (
     CacheStore,
@@ -72,6 +73,8 @@ __all__ = [
     "EngineMetrics",
     "Exactness",
     "ExecutionPolicy",
+    "Handoff",
+    "HandoffRequest",
     "PackedSpikeCache",
     "PageLayout",
     "PagePoolExhausted",
@@ -98,6 +101,7 @@ __all__ = [
     "cache_concat",
     "cache_pad_rows",
     "cache_take",
+    "capture_handoff",
     "check_parity",
     "drift_report",
     "make_executor",

@@ -145,6 +145,7 @@ class Engine:
         pipeline_depth: int = 2,
         page_pool_rows: int | None = None,   # paging='paged': pool capacity
         prefix_cache: bool | None = None,    # paging='paged': radix index
+        preemption=None,                     # ft.preemption.PreemptionHandler
         spiking_packed: bool | None = None,  # deprecated -> policy
         dual_sparse: bool | None = None,     # deprecated -> policy
         mesh=None,                           # deprecated -> policy.placement
@@ -159,11 +160,18 @@ class Engine:
         self.policy = policy
         mesh = policy.mesh
         self.model = model
-        self.params = params
+        # the UNTRANSFORMED host param tree: `_configure_placement` derives
+        # self.params (sharded, join plans attached) from it, and `remesh`
+        # re-derives from it for a different mesh
+        self._base_params = params
         self.cfg = cfg
         self.max_len = max_len
         self.eos_id = eos_id
         self.mesh = mesh
+        # preemption drain (ft/preemption.py): when the handler's
+        # should_stop flips, step() closes admission and run() returns so
+        # the owner can call drain() -> Handoff (serve/handoff.py)
+        self.preemption = preemption
         # Logit traces (rid -> [last-position logits per emitted token]):
         # captured by default under approximate exactness, where drift vs. a
         # bitwise reference is the contract being measured (check_parity).
@@ -179,12 +187,7 @@ class Engine:
         self.logit_trace_window = logit_trace_window
         self.logit_traces: dict[int, list[np.ndarray]] = {}
         self.row_independent = cfg.n_experts == 0
-        self.batch_align = batch_align if self.row_independent else 1
-        if mesh is not None and self.row_independent:
-            # admission alignment: pad prefill batches up to the data axis
-            # so fresh cohorts shard evenly down the mesh from step one
-            dn = mesh.shape.get("data", 1)
-            self.batch_align = max(self.batch_align, dn)
+        self._user_batch_align = batch_align
         self.merge_cohorts = merge_cohorts and self.row_independent
         self.metrics = EngineMetrics()
         self._axes = model.cache_axes()
@@ -240,46 +243,82 @@ class Engine:
         )
         self.cohorts: list[Cohort] = []
         self.results: dict[int, RequestState] = {}
+        # resume replay ledger (serve/handoff.py): rid -> the tokens the
+        # predecessor already emitted; _finish asserts the replayed prefix
+        self._resume_expect: dict[int, np.ndarray] = {}
+        self.handoff_prefix_keys: list[np.ndarray] = []
+        self.spiking_packed = policy.spike_format == "packed"
+        # Dual-sparse packed-spike serving (the `for_arch` default for
+        # pruned spiking archs): at load time (once per placement) the LTH
+        # hard zeros in the stored params become per-layer weight join
+        # plans; per-request only the spike side of the join runs, on
+        # device, inside the kernel.
+        self.spiking_dual_sparse = policy.weight_sparsity == "dual_sparse"
+        self._last_spike_sparsity = float("nan")
+        self._spike_pool = None
+        if self.paged and self.spiking_packed:
+            from .paging import SpikeSlotPool
+
+            self._spike_pool = SpikeSlotPool(
+                self.cfg.d_model,
+                (page_pool_rows if page_pool_rows is not None
+                 else 2 * max_slots + 4),
+            )
+        self._configure_placement(policy)
+        self.executor = make_executor(self, policy, depth=pipeline_depth)
+
+    def _configure_placement(self, policy: ExecutionPolicy) -> None:
+        """(Re)derive every placement-dependent attribute from ``policy``:
+        admission batch alignment, params placement (model-axis sharding
+        BEFORE join plans attach, while the tree still matches the model's
+        logical-axes tree), and the jitted dispatch callables — which
+        capture the mesh at trace time and therefore must be rebuilt on
+        `remesh`.  Always derives from `_base_params`, so re-configuring
+        is idempotent and mesh-agnostic."""
+        self.policy = policy
+        mesh = policy.mesh
+        self.mesh = mesh
+        self.batch_align = (
+            self._user_batch_align if self.row_independent else 1
+        )
+        if mesh is not None and self.row_independent:
+            # admission alignment: pad prefill batches up to the data axis
+            # so fresh cohorts shard evenly down the mesh from step one
+            dn = mesh.shape.get("data", 1)
+            self.batch_align = max(self.batch_align, dn)
+        params = self._base_params
         if mesh is not None:
             # weights on the model axis; the POLICY picks the dim set —
             # reduction-free under bitwise exactness, psum-TP attention/MLP
-            # dims under approximate (see serve/sharding.py).  Must happen
-            # BEFORE plans attach, while the param tree still matches the
-            # model's logical-axes tree.
+            # dims under approximate (see serve/sharding.py)
             from .sharding import shard_params
 
-            self.params = shard_params(
-                self.params, model.axes(), mesh,
+            params = shard_params(
+                params, self.model.axes(), mesh,
                 sharded_dims=policy.model_sharded_dims(),
             )
-        self.spiking_packed = policy.spike_format == "packed"
-        # Dual-sparse packed-spike serving (the `for_arch` default for
-        # pruned spiking archs): at load time (here, once) the LTH hard
-        # zeros in the stored params become per-layer weight join plans;
-        # per-request only the spike side of the join runs, on device,
-        # inside the kernel.
-        self.spiking_dual_sparse = policy.weight_sparsity == "dual_sparse"
         if self.spiking_dual_sparse:
             from repro.models.layers import attach_spiking_ffn_plans
 
             shards = mesh.shape.get("model", 1) if mesh is not None else 1
-            self.params = attach_spiking_ffn_plans(
-                self.params, cfg, model_shards=shards
+            params = attach_spiking_ffn_plans(
+                params, self.cfg, model_shards=shards
             )
             if mesh is not None:
                 from .sharding import place_plans
 
-                self.params = place_plans(self.params, mesh)
+                params = place_plans(params, mesh)
+        self.params = params
         # cache donation: each call consumes its cache and returns the
         # successor, so the buffer can be updated in place on accelerators
         self._prefill = self._engine_scope(
-            jax.jit(model.prefill, donate_argnums=(2,))
+            jax.jit(self.model.prefill, donate_argnums=(2,))
         )
         self._decode = self._engine_scope(
-            jax.jit(model.decode, donate_argnums=(2,))
+            jax.jit(self.model.decode, donate_argnums=(2,))
         )
-        self._last_spike_sparsity = float("nan")
         if self.spiking_packed:
+            cfg = self.cfg
             self._encode_pack = jax.jit(
                 lambda p, toks: pack_spikes(
                     direct_encode(
@@ -287,30 +326,20 @@ class Engine:
                     )
                 )
             )
-        self._spike_pool = None
         if self.paged:
             # paged model wrappers: gather page tables -> dense view ->
             # unchanged model fn -> scatter written pages (serve/paging.py).
             # Pools are donated so the scatter updates them in place.
             self._paged_prefill = self._engine_scope(jax.jit(
                 self._page_layout.make_prefill(
-                    model, max_len, self.mesh, self._axes
+                    self.model, self.max_len, mesh, self._axes
                 ),
                 donate_argnums=(2,),
             ))
             self._paged_decode = self._engine_scope(jax.jit(
-                self._page_layout.make_decode(model, self.mesh, self._axes),
+                self._page_layout.make_decode(self.model, mesh, self._axes),
                 donate_argnums=(2,),
             ))
-            if self.spiking_packed:
-                from .paging import SpikeSlotPool
-
-                self._spike_pool = SpikeSlotPool(
-                    self.cfg.d_model,
-                    (page_pool_rows if page_pool_rows is not None
-                     else 2 * max_slots + 4),
-                )
-        self.executor = make_executor(self, policy, depth=pipeline_depth)
 
     @staticmethod
     def _resolve_policy(cfg, policy, spiking_packed, dual_sparse, mesh):
@@ -385,13 +414,28 @@ class Engine:
     def idle(self) -> bool:
         return not self.cohorts and self.scheduler.queue_depth == 0
 
+    @property
+    def stopping(self) -> bool:
+        """True once a preemption notice landed (or admission was closed
+        by `drain`): `run()` returns and the owner should `drain()`."""
+        return (
+            (self.preemption is not None and self.preemption.should_stop)
+            or self.scheduler.closed
+        )
+
     # -- engine steps -------------------------------------------------------
     def new_cohort(self, **kw) -> Cohort:
         """Cohort factory for the executor (keeps `Cohort` engine-owned)."""
         return Cohort(**kw)
 
     def step(self) -> dict:
-        """One engine iteration — delegated to the policy's executor."""
+        """One engine iteration — delegated to the policy's executor.
+        When a preemption notice is pending, admission closes first so the
+        step only advances in-flight cohorts (new submits are rejected
+        with a ``draining`` ticket)."""
+        if (self.preemption is not None and self.preemption.should_stop
+                and not self.scheduler.closed):
+            self.scheduler.close()
         return self.executor.step()
 
     def flush(self) -> None:
@@ -402,8 +446,10 @@ class Engine:
         self.executor.drain()
 
     def run(self) -> dict[int, np.ndarray]:
-        """Drive steps until drained; returns {rid: generated tokens}."""
-        while not self.idle:
+        """Drive steps until drained; returns {rid: generated tokens}.
+        Returns early (with partial results) once `stopping` flips — the
+        preemption path; the owner then calls `drain()` for the handoff."""
+        while not self.idle and not self.stopping:
             self.step()
         return {
             rid: np.asarray(st.generated, np.int32)
@@ -417,6 +463,170 @@ class Engine:
         reqs = [self.submit(p, max_new_tokens) for p in prompts]
         out = self.run()
         return [out[r.rid] for r in reqs]
+
+    # -- preemption drain / handoff / resume (serve/handoff.py) --------------
+    def drain(self, *, step_budget: int | None = None):
+        """Preemption drain: close admission, run in-flight cohorts to
+        completion (or for at most ``step_budget`` more steps — the drain
+        grace), then tear down and return the `Handoff` a successor
+        engine resumes from.
+
+        Zero tokens are lost: every dispatched decode is materialized
+        (`flush`) before in-flight progress is captured, finished results
+        ride the handoff as data, and unfinished/waiting requests are
+        re-queued on the successor for deterministic replay."""
+        from .handoff import capture_handoff
+
+        self.scheduler.close()
+        budget = step_budget
+        while self.cohorts and (budget is None or budget > 0):
+            self.step()
+            if budget is not None:
+                budget -= 1
+        self.flush()           # land every in-flight pipelined step
+        self.executor.retire()  # requests that finished during the grace
+        inflight: list[RequestState] = []
+        for cohort in self.cohorts:  # grace expired with live requests
+            inflight.extend(cohort.slots)
+            self.scheduler.release(len(cohort.slots))
+            self.release_cohort(cohort)
+        self.cohorts = []
+        drained = self.scheduler.drain()
+        self.metrics.n_drained += len(inflight) + len(drained)
+        return capture_handoff(self, drained, inflight)
+
+    @classmethod
+    def resume(cls, model, params, handoff, **engine_kwargs) -> "Engine":
+        """Build a successor engine from a drain handoff.
+
+        Engine geometry (max_len/max_slots/max_queue/bucket_align/eos_id)
+        defaults to the predecessor's recorded values; ``policy`` and any
+        override ride ``engine_kwargs``.  Finished results are pre-loaded
+        (they were already recorded by the predecessor — they are not
+        re-counted in this engine's metrics); waiting and in-flight
+        requests re-queue under their ORIGINAL rids with full budgets —
+        deterministic replay, which under a bitwise policy reproduces the
+        predecessor's tokens exactly.  Each in-flight request's handed-off
+        progress is asserted against its replay at finish (`_finish`), so
+        a lost token is an error, not a silent truncation."""
+        meta = handoff.meta
+        engine_kwargs.setdefault("max_len", meta["max_len"])
+        engine_kwargs.setdefault("max_slots", meta["max_slots"])
+        engine_kwargs.setdefault("max_queue", meta["max_queue"])
+        engine_kwargs.setdefault("bucket_align", meta["bucket_align"])
+        engine_kwargs.setdefault("eos_id", meta["eos_id"])
+        eng = cls(model, params, **engine_kwargs)
+        eng.handoff_prefix_keys = [
+            np.asarray(k, np.int32) for k in handoff.prefix_keys
+        ]
+        eng.scheduler.reserve_ids(handoff.max_rid + 1)
+        for hr in handoff.requests:
+            req = Request(
+                hr.rid, np.asarray(hr.prompt, np.int32), hr.max_new_tokens
+            )
+            if hr.state == "finished":
+                st = RequestState(req)
+                st.generated = [int(t) for t in hr.generated]
+                st.finish_reason = hr.finish_reason
+                st.first_token_time = st.finish_time = req.submit_time
+                eng.results[hr.rid] = st
+                continue
+            eng.scheduler.restore(req)
+            if (hr.state == "inflight" and hr.generated.size
+                    and eng.policy.token_identical):
+                eng._resume_expect[hr.rid] = np.asarray(
+                    hr.generated, np.int32
+                )
+        return eng
+
+    # -- elastic re-mesh (ft/elastic.py) -------------------------------------
+    def remesh(self, devices=None, *, mesh=None,
+               model_parallel: int | None = None) -> dict:
+        """Re-plan the serve mesh for a changed device set and re-shard
+        LIVE: params and `WeightJoinPlan` column slabs re-derive from the
+        base tree through the same mesh-agnostic rules as construction,
+        dispatch re-jits (the old traces captured the old mesh), and paged
+        caches survive as page-table re-splits — pool arrays re-place, no
+        page is copied (`EngineMetrics.n_page_moves` unchanged; the test
+        asserts the zero delta).  Dense cohort caches re-place lazily at
+        their next dispatch.  Bitwise policies stay token-identical across
+        the re-mesh (reduction-free placement is mesh-size-invariant).
+
+        Pass surviving ``devices`` (planned via `ft.elastic.plan_serve_mesh`
+        at the current — or ``model_parallel`` — TP degree), or an explicit
+        ``mesh`` (None = single-device).  Returns a summary dict."""
+        from .policy import Placement
+        from .sharding import mesh_summary
+
+        if mesh is None and devices is not None:
+            from repro.ft.elastic import plan_serve_mesh
+
+            mp = model_parallel
+            if mp is None:
+                mp = (self.mesh.shape.get("model", 1)
+                      if self.mesh is not None else 1)
+            mesh = plan_serve_mesh(list(devices), model_parallel=mp)
+        elif mesh is None and devices is None:
+            raise ValueError("remesh needs devices=... or mesh=...")
+        old = self.mesh
+        unchanged = (
+            (mesh is None and old is None)
+            or (mesh is not None and old is not None
+                and dict(mesh.shape) == dict(old.shape)
+                and list(mesh.devices.flat) == list(old.devices.flat))
+        )
+        if unchanged:
+            return {"remeshed": False, **mesh_summary(old)}
+        import dataclasses
+
+        new_policy = dataclasses.replace(
+            self.policy,
+            placement=Placement(
+                mesh=mesh, model_dims=self.policy.placement.model_dims
+            ),
+        )
+        new_policy.validate_for(self.cfg)
+        # host-truth every deferred device artifact before placement flips:
+        # pending pipelined steps, device token feedback, async spike words
+        self.flush()
+        for cohort in self.cohorts:
+            cohort.next_tokens = None  # rebuilt from host state next decode
+            if cohort.spikes is not None:
+                cohort.spikes._sync()
+            # cohort device state still lives on the OLD device set; a jit
+            # on the new mesh cannot mix the two, so hop through the host.
+            # Paged cohorts only carry their position locals (tables are
+            # host arrays, pages live in the re-placed pools); dense
+            # cohorts round-trip the cache itself (dense remesh cannot
+            # avoid moving cache bytes — that's what paging buys).
+            if self.paged:
+                cohort.cache.locals = [
+                    jnp.asarray(np.asarray(x)) for x in cohort.cache.locals
+                ]
+            else:
+                cohort.cache = jax.tree.map(
+                    lambda a: jnp.asarray(np.asarray(a)), cohort.cache
+                )
+        moves_before = self.metrics.n_page_moves
+        self._configure_placement(new_policy)
+        if self.paged:
+            # page-table re-split: pool arrays re-place onto the new mesh
+            # (or back to single-device); tables/refcounts/free lists are
+            # host state and survive untouched — zero page copies
+            from .sharding import place_pool
+
+            self.store.mesh = mesh
+            self.store.pools = {
+                k: (place_pool(jnp.asarray(np.asarray(v)), mesh)
+                    if mesh is not None
+                    else jnp.asarray(np.asarray(v)))
+                for k, v in self.store.pools.items()
+            }
+        assert self.metrics.n_page_moves == moves_before, (
+            "remesh must not copy cache pages"
+        )
+        self.metrics.n_remeshes += 1
+        return {"remeshed": True, **mesh_summary(mesh)}
 
     # -- executor services --------------------------------------------------
     def _slot_spikes(self, cohort: Cohort) -> np.ndarray:
@@ -555,7 +765,18 @@ class Engine:
     def admit_prefix_hits(self, group: list) -> None:
         """Admit one same-length prefix-hit group [(Request, PrefixEntry)]
         as a cohort with the shared pages materialized: no prefill runs;
-        each request's first token is the entry's cached greedy token."""
+        each request's first token is the entry's cached greedy token.
+
+        The scheduler's submit-time pins are held through admission and
+        released in the ``finally`` — pool pressure from this admit (or an
+        earlier group's, in the same step) must never evict an entry that
+        a selected-but-not-yet-admitted hit still needs."""
+        try:
+            self._admit_prefix_hits_pinned(group)
+        finally:
+            self.scheduler.release_hit_pins(group)
+
+    def _admit_prefix_hits_pinned(self, group: list) -> None:
         from .paging import PagedCache
 
         P = group[0][0].prompt_len
@@ -639,6 +860,20 @@ class Engine:
                 del trace[: len(trace) - w]
 
     def _finish(self, st: RequestState) -> None:
+        expect = self._resume_expect.pop(st.rid, None)
+        if expect is not None:
+            # zero-tokens-lost gate: the replayed stream must extend the
+            # predecessor's handed-off progress exactly (bitwise policies
+            # only — `resume` records the ledger under that contract)
+            got = np.asarray(st.generated[: expect.shape[0]], np.int32)
+            if not np.array_equal(got, expect):
+                from .policy import ParityError
+
+                raise ParityError(
+                    f"resumed request {st.rid} diverged from its handoff "
+                    f"progress: replayed {got.tolist()} vs handed-off "
+                    f"{expect.tolist()}"
+                )
         self.results[st.rid] = st
         req = st.request
         self.metrics.record(RequestMetrics(
@@ -656,6 +891,7 @@ class Engine:
 
         s = self.metrics.summary()
         s["rejected"] = self.scheduler.n_rejected
+        s["admission_closed"] = self.scheduler.closed
         s.update(mesh_summary(self.mesh))
         s["policy"] = self.policy.describe()
         s["exactness"] = self.policy.exactness.mode

@@ -122,7 +122,7 @@ class SyncExecutor:
         per cohort, retire."""
         e = self.engine
         t0 = time.perf_counter()
-        e.metrics.queue_depth_samples.append(e.scheduler.queue_depth)
+        e.metrics.sample_queue_depth(e.scheduler.queue_depth)
         with self._clock("admit"):
             # prefix hits first: they are prefill-free admissions, so they
             # use free slots at page-table cost before any prefill batch
@@ -310,7 +310,8 @@ class PipelinedExecutor(SyncExecutor):
 
     name = "pipelined"
 
-    def __init__(self, engine, depth: int = 2):
+    def __init__(self, engine, depth: int = 2,
+                 straggler_threshold: float = 3.0):
         super().__init__(engine)
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
@@ -324,6 +325,47 @@ class PipelinedExecutor(SyncExecutor):
             # keeping the on-device token feedback (value-identical).
             depth = 1
         self.depth = depth
+        # straggler fold (ft/straggler.py): the per-step decode-stage delta
+        # from EngineMetrics.stage_s feeds the robust-median detector; a
+        # detection forces every cohort through the rebalance re-pack at
+        # the end of that step instead of letting a slow shard silently
+        # stretch each subsequent decode
+        from repro.ft.straggler import StepTimer
+
+        self.step_timer = StepTimer(
+            window=32, threshold=straggler_threshold,
+            on_straggler=self._on_straggler,
+        )
+        self._force_repack = False
+
+    def _on_straggler(self, event: dict) -> None:
+        self.engine.metrics.n_straggler_events += 1
+        self._force_repack = True
+
+    def step(self) -> dict:
+        e = self.engine
+        decode_before = e.metrics.stage_s.get("decode", 0.0)
+        out = super().step()
+        decode_delta = e.metrics.stage_s.get("decode", 0.0) - decode_before
+        if decode_delta > 0.0:  # only steps that actually decoded
+            self.step_timer.observe(decode_delta)
+        if self._force_repack:
+            self._force_repack = False
+            self.repack()
+        return out
+
+    def repack(self) -> None:
+        """Straggler response: flush and re-pack every cohort through the
+        load-skew rebalance path — dummy rows re-pad to the data-axis
+        multiple so the next decode re-splits rows evenly across shards.
+        Row-placement only (dummy rows are discarded outputs), so token
+        identity is untouched."""
+        e = self.engine
+        for cohort in e.cohorts:
+            self.flush(cohort)
+            cohort.cache = e._live_cache(cohort)
+            cohort.next_tokens = None
+            self.rebalance(cohort)
 
     def decode_cohort(self, cohort) -> None:
         """decode (dispatch-only) -> encode (double-buffered) -> drain

@@ -1,0 +1,202 @@
+"""Preemption handoff: the scheduler/request state one engine checkpoints
+at drain so a successor engine continues token-identically.
+
+What rides the handoff (and why it is enough for bitwise identity):
+
+* every *waiting* request (both scheduler lanes) — re-queued verbatim;
+* every *in-flight but unfinished* request with its progress so far — the
+  successor re-runs it from the ORIGINAL prompt with its full token
+  budget.  Greedy decoding under a bitwise `ExecutionPolicy` is
+  deterministic and batch-invariant on independent rows, so deterministic
+  replay reproduces the predecessor's tokens exactly; the recorded
+  progress is the zero-tokens-lost ledger the successor asserts its
+  replayed prefix against (`Engine._finish`).  Re-prefilling the original
+  prompt is the only splice that is *bitwise* safe: prefill(prompt +
+  generated) is not guaranteed bit-equal to prefill(prompt) + decode
+  steps on every arch, so the handoff never splices caches;
+* every *finished* result — carried as data, pre-loaded into the
+  successor's result map (their device state is gone and irrelevant);
+* the radix prefix index's snapshot KEYS (published prompts) — page
+  contents are device state and are rebuilt on first cold serve; the keys
+  make the successor's warm-up observable (`Engine.handoff_prefix_keys`).
+
+Storage rides `ckpt/checkpoint.py` (atomic rename, manifest + one .npy
+per leaf) with a `handoff.json` sidecar for the scalar request metadata,
+so a crash mid-save never corrupts an existing handoff.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.ckpt.checkpoint import restore_checkpoint, save_checkpoint
+
+_STEP = 0  # a handoff directory holds exactly one checkpoint
+
+
+@dataclass
+class HandoffRequest:
+    """One request's portable state: ``state`` is where it was at drain —
+    ``"waiting"`` (never admitted), ``"inflight"`` (admitted, unfinished;
+    ``generated`` holds its progress), or ``"finished"`` (``generated`` is
+    the complete output)."""
+
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    state: str                      # waiting | inflight | finished
+    generated: np.ndarray = field(
+        default_factory=lambda: np.zeros((0,), np.int32)
+    )
+    finish_reason: str | None = None
+    prefix_hit: bool = False
+
+
+@dataclass
+class Handoff:
+    """Everything a successor `Engine.resume` needs, plus bookkeeping."""
+
+    requests: list[HandoffRequest]
+    prefix_keys: list[np.ndarray] = field(default_factory=list)
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def max_rid(self) -> int:
+        return max((r.rid for r in self.requests), default=-1)
+
+    def counts(self) -> dict:
+        c = {"waiting": 0, "inflight": 0, "finished": 0}
+        for r in self.requests:
+            c[r.state] += 1
+        c["prefix_keys"] = len(self.prefix_keys)
+        c["tokens_in_flight"] = sum(
+            len(r.generated) for r in self.requests if r.state == "inflight"
+        )
+        return c
+
+    # -- persistence ---------------------------------------------------------
+    def _arrays(self) -> dict[str, np.ndarray]:
+        out: dict[str, np.ndarray] = {}
+        for r in self.requests:
+            out[f"req_{r.rid:08d}_prompt"] = np.asarray(r.prompt, np.int32)
+            out[f"req_{r.rid:08d}_gen"] = np.asarray(r.generated, np.int32)
+        for i, k in enumerate(self.prefix_keys):
+            out[f"prefix_{i:06d}"] = np.asarray(k, np.int32)
+        return out
+
+    def save(self, directory: str) -> str:
+        """Write the handoff under ``directory`` (atomic per
+        `ckpt.checkpoint.save_checkpoint`); returns the checkpoint path."""
+        arrays = self._arrays()
+        os.makedirs(directory, exist_ok=True)
+        sidecar = {
+            "version": 1,
+            "meta": self.meta,
+            "n_prefix_keys": len(self.prefix_keys),
+            "requests": [
+                {
+                    "rid": r.rid,
+                    "max_new_tokens": r.max_new_tokens,
+                    "state": r.state,
+                    "finish_reason": r.finish_reason,
+                    "prefix_hit": r.prefix_hit,
+                }
+                for r in self.requests
+            ],
+        }
+        path = save_checkpoint(directory, _STEP, arrays, keep=1)
+        with open(os.path.join(directory, "handoff.json"), "w") as f:
+            json.dump(sidecar, f)
+        return path
+
+    @classmethod
+    def load(cls, directory: str) -> "Handoff":
+        with open(os.path.join(directory, "handoff.json")) as f:
+            sidecar = json.load(f)
+        ckpt_dir = os.path.join(directory, f"step_{_STEP}")
+        with open(os.path.join(ckpt_dir, "manifest.json")) as f:
+            manifest = json.load(f)
+        # dict pytrees flatten in sorted-key order, so zipping the sorted
+        # key set against the manifest's leaf order rebuilds the `like`
+        # structure restore_checkpoint requires without re-parsing treedefs
+        keys = sorted(
+            [f"req_{r['rid']:08d}_prompt" for r in sidecar["requests"]]
+            + [f"req_{r['rid']:08d}_gen" for r in sidecar["requests"]]
+            + [f"prefix_{i:06d}" for i in range(sidecar["n_prefix_keys"])]
+        )
+        assert len(keys) == len(manifest["leaves"]), (
+            f"handoff sidecar lists {len(keys)} arrays, "
+            f"checkpoint holds {len(manifest['leaves'])}"
+        )
+        like = {
+            k: np.zeros(tuple(leaf["shape"]), np.dtype(leaf["dtype"]))
+            for k, leaf in zip(keys, manifest["leaves"])
+        }
+        arrays = restore_checkpoint(directory, _STEP, like)
+        arrays = {k: np.asarray(v) for k, v in arrays.items()}
+        requests = [
+            HandoffRequest(
+                rid=r["rid"],
+                prompt=arrays[f"req_{r['rid']:08d}_prompt"],
+                max_new_tokens=r["max_new_tokens"],
+                state=r["state"],
+                generated=arrays[f"req_{r['rid']:08d}_gen"],
+                finish_reason=r["finish_reason"],
+                prefix_hit=r["prefix_hit"],
+            )
+            for r in sidecar["requests"]
+        ]
+        prefix_keys = [
+            arrays[f"prefix_{i:06d}"]
+            for i in range(sidecar["n_prefix_keys"])
+        ]
+        return cls(
+            requests=requests, prefix_keys=prefix_keys,
+            meta=sidecar["meta"],
+        )
+
+
+def capture_handoff(engine, drained, inflight) -> Handoff:
+    """Assemble a `Handoff` from a drained engine: ``drained`` is the
+    scheduler's popped (request, ticket) pairs, ``inflight`` the
+    RequestStates of admitted-but-unfinished requests (their cohorts are
+    being torn down by `Engine.drain`)."""
+    requests: list[HandoffRequest] = []
+    for req, ticket in drained:
+        requests.append(HandoffRequest(
+            rid=req.rid, prompt=req.prompt,
+            max_new_tokens=req.max_new_tokens, state="waiting",
+            prefix_hit=bool(ticket is not None and ticket.prefix_hit),
+        ))
+    for st in inflight:
+        requests.append(HandoffRequest(
+            rid=st.rid, prompt=st.request.prompt,
+            max_new_tokens=st.request.max_new_tokens, state="inflight",
+            generated=np.asarray(st.generated, np.int32),
+        ))
+    for rid, st in engine.results.items():
+        requests.append(HandoffRequest(
+            rid=rid, prompt=st.request.prompt,
+            max_new_tokens=st.request.max_new_tokens, state="finished",
+            generated=np.asarray(st.generated, np.int32),
+            finish_reason=st.finish_reason,
+        ))
+    requests.sort(key=lambda r: r.rid)
+    prefix_keys = (
+        [np.asarray(e.prompt, np.int32)
+         for e in engine.prefix_index.entries if e.alive]
+        if engine.prefix_index is not None else []
+    )
+    meta = {
+        "policy": engine.policy.describe(),
+        "max_len": engine.max_len,
+        "max_slots": engine.scheduler.max_slots,
+        "max_queue": engine.scheduler.max_queue,
+        "bucket_align": engine.scheduler.bucket_align,
+        "eos_id": engine.eos_id,
+        "arch": engine.cfg.name,
+    }
+    return Handoff(requests=requests, prefix_keys=prefix_keys, meta=meta)

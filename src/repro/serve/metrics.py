@@ -6,7 +6,15 @@ same caveat as `benchmarks/kernels_bench.py`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import MISSING, dataclass, field, fields
+
+# Bound on the retained queue-depth sample window.  Long-running engines
+# sample once per step; an unbounded list grew host memory forever, so the
+# engine keeps a recent window (for distribution telemetry) plus a running
+# max scalar (so `summary()["max_queue_depth"]` still covers the whole
+# lifetime, not just the window).
+QUEUE_DEPTH_WINDOW = 1024
 
 
 def _percentile(sorted_vals: list[float], q: float) -> float:
@@ -58,7 +66,15 @@ class EngineMetrics:
     # a jit trace); pipelined decode-step encodes stay on device and are
     # sampled only at flush, so this is a lower bound there.
     timesteps_skipped: int = 0
-    queue_depth_samples: list[int] = field(default_factory=list)
+    # fault-tolerance counters (serve/handoff.py + Engine.drain/remesh and
+    # the pipelined executor's straggler fold)
+    n_drained: int = 0            # requests handed off unfinished at drain
+    n_remeshes: int = 0           # live serve-mesh re-plans (device loss/gain)
+    n_straggler_events: int = 0   # StepTimer detections fed from stage_s
+    queue_depth_samples: deque = field(
+        default_factory=lambda: deque(maxlen=QUEUE_DEPTH_WINDOW)
+    )
+    max_queue_depth: int = 0      # running max over ALL samples (unbounded-safe)
     wall_s: float = 0.0
     # Per-stage wall time, filled by the step executor (serve/executor.py):
     # admit / prefill / merge / decode / sample_sync / encode / retire.
@@ -70,6 +86,24 @@ class EngineMetrics:
 
     def record(self, m: RequestMetrics) -> None:
         self.completed.append(m)
+
+    def reset(self) -> None:
+        """Zero every aggregate back to a fresh engine's state — the
+        measurement-window boundary the class docstring promises.  The
+        instance is reset in place so `engine.metrics` references (executor
+        stage clocks, CacheStore move counters) stay live."""
+        for f in fields(self):
+            setattr(self, f.name,
+                    f.default_factory() if f.default_factory is not MISSING
+                    else f.default)
+
+    def sample_queue_depth(self, depth: int) -> None:
+        """Record one scheduler queue-depth observation (bounded window +
+        running max) — called once per executor step."""
+        depth = int(depth)
+        self.queue_depth_samples.append(depth)
+        if depth > self.max_queue_depth:
+            self.max_queue_depth = depth
 
     @property
     def total_tokens(self) -> int:
@@ -107,6 +141,9 @@ class EngineMetrics:
             "prefix_hits": self.n_prefix_hits,
             "prefix_tokens_reused": self.n_prefix_tokens_reused,
             "timesteps_skipped": self.timesteps_skipped,
-            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "drained_requests": self.n_drained,
+            "remeshes": self.n_remeshes,
+            "straggler_events": self.n_straggler_events,
+            "max_queue_depth": self.max_queue_depth,
             "stage_s": {k: self.stage_s[k] for k in sorted(self.stage_s)},
         }

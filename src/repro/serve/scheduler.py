@@ -116,7 +116,11 @@ class AdmissionTicket:
     ``outcome`` follows the request lifecycle: ``"queued"`` at submit,
     flipped to ``"admitted"`` when the scheduler hands the request to a
     prefill group or a prefix-hit cohort; ``"rejected"`` tickets ride on
-    the `AdmissionError`.  ``prefix_hit`` is sticky — it records that the
+    the `AdmissionError` (with ``reason="draining: ..."`` when admission
+    was closed by a preemption drain); ``"drained"`` is the terminal
+    outcome for still-queued requests popped by `Scheduler.drain` — they
+    ride the handoff to a successor engine instead of being admitted
+    here.  ``prefix_hit`` is sticky — it records that the
     prompt matched a published prefix at submit time and the request will
     skip prefill for its ``reused_tokens`` shared tokens.
 
@@ -127,7 +131,7 @@ class AdmissionTicket:
     """
 
     request: Request | None
-    outcome: str = "queued"        # queued | admitted | rejected
+    outcome: str = "queued"        # queued | admitted | rejected | drained
     prefix_hit: bool = False
     reused_tokens: int = 0
     reason: str | None = None      # rejection reason
@@ -157,8 +161,15 @@ class Scheduler:
     prompt up in the index; exact full-prompt hits queue in a separate
     lane (`next_prefix_hits`) that admits them into cohorts with the
     shared pages materialized instead of running a prefill.  Matched
-    entries are pinned until admission so eviction can never invalidate a
-    queued hit.
+    entries are pinned from submit until the engine's admit completes
+    (`release_hit_pins`), so eviction can never invalidate a queued or
+    in-admission hit — pool pressure from an earlier group's admit in the
+    same step falls on unpinned entries only.
+
+    Preemption drain: `close()` shuts admission — new submits are rejected
+    with a ``draining`` reason and no further groups are scheduled, while
+    already-admitted requests keep their slots; `drain()` then pops both
+    waiting lanes with terminal ``drained`` tickets for handoff.
     """
 
     def __init__(
@@ -183,6 +194,7 @@ class Scheduler:
         self._ids = itertools.count()
         self._tickets: dict[int, AdmissionTicket] = {}
         self.n_rejected = 0
+        self.closed = False
 
     # -- admission ----------------------------------------------------------
     def _reject(self, msg: str) -> AdmissionError:
@@ -191,6 +203,11 @@ class Scheduler:
 
     def submit(self, prompt, max_new_tokens: int) -> AdmissionTicket:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.closed:
+            raise self._reject(
+                "draining: admission closed for preemption; "
+                "resubmit to the successor engine"
+            )
         if prompt.shape[0] < 1 or max_new_tokens < 1:
             raise self._reject("empty prompt or non-positive max_new_tokens")
         need = bucket_key(prompt.shape[0], self.bucket_align) + max_new_tokens
@@ -219,6 +236,60 @@ class Scheduler:
         if t is not None:
             t.outcome = "admitted"
 
+    def restore(self, req: Request) -> AdmissionTicket:
+        """Re-enqueue a handed-off request PRESERVING its rid (the resume
+        path, `serve/handoff.py`).  Capacity checks are skipped — the
+        request was already accepted by the predecessor engine; the prefix
+        lookup re-runs against this engine's (fresh) index."""
+        ticket = AdmissionTicket(request=req)
+        entry = (self.prefix_index.lookup(req.prompt)
+                 if self.prefix_index is not None else None)
+        if entry is not None:
+            entry.pins += 1
+            ticket.prefix_hit = True
+            ticket.reused_tokens = entry.prompt_len
+            self.hit_waiting.append((req, entry))
+        else:
+            self.waiting.append(req)
+        self._tickets[req.rid] = ticket
+        return ticket
+
+    def reserve_ids(self, start: int) -> None:
+        """Advance rid allocation past handed-off requests so restored and
+        freshly submitted requests never collide."""
+        self._ids = itertools.count(start)
+
+    # -- preemption drain ---------------------------------------------------
+    def close(self) -> None:
+        """Close admission (idempotent): new submits are rejected with a
+        ``draining`` reason and no further prefill/hit groups are
+        scheduled.  In-flight requests keep their slots and run to
+        completion (or to the drain step budget)."""
+        self.closed = True
+
+    def drain(self) -> list[tuple[Request, AdmissionTicket | None]]:
+        """Pop every still-waiting request from both lanes for handoff:
+        tickets get the terminal ``drained`` outcome and leave the ticket
+        map (the lifecycle leak fix — never-admitted entries used to stay
+        forever), hit-lane entries are unpinned.  Returns the popped
+        (request, ticket) pairs in FIFO order, prefill lane first."""
+        self.close()
+        out: list[tuple[Request, AdmissionTicket | None]] = []
+        for req in self.waiting:
+            out.append((req, self._mark_drained(req.rid)))
+        for req, entry in self.hit_waiting:
+            entry.pins -= 1
+            out.append((req, self._mark_drained(req.rid)))
+        self.waiting.clear()
+        self.hit_waiting.clear()
+        return out
+
+    def _mark_drained(self, rid: int) -> AdmissionTicket | None:
+        t = self._tickets.pop(rid, None)
+        if t is not None:
+            t.outcome = "drained"
+        return t
+
     @property
     def queue_depth(self) -> int:
         return len(self.waiting) + len(self.hit_waiting)
@@ -236,7 +307,7 @@ class Scheduler:
         Caller must report slot release via `release()` when requests
         finish.
         """
-        if not self.waiting or self.free_slots <= 0:
+        if self.closed or not self.waiting or self.free_slots <= 0:
             return []
         lead = self.waiting[0]
         key = bucket_key(lead.prompt_len, self.bucket_align)
@@ -262,8 +333,14 @@ class Scheduler:
         """Pop the next prefix-hit admission group: hits whose prompts have
         the same length (they join one cohort at sequence position
         ``prompt_len``), FIFO order led by the oldest hit, capped by free
-        slots.  Unpins the matched entries."""
-        if not self.hit_waiting or self.free_slots <= 0:
+        slots.
+
+        Entries stay PINNED after selection: the submit-time pin is held
+        until the engine's admit has materialized the shared pages and
+        calls `release_hit_pins` — unpinning at selection opened a window
+        where an earlier group's admit, under pool pressure in the same
+        step, could evict a selected-but-not-yet-admitted entry."""
+        if self.closed or not self.hit_waiting or self.free_slots <= 0:
             return []
         lead_len = self.hit_waiting[0][0].prompt_len
         group: list[tuple[Request, object]] = []
@@ -276,10 +353,16 @@ class Scheduler:
                 kept.append((req, entry))
         self.hit_waiting = kept
         self.active_slots += len(group)
-        for req, entry in group:
-            entry.pins -= 1
+        for req, _entry in group:
             self._mark_admitted(req.rid)
         return group
+
+    def release_hit_pins(self, group: list[tuple[Request, object]]) -> None:
+        """Release the submit-time pins of one selected hit group — called
+        by the engine after (or on failure of) its admit, closing the
+        selection-to-admission eviction window."""
+        for _req, entry in group:
+            entry.pins -= 1
 
     def schedule_prefix_hits(self) -> list[list[tuple[Request, object]]]:
         """All prefix-hit groups runnable this step."""

@@ -1,0 +1,343 @@
+"""Preemption-safe serving (PR-8): drain -> handoff -> resume identity,
+SIGTERM admission closing, elastic re-mesh, and straggler-fed repack.
+
+Acceptance invariants:
+
+* drain -> `Handoff` -> `Engine.resume` produces TOKEN-IDENTICAL results
+  to an undisturbed engine across the full execution matrix
+  (sync/pipelined x dense/paged x single-device/meshed), with zero
+  in-flight tokens lost (the `_resume_expect` ledger raises `ParityError`
+  on any divergence);
+* a real SIGTERM (and the `trigger()` test hook) closes admission — new
+  submits get a structured ``rejected`` ticket with a ``draining`` reason
+  while in-flight requests keep running;
+* `Scheduler.drain` gives still-waiting tickets the terminal ``drained``
+  outcome and empties the ticket map (the lifecycle leak fix);
+* `Engine.remesh` re-shards live with ZERO page copies
+  (`EngineMetrics.n_page_moves` unchanged) and bitwise token identity;
+* `StepTimer` observations from `EngineMetrics.stage_s` drive the
+  pipelined executor's repack without disturbing token identity.
+"""
+import dataclasses
+import os
+import signal
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.ft import PreemptionHandler, plan_serve_mesh
+from repro.models.registry import build_model
+from repro.serve import (
+    AdmissionError,
+    Engine,
+    EngineMetrics,
+    ExecutionPolicy,
+    Handoff,
+    ParityError,
+    Placement,
+    Scheduler,
+    make_serve_mesh,
+    paged,
+)
+
+_MODEL_CACHE: dict = {}
+
+
+def _model(arch="llama3_2_1b", **overrides):
+    key = (arch, tuple(sorted(overrides.items())))
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config(arch))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+def _policy(cfg, *, execution="sync", paging=False, mesh=False):
+    return ExecutionPolicy.for_arch(
+        cfg,
+        execution=execution,
+        paging=paged(8) if paging else None,
+        placement=(Placement(mesh=make_serve_mesh("data,model"))
+                   if mesh else None),
+    )
+
+
+GEN = 8
+
+
+def _drain_resume_cycle(tmp_path, policy, cfg, model, params,
+                        *, step_budget=2, tamper=None):
+    """Submit 5 prompts, preempt after 2 steps, drain within
+    ``step_budget``, persist + reload the handoff, resume a successor and
+    run it to completion.  Returns (successor outputs, handoff)."""
+    prompts = _prompts(cfg, [8] * 5)
+    h = PreemptionHandler(signals=())
+    victim = Engine(model, params, max_len=16, max_slots=2,
+                    policy=policy, preemption=h)
+    tickets = [victim.submit(p, GEN) for p in prompts]
+    victim.step()
+    victim.step()
+    h.trigger()
+    handoff = victim.drain(step_budget=step_budget)
+    assert victim.scheduler._tickets == {}       # no ticket leaks post-drain
+    c = handoff.counts()
+    assert c["waiting"] + c["inflight"] + c["finished"] == len(prompts)
+    d = str(tmp_path / "handoff")
+    handoff.save(d)
+    loaded = Handoff.load(d)
+    assert loaded.counts() == c
+    if tamper is not None:
+        tamper(loaded)
+    successor = Engine.resume(model, params, loaded, policy=policy)
+    out = successor.run()
+    assert sorted(out) == sorted(t.rid for t in tickets)
+    return out, handoff
+
+
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+@pytest.mark.parametrize("paging", [False, True], ids=["dense", "paged"])
+@pytest.mark.parametrize("mesh", [False, True], ids=["single", "meshed"])
+def test_drain_resume_token_identity(tmp_path, execution, paging, mesh):
+    """The acceptance matrix: preempt mid-serve, drain within a step
+    budget, hand off, resume — the successor's results (partially-served
+    requests included) match an undisturbed engine bit-for-bit, and every
+    token the victim had already emitted survives (the `_resume_expect`
+    ledger in `Engine._finish` would raise otherwise)."""
+    cfg, model, params = _model()
+    policy = _policy(cfg, execution=execution, paging=paging, mesh=mesh)
+    prompts = _prompts(cfg, [8] * 5)
+    ref = Engine(model, params, max_len=16, max_slots=2, policy=policy)
+    want = ref.generate_batch(prompts, GEN)
+    out, handoff = _drain_resume_cycle(tmp_path, policy, cfg, model, params)
+    for rid, w in enumerate(want):
+        np.testing.assert_array_equal(out[rid], w)
+    # the drain grace actually carried live progress, not just queue state
+    assert handoff.counts()["tokens_in_flight"] > 0
+
+
+def test_resume_parity_ledger_detects_lost_tokens(tmp_path):
+    """Tampering with an in-flight request's handed-off progress makes the
+    successor's replay raise `ParityError` — a lost/corrupted token is an
+    error, never a silent truncation."""
+    cfg, model, params = _model()
+    policy = _policy(cfg)
+
+    def tamper(loaded):
+        hr = next(r for r in loaded.requests
+                  if r.state == "inflight" and r.generated.size)
+        hr.generated = hr.generated + 1          # flip every carried token
+
+    with pytest.raises(ParityError, match="handed-off"):
+        _drain_resume_cycle(tmp_path, policy, cfg, model, params,
+                            tamper=tamper)
+
+
+def test_sigterm_closes_admission_and_drains(tmp_path):
+    """Real signal delivery: SIGTERM flips `should_stop`, the next step
+    closes admission (submits get a ``draining`` rejection ticket), and
+    drain hands the engine off cleanly."""
+    cfg, model, params = _model()
+    h = PreemptionHandler()                      # installs a real handler
+    try:
+        eng = Engine(model, params, max_len=16, max_slots=2,
+                     policy=_policy(cfg), preemption=h)
+        prompts = _prompts(cfg, [8] * 3)
+        for p in prompts:
+            eng.submit(p, GEN)
+        eng.step()
+        os.kill(os.getpid(), signal.SIGTERM)
+        assert h.should_stop and eng.stopping
+        eng.step()                               # closes admission
+        assert eng.scheduler.closed
+        with pytest.raises(AdmissionError) as exc:
+            eng.submit(prompts[0], GEN)
+        t = exc.value.ticket
+        assert t.outcome == "rejected"
+        assert str(exc.value).startswith("draining")
+        assert eng.summary()["admission_closed"]
+        handoff = eng.drain()
+        assert handoff.counts()["finished"] + handoff.counts()["waiting"] \
+            + handoff.counts()["inflight"] == 3
+    finally:
+        h.restore()                              # never leave SIGTERM hooked
+    assert signal.getsignal(signal.SIGTERM) != h._handler
+
+
+def test_run_returns_early_on_preemption_notice():
+    cfg, model, params = _model()
+    h = PreemptionHandler(signals=())
+    eng = Engine(model, params, max_len=16, max_slots=4,
+                 policy=_policy(cfg), preemption=h)
+    for p in _prompts(cfg, [8] * 2):
+        eng.submit(p, GEN)
+    h.trigger()
+    out = eng.run()                              # returns, does not serve
+    assert out == {}
+    assert not eng.idle and eng.stopping
+
+
+def test_scheduler_drain_tickets_terminal_and_map_empty():
+    """The `_tickets` lifecycle leak fix: never-admitted requests leave
+    the map at drain with the terminal ``drained`` outcome."""
+    s = Scheduler(max_slots=2, max_queue=8, max_len=64)
+    tickets = [s.submit(np.zeros(8, np.int32), 4) for _ in range(4)]
+    s.next_prefill_group()                       # admits 2, pops their tickets
+    popped = s.drain()
+    assert [t.outcome for t in tickets] == \
+        ["admitted", "admitted", "drained", "drained"]
+    assert [t.rid for _req, t in popped] == [2, 3]
+    assert s._tickets == {}
+    assert s.closed and s.next_prefill_group() == []
+    with pytest.raises(AdmissionError, match="draining"):
+        s.submit(np.zeros(8, np.int32), 4)
+
+
+def test_preemption_restore_idempotent_and_off_main_thread():
+    h = PreemptionHandler()
+    prev = signal.getsignal(signal.SIGTERM)
+    assert prev == h._handler
+    h.restore()
+    installed = signal.getsignal(signal.SIGTERM)
+    h.restore()                                  # double restore: no-op
+    assert signal.getsignal(signal.SIGTERM) is installed
+    assert h._old == {}
+
+    errors = []
+
+    def off_main():
+        try:
+            hh = PreemptionHandler()             # ValueError guard path
+            assert hh._old == {}                 # nothing installed there
+            hh.trigger()
+            assert hh.should_stop
+            hh.restore()
+            hh.restore()
+        except Exception as e:                   # pragma: no cover
+            errors.append(e)
+
+    t = threading.Thread(target=off_main)
+    t.start()
+    t.join()
+    assert errors == []
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+def test_plan_serve_mesh_shapes():
+    devs = jax.devices()
+    m = plan_serve_mesh(devs, model_parallel=2)
+    assert dict(m.shape) == {"data": 4, "model": 2}
+    m6 = plan_serve_mesh(devs[:6], model_parallel=2)
+    assert dict(m6.shape) == {"data": 3, "model": 2}
+    m5 = plan_serve_mesh(devs[:5], model_parallel=2)   # idles the 5th
+    assert dict(m5.shape) == {"data": 2, "model": 2}
+    m1 = plan_serve_mesh(devs[:3], model_parallel=4)   # mp shrinks to fit
+    assert dict(m1.shape) == {"data": 1, "model": 2}
+    assert plan_serve_mesh(devs[:1]) is None           # single device
+    with pytest.raises(ValueError):
+        plan_serve_mesh([])
+
+
+def test_remesh_paged_identity_zero_page_moves():
+    """Device loss mid-serve: re-plan to 6 survivors, re-shard params and
+    plans live, and keep serving — tokens stay bitwise-identical and not
+    one cache page is copied."""
+    cfg, model, params = _model()
+    policy = _policy(cfg, paging=True, mesh=True)
+    prompts = _prompts(cfg, [8] * 4)
+    ref = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    want = ref.generate_batch(prompts, GEN)
+    eng = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    tickets = [eng.submit(p, GEN) for p in prompts]
+    for _ in range(3):
+        eng.step()
+    moves_before = eng.metrics.n_page_moves
+    rep = eng.remesh(devices=jax.devices()[:6])
+    assert rep["remeshed"] and rep["mesh"] == "data=3xmodel=2"
+    assert eng.metrics.n_page_moves == moves_before
+    assert eng.metrics.n_remeshes == 1
+    out = eng.run()
+    for t, w in zip(tickets, want):
+        np.testing.assert_array_equal(out[t.rid], w)
+
+
+def test_remesh_to_single_device_dense_identity():
+    """Total mesh loss: fold back to single-device serving mid-flight."""
+    cfg, model, params = _model()
+    policy = _policy(cfg, mesh=True)
+    prompts = _prompts(cfg, [8] * 4)
+    ref = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    want = ref.generate_batch(prompts, GEN)
+    eng = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    tickets = [eng.submit(p, GEN) for p in prompts]
+    for _ in range(3):
+        eng.step()
+    rep = eng.remesh(devices=jax.devices()[:1])
+    assert rep["remeshed"] and rep["mesh"] is None
+    assert eng.mesh is None
+    # same survivors again: a no-op, not a re-jit storm
+    assert not eng.remesh(devices=jax.devices()[:1])["remeshed"]
+    out = eng.run()
+    for t, w in zip(tickets, want):
+        np.testing.assert_array_equal(out[t.rid], w)
+
+
+# ---------------------------------------------------------------------------
+# straggler folding (ft.straggler -> pipelined repack)
+# ---------------------------------------------------------------------------
+
+def test_straggler_observation_triggers_repack_identity_kept():
+    """Feeding the executor's `StepTimer` a straggling decode sample
+    forces a repack on the next step; served tokens are unchanged."""
+    cfg, model, params = _model()
+    policy = _policy(cfg, execution="pipelined")
+    prompts = _prompts(cfg, [8] * 4)
+    ref = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    want = ref.generate_batch(prompts, GEN)
+    eng = Engine(model, params, max_len=16, max_slots=4, policy=policy)
+    tickets = [eng.submit(p, GEN) for p in prompts]
+    eng.step()
+    for _ in range(6):                           # build the timing window
+        eng.executor.step_timer.observe(0.01)
+    eng.executor.step_timer.observe(0.5)         # 50x the median
+    assert eng.metrics.n_straggler_events == 1
+    assert eng.executor._force_repack
+    eng.step()                                   # repack consumes the flag
+    assert not eng.executor._force_repack
+    out = eng.run()
+    for t, w in zip(tickets, want):
+        np.testing.assert_array_equal(out[t.rid], w)
+
+
+# ---------------------------------------------------------------------------
+# metrics lifecycle
+# ---------------------------------------------------------------------------
+
+def test_metrics_reset_and_bounded_queue_samples():
+    m = EngineMetrics()
+    for d in range(2000):
+        m.sample_queue_depth(d)
+    assert len(m.queue_depth_samples) == 1024    # bounded, not unbounded
+    assert m.max_queue_depth == 1999             # running max survives wrap
+    m.n_prefill_batches = 7
+    m.stage_s["decode"] = 1.0
+    m.n_drained = 3
+    m.reset()
+    assert m.n_prefill_batches == 0 and m.n_drained == 0
+    assert m.stage_s == {} and len(m.queue_depth_samples) == 0
+    assert m.max_queue_depth == 0
+    assert m.summary()["drained_requests"] == 0

@@ -36,6 +36,7 @@ from repro.serve import (
     PageLayout,
     PagePoolExhausted,
     RadixPrefixIndex,
+    Scheduler,
     paged,
 )
 from repro.serve.paging import SpikeSlotPool
@@ -510,6 +511,33 @@ def test_evicted_entry_cannot_serve_queued_hit():
     index._evict(entry)
     with pytest.raises(RuntimeError, match="evicted"):
         index.admit(entry)
+
+
+def test_hit_pin_held_through_selection_to_admit_window():
+    """Regression: `next_prefix_hits` used to release the submit-time pin
+    at SELECTION, so pool pressure from an earlier group's admit in the
+    same engine step could evict a selected-but-not-yet-admitted entry —
+    its admit then raised ``evicted``.  The pin is now held until the
+    engine's admit completes (`release_hit_pins`, called in a finally)."""
+    store = _toy_store(n_rows=8)
+    index = RadixPrefixIndex(store, max_entries=8)
+    prompt = np.arange(12, dtype=np.int32)
+    entry = _publish_synthetic(index, store, prompt)
+    s = Scheduler(max_slots=4, max_queue=8, max_len=64, prefix_index=index)
+    t = s.submit(prompt, 4)
+    assert t.prefix_hit and entry.pins == 1
+    group = s.next_prefix_hits()             # the window opens here
+    assert [r.rid for r, _ in group] == [t.rid]
+    assert entry.pins == 1                   # still pinned inside the window
+    # pool pressure inside the window must NOT pick the selected hit
+    assert not index.evict_lru()             # nothing unpinned to drop
+    assert entry.alive
+    row, state = index.admit(entry)          # admit still serves the pages
+    s.release_hit_pins(group)                # engine's finally
+    assert entry.pins == 0
+    store.decref_seq(row)
+    store.decref_state(state)
+    assert index.evict_lru() and not entry.alive  # window closed: evictable
 
 
 # ---------------------------------------------------------------------------
