@@ -25,6 +25,23 @@ prefix-reuse row in BENCH_serve.json, and `main()` exposes it as a CLI:
 
     PYTHONPATH=src python -m benchmarks.fig13_14_traffic \
         --serve-trace shared_prefix --arch llama3_2_1b --paging paged
+
+Part 3 (`make_event_trace` / `replay_event_trace`): the same arrival
+question one level earlier — event WINDOWS arriving at a stream front end
+(`repro.serve.streaming`) instead of whole prompts arriving at the
+scheduler.  Two mixes:
+
+* ``event_poisson`` — windows land independently (geometric gaps): the
+  steady-sensor baseline;
+* ``event_bursty``  — windows arrive in back-to-back bursts with quiet
+  gaps, and a fraction of windows are silent (no events at all): the
+  gesture-then-idle pattern the adaptive temporal policy feeds on (silent
+  frames encode to all-zero planes, skipped in-kernel).
+
+`benchmarks.serve_bench.bench_streaming` uses these for the streaming row
+in BENCH_serve.json; the CLI replays them with ``--serve-trace
+event_poisson`` / ``event_bursty`` (spiking arch surgery is applied
+automatically).
 """
 import argparse
 import dataclasses
@@ -123,6 +140,120 @@ def replay_trace(engine, trace: list[TraceRequest], max_steps: int = 10_000):
     return tickets, outs
 
 
+EVENT_MIXES = ("event_poisson", "event_bursty")
+
+
+@dataclasses.dataclass(frozen=True)
+class EventTraceStream:
+    """One stream's window-arrival schedule: window ``w``'s events are
+    pushed when the engine reaches step ``arrivals[w]`` (silent windows
+    carry a (0, 4) chunk — a real gap, not a dropped frame)."""
+
+    window_us: int
+    height: int
+    width: int
+    arrivals: tuple[int, ...]
+    windows: tuple[np.ndarray, ...]
+    max_new_tokens: int
+
+
+def make_event_trace(
+    mix: str,
+    n_streams: int = 4,
+    *,
+    n_windows: int = 8,
+    window_us: int = 1000,
+    height: int = 16,
+    width: int = 16,
+    gen: int = 8,
+    mean_gap: float = 1.0,
+    burst_size: int = 4,
+    silent_fraction: float = 0.25,
+    seed: int = 0,
+) -> list[EventTraceStream]:
+    """Deterministic window-arrival trace for one event mix (module doc).
+
+    Arrivals are in ENGINE STEPS, like `make_trace` — the serving clock,
+    not wall time.  Event content comes from `moving_blob_events`, with
+    ``silent_fraction`` of each stream's windows going dark (the sensor
+    between gestures); under ``event_bursty`` the non-silent windows
+    additionally clump into back-to-back bursts.
+    """
+    if mix not in EVENT_MIXES:
+        raise ValueError(f"unknown event mix {mix!r}; pick one of {EVENT_MIXES}")
+    from repro.data.events import moving_blob_events, split_into_windows
+
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_streams):
+        n_silent = int(round(silent_fraction * n_windows))
+        silent = tuple(
+            sorted(rng.choice(n_windows, size=n_silent, replace=False).tolist())
+        ) if n_silent else ()
+        events = moving_blob_events(
+            n_windows, height=height, width=width, window_us=window_us,
+            seed=seed * 997 + i, silent=silent,
+        )
+        if mix == "event_bursty":
+            arrivals: list[int] = []
+            t = int(rng.integers(0, 2))
+            while len(arrivals) < n_windows:
+                n = min(burst_size, n_windows - len(arrivals))
+                arrivals.extend([t] * n)
+                t += 1 + int(rng.poisson(mean_gap * burst_size))
+        else:
+            gaps = rng.poisson(mean_gap, size=n_windows)
+            arrivals = np.cumsum(gaps).tolist()
+        out.append(EventTraceStream(
+            window_us=window_us, height=height, width=width,
+            arrivals=tuple(int(a) for a in arrivals),
+            windows=tuple(split_into_windows(events, n_windows, window_us)),
+            max_new_tokens=gen,
+        ))
+    return out
+
+
+def replay_event_trace(engine, trace: list[EventTraceStream], *,
+                       T: int, max_steps: int = 10_000):
+    """Drive `engine` through window-arrival schedules (engine steps are
+    the arrival clock): at each step, push every window whose arrival has
+    come; a stream closes once its last window is pushed.
+
+    Returns ``(tickets, sessions, outputs)`` in submission order — the
+    sessions expose the materialized frame-token prompts
+    (`StreamSession.prompt_tokens`), so a reference engine can replay them
+    as ordinary requests and be compared token-for-token.
+    """
+    from repro.serve import EventStream, StreamSession
+
+    sessions, tickets = [], []
+    for tr in trace:
+        session = StreamSession(
+            EventStream(tr.window_us), height=tr.height, width=tr.width,
+            T=T, vocab=engine.cfg.vocab,
+        )
+        tickets.append(engine.submit_stream(session, tr.max_new_tokens))
+        sessions.append(session)
+    cursors = [0] * len(trace)
+    t = 0
+    while any(c < len(tr.windows) for c, tr in zip(cursors, trace)) \
+            or not engine.idle:
+        for j, tr in enumerate(trace):
+            while cursors[j] < len(tr.windows) and tr.arrivals[cursors[j]] <= t:
+                sessions[j].stream.push(tr.windows[cursors[j]])
+                cursors[j] += 1
+            if cursors[j] == len(tr.windows) and not sessions[j].stream.closed:
+                sessions[j].stream.close()
+        engine.step()
+        t += 1
+        if t > max_steps:
+            raise RuntimeError(f"event trace did not drain in {max_steps} steps")
+    engine.flush()
+    outs = [np.asarray(engine.results[tk.rid].generated, np.int32)
+            for tk in tickets]
+    return tickets, sessions, outs
+
+
 def rows():
     hw = HwConfig()
     out = []
@@ -159,8 +290,11 @@ def main(argv=None):
     import json
 
     ap = argparse.ArgumentParser()
-    ap.add_argument("--serve-trace", choices=TRACE_MIXES, required=True,
-                    help="arrival-trace mix to replay through the engine")
+    ap.add_argument("--serve-trace", choices=TRACE_MIXES + EVENT_MIXES,
+                    required=True,
+                    help="arrival-trace mix to replay through the engine; "
+                         "event_* mixes feed event WINDOWS to stream "
+                         "sessions (spiking arch surgery applied)")
     ap.add_argument("--arch", default="llama3_2_1b")
     ap.add_argument("--n-requests", type=int, default=12)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -178,12 +312,46 @@ def main(argv=None):
     from repro.serve import Engine, ExecutionPolicy, Paging, paged
 
     cfg = smoke_variant(get_config(args.arch))
+    if args.serve_trace in EVENT_MIXES:
+        cfg = dataclasses.replace(
+            cfg, spiking_ffn=True, spiking_weight_density=0.3,
+        )
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     paging = (paged(args.page_size) if args.paging == "paged" else Paging())
     max_len = args.prompt_len + args.gen
     if paging.enabled:
         max_len = -(-max_len // paging.page_size) * paging.page_size
+    if args.serve_trace in EVENT_MIXES:
+        from repro.serve import adaptive_t
+
+        engine = Engine(
+            model, params, max_len=max_len, max_slots=args.max_slots,
+            policy=ExecutionPolicy.for_arch(
+                cfg, paging=paging, temporal=adaptive_t(1),
+            ),
+        )
+        # --prompt-len counts event windows here (one frame token each)
+        trace = make_event_trace(
+            args.serve_trace, args.n_requests, n_windows=args.prompt_len,
+            gen=args.gen, seed=args.seed,
+        )
+        tickets, sessions, _ = replay_event_trace(
+            engine, trace, T=cfg.spiking_T,
+        )
+        s = engine.summary()
+        print(f"mix={args.serve_trace} streams={len(tickets)} "
+              f"frames={s['stream_windows']} "
+              f"frame->first-token p50={s['frame_to_first_token_s_p50']*1e3:.1f}ms "
+              f"p99={s['frame_to_first_token_s_p99']*1e3:.1f}ms "
+              f"timesteps_skipped={s['timesteps_skipped']} "
+              f"tok_s={s['throughput_tok_s']:.1f}")
+        print("summary:", json.dumps(
+            {k: s[k] for k in ("stream_sessions", "stream_windows",
+                               "prefill_batches", "cohort_merges",
+                               "timesteps_skipped")
+             if k in s}))
+        return 0
     engine = Engine(
         model, params, max_len=max_len, max_slots=args.max_slots,
         policy=ExecutionPolicy.for_arch(cfg, paging=paging),

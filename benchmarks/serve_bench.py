@@ -539,6 +539,99 @@ def bench_prefix_cache(
     return out
 
 
+def bench_streaming(
+    n_streams=4, n_windows=8, gen=8, weight_density=0.3, spiking_T=8,
+) -> dict:
+    """Streaming-ingestion row: DVS-style event streams fed frame-by-frame
+    through the adaptive-temporal spiking engine, under both window-arrival
+    mixes (`benchmarks.fig13_14_traffic.make_event_trace`) — steady
+    ``event_poisson`` and gesture-then-idle ``event_bursty`` (bursts plus
+    silent windows).
+
+    The gates this row doubles as (`SystemExit` on failure):
+    ``token_identical: true`` — every stream's incremental ingestion emits
+    exactly the tokens of an ordinary request carrying the materialized
+    frame-token prompt (the stream-delivery invariance contract) — and
+    ``timesteps_skipped > 0`` on the bursty mix (silent windows encode
+    all-zero planes; the adaptive policy must actually skip).  Alongside:
+    p50/p99 frame-to-first-token latency per mix — the latency metric a
+    sensor front end cares about (TTFT measured from each FRAME's arrival,
+    not from submission).
+    """
+    from benchmarks.fig13_14_traffic import (
+        EVENT_MIXES,
+        make_event_trace,
+        replay_event_trace,
+    )
+    from repro.configs import get_config, smoke_variant
+    from repro.models import layers as model_layers
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ExecutionPolicy, adaptive_t
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg, spiking_ffn=True, spiking_T=spiking_T,
+        spiking_weight_density=weight_density,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    policy = ExecutionPolicy.for_arch(cfg, temporal=adaptive_t(1))
+    max_len = n_windows + gen
+    out = {"arch": "llama3_2_1b+spiking_ffn", "spiking_T": spiking_T,
+           "weight_density": weight_density, "n_streams": n_streams,
+           "n_windows": n_windows, "gen": gen, "min_spikes": 1}
+    engine = Engine(model, params, max_len=max_len, max_slots=n_streams,
+                    policy=policy)
+    ref = Engine(model, params, max_len=max_len, max_slots=n_streams,
+                 policy=policy)
+    token_identical = True
+    try:
+        # warm-up stream: jit compile time must not land in the measured
+        # frame-to-first-token latencies
+        warm = make_event_trace("event_poisson", 1, n_windows=2, gen=gen,
+                                seed=99)
+        replay_event_trace(engine, warm, T=cfg.spiking_T)
+        for mix in EVENT_MIXES:
+            engine.metrics = EngineMetrics()
+            trace = make_event_trace(mix, n_streams, n_windows=n_windows,
+                                     gen=gen, seed=0)
+            _, sessions, outs = replay_event_trace(
+                engine, trace, T=cfg.spiking_T,
+            )
+            s = engine.summary()
+            ref_tickets = [ref.submit(sess.prompt_tokens(), gen)
+                           for sess in sessions]
+            ref_out = ref.run()
+            mix_identical = all(
+                np.array_equal(o, ref_out[t.rid])
+                for o, t in zip(outs, ref_tickets)
+            )
+            token_identical = token_identical and mix_identical
+            out[mix] = {
+                "streams": len(sessions),
+                "frames": s["stream_windows"],
+                "frame_to_first_token_s_p50": s["frame_to_first_token_s_p50"],
+                "frame_to_first_token_s_p99": s["frame_to_first_token_s_p99"],
+                "timesteps_skipped": s["timesteps_skipped"],
+                "tok_s": s["throughput_tok_s"],
+            }
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    out["token_identical"] = token_identical
+    if not token_identical:  # the row doubles as a CI identity gate
+        raise SystemExit(
+            "stream ingestion broke token identity vs one-shot frame-token "
+            "prompts"
+        )
+    if out["event_bursty"]["timesteps_skipped"] <= 0:
+        raise SystemExit(
+            "streaming bursty mix measured timesteps_skipped == 0 — silent "
+            "windows never reached the adaptive skip path"
+        )
+    return out
+
+
 def bench_drain(
     batch=6, prompt_len=16, gen=12, max_slots=3, preempt_after=2,
     drain_grace=4,
@@ -626,7 +719,8 @@ def rows():
     full-sweep BENCH_serve.json untouched)."""
     rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
                 "--no-sharded-row", "--no-approx-row", "--no-pipelined-row",
-                "--no-prefix-row", "--no-adaptive-row", "--no-drain-row"])
+                "--no-prefix-row", "--no-adaptive-row", "--no-drain-row",
+                "--no-streaming-row"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
@@ -666,6 +760,8 @@ def main(argv=None):
                     help="skip the adaptive temporal-sparsity serving row")
     ap.add_argument("--no-drain-row", action="store_true",
                     help="skip the preemption drain/handoff/resume row")
+    ap.add_argument("--no-streaming-row", action="store_true",
+                    help="skip the event-stream ingestion row")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -746,6 +842,18 @@ def main(argv=None):
               f"({dr['tokens_preserved']} tokens preserved) + "
               f"{dr['handoff']['waiting']} waiting; resume "
               f"token_identical={dr['token_identical']}")
+    if not args.no_streaming_row:
+        stm = bench_streaming()
+        report["bench_streaming"] = stm
+        bp, bb = stm["event_poisson"], stm["event_bursty"]
+        print(f"  streaming (event traces): poisson "
+              f"frame->first-token p50 "
+              f"{bp['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
+              f"{bp['frame_to_first_token_s_p99']*1e3:.1f}ms, bursty p50 "
+              f"{bb['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
+              f"{bb['frame_to_first_token_s_p99']*1e3:.1f}ms "
+              f"(bursty timesteps_skipped={bb['timesteps_skipped']}, "
+              f"token_identical={stm['token_identical']})")
     if not args.no_prefix_row:
         pc = bench_prefix_cache()
         report["bench_prefix_cache"] = pc

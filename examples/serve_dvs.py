@@ -1,0 +1,77 @@
+"""Event-stream serving example: a DVS-style sensor feeding the engine.
+
+A synthetic moving-blob event stream (repro.data.events) is pushed into an
+`EventStream` one window per engine step; each complete window encodes to a
+packed spike frame and a frame token, and the engine ingests it into the
+in-flight cohort (chunked incremental prefill).  Generation starts at the
+stream's close watermark.  The script then replays the materialized frame
+tokens as an ordinary prompt on a fresh engine and checks the incremental
+path is bitwise-identical.
+
+    PYTHONPATH=src python examples/serve_dvs.py
+"""
+import dataclasses
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config, smoke_variant
+from repro.data.events import moving_blob_events, split_into_windows
+from repro.models.registry import build_model
+from repro.serve import (
+    Engine,
+    EventStream,
+    ExecutionPolicy,
+    StreamSession,
+    adaptive_t,
+)
+
+cfg = smoke_variant(get_config("llama3_2_1b"))
+cfg = dataclasses.replace(cfg, spiking_ffn=True, spiking_weight_density=0.3)
+model = build_model(cfg)
+params = model.init(jax.random.PRNGKey(0))
+
+N_WIN, WINDOW_US, GEN = 8, 1000, 8
+policy = ExecutionPolicy.for_arch(cfg, temporal=adaptive_t(1))
+engine = Engine(model, params, max_len=N_WIN + GEN, max_slots=2,
+                policy=policy)
+
+# two streams: one continuous gesture, one with a silent window mid-stream
+# (the gap frame's all-silent timestep planes are skipped in-kernel under
+# the adaptive temporal policy)
+sessions, tickets, feeds = [], [], []
+for i, silent in enumerate([(), (3,)]):
+    events = moving_blob_events(N_WIN, height=16, width=16,
+                                window_us=WINDOW_US, seed=i, silent=silent)
+    session = StreamSession(EventStream(WINDOW_US), height=16, width=16,
+                            T=cfg.spiking_T, vocab=cfg.vocab)
+    tickets.append(engine.submit_stream(session, GEN))
+    sessions.append(session)
+    feeds.append(split_into_windows(events, N_WIN, WINDOW_US))
+
+for w in range(N_WIN):                      # sensor: one window per step
+    for session, chunks in zip(sessions, feeds):
+        session.stream.push(chunks[w])
+    engine.step()
+for session in sessions:
+    session.stream.close()                  # end-of-stream watermark
+out = engine.run()
+s = engine.summary()
+
+# bitwise check: the same frame tokens as a one-shot prompt
+ref = Engine(model, params, max_len=N_WIN + GEN, max_slots=2, policy=policy)
+ref_tickets = [ref.submit(sess.prompt_tokens(), GEN) for sess in sessions]
+ref_out = ref.run()
+identical = all(
+    np.array_equal(out[t.rid], ref_out[r.rid])
+    for t, r in zip(tickets, ref_tickets)
+)
+
+print(f"streamed {s['stream_sessions']} sessions / {s['stream_windows']} "
+      f"frames, frame->first-token p50 "
+      f"{s['frame_to_first_token_s_p50']*1e3:.0f}ms / p99 "
+      f"{s['frame_to_first_token_s_p99']*1e3:.0f}ms | "
+      f"{s['timesteps_skipped']} silent timestep planes skipped | "
+      f"incremental == one-shot: {identical}")
+assert identical, "stream ingestion diverged from the one-shot prompt"

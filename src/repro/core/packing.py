@@ -145,6 +145,66 @@ def mask_low_activity_timesteps(
 
 
 # ---------------------------------------------------------------------------
+# Event-window encoding: the ingestion-side bridge from asynchronous sensor
+# events (DVS-style (x, y, polarity, t) tuples) to the packed temporal format
+# everything downstream consumes.  One fixed-duration window of events becomes
+# one (H*W,) packed word vector — T timestep bit-planes binned uniformly over
+# the window, exactly the shape `pack_spikes` produces from a dense (T, ...)
+# tensor.  An empty window encodes to all-zero words, which
+# `timestep_activity_map` scores as all-silent, so the adaptive temporal
+# kernel (policy temporal=adaptive_t) skips such windows for free.
+# ---------------------------------------------------------------------------
+
+def encode_event_window(
+    events: jax.Array,
+    height: int,
+    width: int,
+    T: int,
+    window_us: int,
+    t0: int = 0,
+) -> jax.Array:
+    """Encode one window of sensor events into packed spike words.
+
+    ``events`` is an (N, 4) int array of ``(x, y, polarity, t_us)`` rows
+    (N may be 0).  Events with ``t_us`` in ``[t0, t0 + window_us)`` are
+    binned into T uniform timestep planes, ``tau = (t_us - t0) * T //
+    window_us``; a pixel fires at plane tau if ANY event (either polarity —
+    a spike is a spike; for separate polarity channels, call once per
+    filtered polarity) lands in that bin, so duplicates are idempotent.
+    Events outside the window or the (height, width) sensor extent are
+    ignored.  Returns ``(height * width,)`` uint32 packed words in
+    row-major pixel order (``idx = y * width + x``), bit t = plane t.
+
+    Pure jnp and jit-compatible with static ``height/width/T/window_us``.
+    """
+    if T > MAX_T:
+        raise ValueError(f"T={T} exceeds MAX_T={MAX_T}")
+    if T <= 0 or height <= 0 or width <= 0:
+        raise ValueError(
+            f"height/width/T must be positive, got {(height, width, T)}"
+        )
+    if window_us <= 0:
+        raise ValueError(f"window_us must be positive, got {window_us}")
+    ev = jnp.asarray(events, jnp.int32).reshape(-1, 4)
+    x, y, t = ev[:, 0], ev[:, 1], ev[:, 3]
+    rel = t - jnp.int32(t0)
+    valid = (
+        (rel >= 0)
+        & (rel < window_us)
+        & (x >= 0)
+        & (x < width)
+        & (y >= 0)
+        & (y < height)
+    )
+    # clip AFTER masking: out-of-range rows scatter a 0 into a safe slot
+    tau = jnp.clip(rel * T // window_us, 0, T - 1)
+    idx = jnp.clip(y * width + x, 0, height * width - 1)
+    plane = jnp.zeros((T, height * width), jnp.uint32)
+    plane = plane.at[tau, idx].max(valid.astype(jnp.uint32))
+    return pack_spikes(plane)
+
+
+# ---------------------------------------------------------------------------
 # Block-activity maps: the TPU-granularity analogue of LoAS's silent-neuron
 # skipping (DESIGN.md D1).  A (bm, bk) block of packed words that is entirely
 # silent contributes nothing to any output tile and can be skipped by the

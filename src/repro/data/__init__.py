@@ -1,3 +1,10 @@
+from .events import moving_blob_events, rate_coded_events, split_into_windows
 from .pipeline import SyntheticLMData, batch_shapes
 
-__all__ = ["SyntheticLMData", "batch_shapes"]
+__all__ = [
+    "SyntheticLMData",
+    "batch_shapes",
+    "moving_blob_events",
+    "rate_coded_events",
+    "split_into_windows",
+]

@@ -18,7 +18,7 @@ different lifetimes:
 Plan lifecycle::
 
     load:    w -> prune (hard zeros) -> build_weight_plan(w)   # host, once
-    serve:   ops.ftp_spmm_bsr(packed_spikes, plan, T)          # device, per
+    serve:   ops.dispatch(packed_spikes, plan, policy, T)      # device, per
              #   activity map + join skip happen inside the jit'd call; a
              #   change in spike activity is a plain value change — same
              #   shapes, zero retrace/recompile.
@@ -291,7 +291,7 @@ def shard_plan(plan: WeightJoinPlan, shards: int) -> "ShardedWeightJoinPlan":
     """`split_plan` + `stack_plans`: one plan whose leading axis deals the
     column slabs out to ``shards`` model shards (place it with
     ``NamedSharding(mesh, P('model', ...))`` and consume it through the
-    shard_map entry `ops.ftp_spmm_bsr` dispatches to under a serve mesh).
+    shard_map entry `ops.dispatch` routes to under a serve mesh).
 
     Returned as `ShardedWeightJoinPlan` so the shard axis is carried by
     TYPE: layer-stacking (`stack_plans`) and `lax.scan` slicing preserve

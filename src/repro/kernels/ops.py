@@ -21,15 +21,15 @@ and no retrace across requests (`BSR_TRACE_COUNT` counts traces so callers
 can assert the latter).
 
 The pre-policy entry points (``ftp_spmm``, ``ftp_spmm_fused_lif``,
-``ftp_spmm_bsr`` and friends) remain as thin shims that emit a
-`DeprecationWarning` and forward to the same internals — internal code and
-tests never call them (CI runs tier-1 with ``-W error::DeprecationWarning``).
+``ftp_spmm_bsr`` and friends) are gone — `dispatch` with the equivalent
+policy is the only door (they spent two PRs as DeprecationWarning shims;
+CI runs tier-1 with ``-W error::DeprecationWarning``, so no caller could
+still be on them).
 """
 from __future__ import annotations
 
 import contextlib
 import functools
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -642,96 +642,6 @@ def dispatch(
             return out.reshape(T, B, M, weights_or_plan.shape[1])
         return _spmm_mesh(a, weights_or_plan, T, mesh=mesh,
                           bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
-
-
-# ---------------------------------------------------------------------------
-# Deprecated pre-policy entry points (shims).  Every one maps to `dispatch`
-# with an equivalent policy; they warn so drifted call sites surface (CI
-# runs tier-1 with -W error::DeprecationWarning).
-# ---------------------------------------------------------------------------
-
-def _warn_legacy(name: str, equivalent: str) -> None:
-    warnings.warn(
-        f"ops.{name} is deprecated; use ops.dispatch(a, weights_or_plan, "
-        f"policy, T) with {equivalent} (see repro.serve.policy)",
-        DeprecationWarning,
-        stacklevel=3,
-    )
-
-
-def ftp_spmm(a_packed, b, T: int, **kw):
-    """Deprecated — `dispatch(a, w, PACKED_DENSE, T)`."""
-    _warn_legacy("ftp_spmm", "policy=PACKED_DENSE")
-    return _spmm(a_packed, b, T, **kw)
-
-
-def ftp_spmm_fused_lif(a_packed, b, T: int, *args, **kw):
-    """Deprecated — `dispatch(a, w, PACKED_DENSE, T, fuse_lif=True)`."""
-    _warn_legacy("ftp_spmm_fused_lif", "policy=PACKED_DENSE, fuse_lif=True")
-    return _spmm_fused(a_packed, b, T, *args, **kw)
-
-
-def ftp_spmm_batched(a_packed, b, T: int, **kw):
-    """Deprecated — `dispatch` with a (B, M, K) operand."""
-    _warn_legacy("ftp_spmm_batched", "policy=PACKED_DENSE (batched operand)")
-    return _spmm_batched(a_packed, b, T, **kw)
-
-
-def ftp_spmm_fused_lif_batched(a_packed, b, T: int, *args, **kw):
-    """Deprecated — `dispatch` with a (B, M, K) operand and fuse_lif."""
-    _warn_legacy(
-        "ftp_spmm_fused_lif_batched",
-        "policy=PACKED_DENSE, fuse_lif=True (batched operand)",
-    )
-    return _spmm_fused_batched(a_packed, b, T, *args, **kw)
-
-
-def ftp_spmm_sharded(a_packed, b, T: int, *, mesh=None, **kw):
-    """Deprecated — `dispatch` with a policy whose placement carries the
-    mesh."""
-    _warn_legacy(
-        "ftp_spmm_sharded",
-        "policy=ExecutionPolicy(spike_format='packed', "
-        "placement=Placement(mesh=mesh))",
-    )
-    return _spmm_mesh(a_packed, b, T, mesh=mesh, **kw)
-
-
-def ftp_spmm_bsr(a_packed, plan, T: int, *args, **kw):
-    """Deprecated — `dispatch(a, plan, PACKED_DUAL, T, fuse_lif=...)`."""
-    _warn_legacy("ftp_spmm_bsr", "policy=PACKED_DUAL")
-    return _bsr(a_packed, plan, T, *args, **kw)
-
-
-def ftp_spmm_bsr_batched(a_packed, plan, T: int, *args, **kw):
-    """Deprecated — `dispatch` with a (B, M, K) operand and a plan."""
-    _warn_legacy("ftp_spmm_bsr_batched", "policy=PACKED_DUAL (batched operand)")
-    return _bsr_batched(a_packed, plan, T, *args, **kw)
-
-
-def ftp_spmm_bsr_fused_lif(a_packed, plan, T, *args, **kwargs):
-    """Deprecated — `dispatch(a, plan, PACKED_DUAL, T, fuse_lif=True)`."""
-    _warn_legacy(
-        "ftp_spmm_bsr_fused_lif", "policy=PACKED_DUAL, fuse_lif=True"
-    )
-    kwargs["fuse_lif"] = True
-    return _bsr(a_packed, plan, T, *args, **kwargs)
-
-
-def ftp_spmm_bsr_fused_lif_batched(a_packed, plan, T, *args, **kwargs):
-    """Deprecated — batched `dispatch` with fuse_lif and a plan."""
-    _warn_legacy(
-        "ftp_spmm_bsr_fused_lif_batched",
-        "policy=PACKED_DUAL, fuse_lif=True (batched operand)",
-    )
-    kwargs["fuse_lif"] = True
-    return _bsr_batched(a_packed, plan, T, *args, **kwargs)
-
-
-def ftp_spmm_dual_sparse(a_packed, b, T: int, *args, **kw):
-    """Deprecated — `dispatch(a, w, PACKED_DUAL, T)` (plan built per call)."""
-    _warn_legacy("ftp_spmm_dual_sparse", "policy=PACKED_DUAL (raw weights)")
-    return _dual_sparse_once(a_packed, b, T, *args, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -30,6 +30,17 @@ third sparsity axis; bitwise at the default --min-spikes 1):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --spiking --weight-density 0.3 --temporal adaptive --batch 4
 
+Event-stream serving (`--stream`): prompts arrive as DVS-style event
+windows instead of token arrays — each request is a `StreamSession` fed
+from a synthetic moving-blob sensor (`repro.data.events`), admitted once
+its first ``--window-us`` window completes, ingested incrementally, and
+closed either explicitly or by ``--idle-timeout`` of event-time silence.
+``--prompt-len`` counts event WINDOWS (one frame token each):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --spiking --weight-density 0.3 --stream --window-us 1000 \
+        --temporal adaptive --batch 4 --prompt-len 8 --gen 8
+
 Requests (`--batch` of them) are submitted to `repro.serve.Engine`, which
 batches prefills, merges decode cohorts, and reports TTFT / throughput.
 `generate` below is the original single-shot loop, kept as the reference
@@ -108,6 +119,46 @@ def build_policy(args, cfg):
     )
 
 
+def serve_streams(engine, cfg, args):
+    """Feed ``--batch`` synthetic DVS streams through the engine, one event
+    window per `engine.step()`, and return (outputs, sessions)."""
+    from repro.data.events import moving_blob_events, split_into_windows
+    from repro.serve import EventStream, StreamSession
+
+    n_win = args.prompt_len
+    sessions, tickets, feeds = [], [], []
+    for i in range(args.batch):
+        # every other stream goes dark for one window: the gap still emits
+        # a frame (all-silent words) whose timestep planes --temporal
+        # adaptive skips in-kernel
+        silent = (n_win // 2,) if i % 2 and n_win > 1 else ()
+        events = moving_blob_events(
+            n_win, height=16, width=16, window_us=args.window_us,
+            seed=i, silent=silent,
+        )
+        stream = EventStream(
+            args.window_us,
+            idle_timeout_us=args.idle_timeout or None,
+        )
+        session = StreamSession(
+            stream, height=16, width=16, T=cfg.spiking_T, vocab=cfg.vocab,
+        )
+        tickets.append(engine.submit_stream(session, args.gen))
+        sessions.append(session)
+        feeds.append(split_into_windows(events, n_win, args.window_us))
+    for w in range(n_win):
+        for session, chunks in zip(sessions, feeds):
+            session.stream.push(chunks[w])
+        engine.step()
+    for session in sessions:
+        if args.idle_timeout:
+            session.stream.tick(n_win * args.window_us + args.idle_timeout)
+        else:
+            session.stream.close()
+    out = engine.run()
+    return [out[t.rid] for t in tickets], sessions
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -176,6 +227,23 @@ def main(argv=None):
                          "walked under --temporal adaptive; 1 (default) "
                          "skips only all-silent planes and stays bitwise, "
                          ">1 requires --exactness approximate")
+    # -- event-stream ingestion (serve/streaming.py + data/events.py) --------
+    ap.add_argument("--stream", action="store_true",
+                    help="serve event streams instead of token prompts: "
+                         "each request is a StreamSession fed one synthetic "
+                         "DVS window per engine step, admitted on its first "
+                         "complete window and ingested incrementally; "
+                         "--prompt-len counts event windows (one frame "
+                         "token each)")
+    ap.add_argument("--window-us", type=int, default=1000,
+                    help="event-time width of one stream window under "
+                         "--stream; each window encodes to one frame "
+                         "token")
+    ap.add_argument("--idle-timeout", type=int, default=0,
+                    help="under --stream: event-time microseconds of "
+                         "silence after which tick() auto-closes a stream "
+                         "(the idle watermark); 0 = close explicitly once "
+                         "all windows are pushed")
     # -- arch surgery -------------------------------------------------------
     ap.add_argument("--spiking", action="store_true",
                     help="swap the arch's MLP blocks for dual-sparse "
@@ -237,6 +305,11 @@ def main(argv=None):
         )
     if not cfg.supports_decode:
         raise SystemExit(f"{cfg.name} is encoder-only; no decode path")
+    if args.stream and (args.handoff_path or args.resume):
+        raise SystemExit(
+            "--stream does not compose with --handoff-path/--resume in this "
+            "launcher (mid-ingest drain is exercised by the test suite)"
+        )
     policy = build_policy(args, cfg)
     print(f"policy: {policy.describe()}")
     max_len = args.prompt_len + args.gen
@@ -346,6 +419,11 @@ def main(argv=None):
         preemption.restore()
         out = engine.run()
         outs = [out[t.rid] for t in tickets]
+    elif args.stream:
+        outs, sessions = serve_streams(engine, cfg, args)
+        # the materialized frame-token prompts — the approximate-drift
+        # reference below replays these as ordinary requests
+        prompts = [sess.prompt_tokens() for sess in sessions]
     else:
         outs = engine.generate_batch(prompts, args.gen)
     s = engine.summary()
@@ -388,6 +466,11 @@ def main(argv=None):
     if policy.temporal.enabled:
         print(f"temporal: {policy.temporal.describe()} — "
               f"{s['timesteps_skipped']} timestep planes skipped")
+    if args.stream:
+        print(f"streamed {s['stream_sessions']} sessions / "
+              f"{s['stream_windows']} frames — frame->first-token "
+              f"p50 {s['frame_to_first_token_s_p50']*1e3:.1f}ms / "
+              f"p99 {s['frame_to_first_token_s_p99']*1e3:.1f}ms")
     print(f"served {s['n_requests']} requests / {s['total_tokens']} tokens "
           f"in {s['wall_s']:.2f}s ({s['throughput_tok_s']:.1f} tok/s, "
           f"ttft_p50 {s['ttft_s_p50']*1e3:.0f}ms, "

@@ -61,18 +61,22 @@ from .scheduler import (
     rebalance_pad,
 )
 from .sharding import make_serve_mesh, mesh_summary, parse_mesh_spec
+from .streaming import Backpressure, EventStream, Frame, StreamSession
 
 __all__ = [
     "AdmissionError",
     "AdmissionTicket",
+    "Backpressure",
     "CacheOps",
     "CacheStore",
     "Cohort",
     "DenseCacheOps",
     "Engine",
     "EngineMetrics",
+    "EventStream",
     "Exactness",
     "ExecutionPolicy",
+    "Frame",
     "Handoff",
     "HandoffRequest",
     "PackedSpikeCache",
@@ -91,6 +95,7 @@ __all__ = [
     "RequestMetrics",
     "RequestState",
     "Scheduler",
+    "StreamSession",
     "SyncExecutor",
     "Temporal",
     "adaptive_t",

@@ -78,12 +78,15 @@ execution — consumed here and by kernel dispatch:
   orthogonal to exactness, so bitwise/approximate parity gating composes
   with pipelining unchanged.
 
-The legacy knobs (``spiking_packed`` / ``dual_sparse`` / ``mesh``) still
-work: they map to the equivalent policy and emit a `DeprecationWarning`.
+Prompts need not be complete at submit time: `submit_stream` queues a
+`StreamSession` (serve/streaming.py) whose prompt materializes
+incrementally from sensor event frames — the session is admitted once its
+first window lands, later windows ingest into the in-flight cohort as
+decode-shaped chunks, and generation starts at the stream's close
+watermark, token-identical to submitting the same frames as one prompt.
 """
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -115,6 +118,13 @@ class Cohort:
     membership change (the executor rebuilds from host state).
     ``pending`` is the pipelined executor's in-flight window: decode steps
     dispatched but not yet host-materialized (always empty in sync mode).
+
+    ``stream`` marks an INGESTING cohort (serve/streaming.py): its prompt
+    is still arriving as event frames, so it is excluded from merge and
+    decode, and ``pending`` holds the single un-emitted step the last
+    ingest chunk produced — the first generated token once the stream
+    closes (executor ``_go_live``).  None for normal cohorts and after
+    go-live.
     """
 
     slots: list[RequestState]
@@ -124,6 +134,7 @@ class Cohort:
     spikes: PackedSpikeCache | None = None
     next_tokens: object | None = None
     pending: list = field(default_factory=list)
+    stream: object | None = None
 
 
 class Engine:
@@ -146,16 +157,14 @@ class Engine:
         page_pool_rows: int | None = None,   # paging='paged': pool capacity
         prefix_cache: bool | None = None,    # paging='paged': radix index
         preemption=None,                     # ft.preemption.PreemptionHandler
-        spiking_packed: bool | None = None,  # deprecated -> policy
-        dual_sparse: bool | None = None,     # deprecated -> policy
-        mesh=None,                           # deprecated -> policy.placement
     ):
         cfg = model.cfg
         if not cfg.supports_decode or cfg.encoder_only:
             raise ValueError(f"{cfg.name} has no decode path; cannot serve")
-        policy = self._resolve_policy(
-            cfg, policy, spiking_packed, dual_sparse, mesh
-        )
+        if policy is None:
+            # default: the arch-independent float/dense policy (explicitly
+            # opt into packed/dual-sparse/mesh via ExecutionPolicy.for_arch)
+            policy = ExecutionPolicy()
         policy.validate_for(cfg)
         self.policy = policy
         mesh = policy.mesh
@@ -341,36 +350,6 @@ class Engine:
                 donate_argnums=(2,),
             ))
 
-    @staticmethod
-    def _resolve_policy(cfg, policy, spiking_packed, dual_sparse, mesh):
-        """Either the explicit policy, or the legacy knobs mapped to their
-        equivalent policy (with a DeprecationWarning naming it)."""
-        legacy = {
-            k: v for k, v in (("spiking_packed", spiking_packed),
-                              ("dual_sparse", dual_sparse), ("mesh", mesh))
-            if v is not None
-        }
-        if policy is not None:
-            if legacy:
-                raise ValueError(
-                    f"pass either policy= or the legacy knobs "
-                    f"({', '.join(sorted(legacy))}), not both"
-                )
-            return policy
-        policy = ExecutionPolicy.from_legacy(
-            cfg, spiking_packed=bool(spiking_packed),
-            dual_sparse=dual_sparse, mesh=mesh,
-        )
-        if legacy:
-            warnings.warn(
-                f"Engine({', '.join(sorted(legacy))}=...) is deprecated; "
-                f"pass policy=ExecutionPolicy({policy.describe()}) "
-                "(see repro.serve.policy)",
-                DeprecationWarning,
-                stacklevel=3,
-            )
-        return policy
-
     def _engine_scope(self, fn):
         """Run `fn` with the engine's trace-time context installed: the
         spiking FFN in packed-inference mode (restoring the previous —
@@ -406,6 +385,25 @@ class Engine:
         ticket) when the request cannot be accepted."""
         return self.scheduler.submit(prompt, max_new_tokens)
 
+    def submit_stream(self, session, max_new_tokens: int) -> AdmissionTicket:
+        """Queue a `StreamSession` (serve/streaming.py): a request whose
+        prompt arrives incrementally as event frames.  The session waits in
+        the scheduler's streaming lane until its first window completes,
+        then is admitted into its own cohort; later frames ingest into the
+        in-flight cohort and generation starts at the stream's close
+        watermark.  Binds the session's frame budget to this engine's
+        geometry (``max_len - max_new_tokens``), so over-long streams
+        surface as `streaming.Backpressure` instead of cache overflow."""
+        if self.spiking_packed and session.T != self.cfg.spiking_T:
+            raise ValueError(
+                f"stream session T={session.T} != engine spiking_T="
+                f"{self.cfg.spiking_T}; frame words must score against the "
+                "policy's temporal axis"
+            )
+        ticket = self.scheduler.submit_stream(session, max_new_tokens)
+        session.max_frames = self.max_len - max_new_tokens
+        return ticket
+
     @property
     def n_active(self) -> int:
         return sum(len(c.slots) for c in self.cohorts)
@@ -432,10 +430,18 @@ class Engine:
         """One engine iteration — delegated to the policy's executor.
         When a preemption notice is pending, admission closes first so the
         step only advances in-flight cohorts (new submits are rejected
-        with a ``draining`` ticket)."""
+        with a ``draining`` ticket).
+
+        With an empty queue and no in-flight cohorts the step is a
+        guaranteed cheap no-op: no dispatch, no retrace, no metrics
+        sample.  Streaming drivers tick the engine between frames and
+        trace replays (`benchmarks.fig13_14_traffic.replay_trace`) step it
+        as an arrival clock — idle ticks must stay free."""
         if (self.preemption is not None and self.preemption.should_stop
                 and not self.scheduler.closed):
             self.scheduler.close()
+        if self.idle:
+            return {"active": 0, "queued": 0, "cohorts": 0}
         return self.executor.step()
 
     def flush(self) -> None:
@@ -474,12 +480,19 @@ class Engine:
         Zero tokens are lost: every dispatched decode is materialized
         (`flush`) before in-flight progress is captured, finished results
         ride the handoff as data, and unfinished/waiting requests are
-        re-queued on the successor for deterministic replay."""
+        re-queued on the successor for deterministic replay.  Mid-ingest
+        stream cohorts cannot finish (their streams stay open), so they
+        hand off best-effort: the frames completed so far become the
+        successor request's prompt."""
         from .handoff import capture_handoff
 
         self.scheduler.close()
         budget = step_budget
-        while self.cohorts and (budget is None or budget > 0):
+        while (
+            self.cohorts
+            and any(c.stream is None for c in self.cohorts)
+            and (budget is None or budget > 0)
+        ):
             self.step()
             if budget is not None:
                 budget -= 1

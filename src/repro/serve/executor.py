@@ -129,16 +129,23 @@ class SyncExecutor:
             hit_groups = (e.scheduler.schedule_prefix_hits()
                           if e.prefix_index is not None else [])
             groups = e.scheduler.schedule()
+            streams = e.scheduler.schedule_streams()
         for group in hit_groups:
             with self._clock("admit_hits"):
                 e.admit_prefix_hits(group)
         for group in groups:
             self.prefill(group)
+        for session, req in streams:
+            self.admit_stream(session, req)
+        with self._clock("ingest"):
+            self.ingest()  # stream frames -> chunked incremental prefill
         with self._clock("merge"):
             self.merge()  # flushes merging cohorts (pipelined)
         with self._clock("retire"):
             self.retire()  # requests finished at prefill never enter decode
         for cohort in e.cohorts:
+            if cohort.stream is not None:
+                continue  # ingesting: generation starts at go-live
             self.decode_cohort(cohort)
         with self._clock("retire"):
             self.retire()
@@ -187,17 +194,112 @@ class SyncExecutor:
             # writes the rows' tail pages (no-op without a prefix index)
             e.publish_prefix(cohort)
 
+    # -- streaming stages (serve/streaming.py) --------------------------------
+    def admit_stream(self, session, req: Request) -> None:
+        """Admit a stream session into its own cohort: prefill over ONLY
+        the first frame's token — a constant (B, 1) shape, so every stream
+        admission after the first hits the same jit trace — and emit
+        NOTHING.  The argmax of each ingested chunk rides in
+        ``cohort.pending`` as the go-live candidate (it only becomes the
+        first generated token if no further frame arrives)."""
+        e = self.engine
+        with self._clock("prefill"):
+            f0 = session.frames[0]
+            req.prompt = np.asarray([f0.token], np.int32)
+            tokens, n_dummy = pad_batch(
+                np.asarray([[f0.token]], np.int32), e.batch_align
+            )
+            e.metrics.n_padded_rows += n_dummy
+            logits, cache = e.dispatch_prefill(tokens)
+            e.metrics.n_prefill_batches += 1
+            cohort = e.new_cohort(
+                slots=[RequestState(req)], cache=cache, length=1,
+                n_dummy=n_dummy, stream=session,
+            )
+            cohort.pending.append(PendingStep(
+                tokens=jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32),
+                logits=(logits[:1, -1] if e.capture_logits else None),
+            ))
+            e.record_timestep_skips(f0.words[None])
+            e.metrics.n_stream_sessions += 1
+            e.metrics.n_stream_windows += 1
+            e.cohorts.append(cohort)
+
+    def ingest(self) -> None:
+        """Chunked incremental prefill: each newly complete frame of every
+        ingesting cohort appends as one (B, 1) decode-shaped dispatch —
+        bitwise-identical to the same position of a monolithic prefill
+        (cached attention always reduces over the full cache extent with
+        position masking) and the same jit trace as a normal decode, so
+        streaming adds zero retraces.  Once the stream's close watermark
+        lands and every frame is in, the cohort goes live."""
+        e = self.engine
+        for cohort in e.cohorts:
+            session = cohort.stream
+            if session is None:
+                continue
+            session.poll()
+            frames = session.frames
+            while cohort.length < len(frames):
+                f = frames[cohort.length]
+                row = [f.token] + [0] * cohort.n_dummy
+                tokens = jnp.asarray(row, jnp.int32)[:, None]
+                logits, cohort.cache = e.dispatch_decode(
+                    tokens, cohort.cache
+                )
+                cohort.length += 1
+                cohort.pending = [PendingStep(
+                    tokens=jnp.argmax(
+                        logits[:, -1], axis=-1
+                    ).astype(jnp.int32),
+                    logits=(logits[:1, -1] if e.capture_logits else None),
+                )]
+                e.record_timestep_skips(f.words[None])
+                e.metrics.n_stream_windows += 1
+            cohort.slots[0].request.prompt = session.prompt_tokens()
+            if session.delivered:
+                self._go_live(cohort)
+
+    def _go_live(self, cohort) -> None:
+        """The stream closed and every frame is ingested — the prompt is
+        final.  Emit the first generated token (the argmax the LAST ingest
+        chunk produced, exactly what a monolithic prefill's last position
+        yields) and convert the cohort to the normal decode lifecycle."""
+        e = self.engine
+        session = cohort.stream
+        st = cohort.slots[0]
+        p = cohort.pending.pop()
+        cohort.pending = []
+        toks = np.asarray(p.tokens)
+        if p.logits is not None:
+            e._capture(cohort.slots, np.asarray(p.logits)[:, None])
+        st.emit(int(toks[0]), e.eos_id)
+        cohort.next_tokens = p.tokens  # device feedback for the next decode
+        cohort.stream = None
+        if e.spiking_packed:
+            cohort.spikes = e.new_spike_cache()
+            cohort.spikes.append(e._slot_spikes(cohort))
+        # frame-to-first-token latency: every frame of this session waited
+        # from its completion until this emit
+        now = st.first_token_time
+        for f in session.frames:
+            e.metrics.stream_frame_latency_s.append(now - f.t_wall)
+
     def merge(self) -> None:
         """Merge cohorts at the same sequence position (continuous
         batching): caches concat along their batch axes, alignment rows are
-        dropped so live rows stay a prefix."""
+        dropped so live rows stay a prefix.  Ingesting stream cohorts never
+        merge — their length is still moving."""
         e = self.engine
         if not e.merge_cohorts or len(e.cohorts) < 2:
             return
         by_len: dict[int, list] = {}
-        for c in e.cohorts:
-            by_len.setdefault(c.length, []).append(c)
         merged = []
+        for c in e.cohorts:
+            if c.stream is not None:
+                merged.append(c)
+                continue
+            by_len.setdefault(c.length, []).append(c)
         for length, group in by_len.items():
             if len(group) == 1:
                 merged.append(group[0])
@@ -362,6 +464,10 @@ class PipelinedExecutor(SyncExecutor):
         identity is untouched."""
         e = self.engine
         for cohort in e.cohorts:
+            if cohort.stream is not None:
+                # ingesting: B is pinned to the admission shape (re-packing
+                # would retrace every later ingest chunk); repack at go-live
+                continue
             self.flush(cohort)
             cohort.cache = e._live_cache(cohort)
             cohort.next_tokens = None
@@ -438,7 +544,11 @@ class PipelinedExecutor(SyncExecutor):
 
     def flush(self, cohort) -> None:
         """Materialize ALL in-flight steps (forced before merge/retire and
-        when the cohort's budget is exhausted)."""
+        when the cohort's budget is exhausted).  An ingesting stream
+        cohort's ``pending`` holds its go-live candidate, NOT an emitted
+        step — only `_go_live` may land it."""
+        if cohort.stream is not None:
+            return
         while cohort.pending:
             self._materialize(cohort)
         if self.engine.spiking_packed and cohort.spikes is not None:

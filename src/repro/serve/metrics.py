@@ -66,6 +66,14 @@ class EngineMetrics:
     # a jit trace); pipelined decode-step encodes stay on device and are
     # sampled only at flush, so this is a lower bound there.
     timesteps_skipped: int = 0
+    # event-stream ingestion counters (serve/streaming.py): sessions
+    # admitted through the scheduler's streaming lane, frames ingested
+    # (admission frame + later chunks), and per-frame wait from window
+    # completion to the session's first generated token — the streaming
+    # latency observable (frame-to-first-token), reported as p50/p99.
+    n_stream_sessions: int = 0
+    n_stream_windows: int = 0
+    stream_frame_latency_s: list = field(default_factory=list)
     # fault-tolerance counters (serve/handoff.py + Engine.drain/remesh and
     # the pipelined executor's straggler fold)
     n_drained: int = 0            # requests handed off unfinished at drain
@@ -141,6 +149,14 @@ class EngineMetrics:
             "prefix_hits": self.n_prefix_hits,
             "prefix_tokens_reused": self.n_prefix_tokens_reused,
             "timesteps_skipped": self.timesteps_skipped,
+            "stream_sessions": self.n_stream_sessions,
+            "stream_windows": self.n_stream_windows,
+            "frame_to_first_token_s_p50": _percentile(
+                sorted(self.stream_frame_latency_s), 0.50
+            ),
+            "frame_to_first_token_s_p99": _percentile(
+                sorted(self.stream_frame_latency_s), 0.99
+            ),
             "drained_requests": self.n_drained,
             "remeshes": self.n_remeshes,
             "straggler_events": self.n_straggler_events,

@@ -37,9 +37,8 @@ execution choice is one frozen, hashable dataclass-pytree with four axes:
 Everything downstream consumes the policy: ``Engine(policy=...)``,
 ``kernels.ops.dispatch(a, weights_or_plan, policy, T)``, the serve CLI
 (``launch/serve.py``), and `serve.sharding` (which derives its model-axis
-dim set from the policy).  The legacy knobs and the old per-kernel entry
-points remain as thin `DeprecationWarning` shims that construct the
-equivalent policy.
+dim set from the policy).  It is the only configuration surface — the
+legacy engine knobs and per-kernel entry points they shimmed are removed.
 
 Policies are registered static pytrees (`jax.tree_util.register_static`):
 hashable, usable as jit static arguments, and safe to close over at trace
@@ -427,27 +426,6 @@ class ExecutionPolicy:
             temporal=temporal if temporal is not None else Temporal(),
         )
         return pol.validate_for(cfg)
-
-    @classmethod
-    def from_legacy(cls, cfg, *, spiking_packed: bool = False,
-                    dual_sparse: bool | None = None,
-                    mesh: Mesh | None = None) -> "ExecutionPolicy":
-        """Map the pre-policy engine knobs to the equivalent policy,
-        preserving their (silently coercing) semantics: packed spikes only
-        take effect on spiking archs, dual-sparse only with packed spikes
-        and pruned weights."""
-        packed = bool(spiking_packed and cfg.spiking_ffn)
-        if dual_sparse is None:
-            dual = packed and cfg.spiking_weight_density < 1.0
-        else:
-            dual = bool(
-                packed and dual_sparse and cfg.spiking_weight_density < 1.0
-            )
-        return cls(
-            spike_format="packed" if packed else "float",
-            weight_sparsity="dual_sparse" if dual else "dense",
-            placement=Placement(mesh=mesh),
-        )
 
 
 # Common arch-independent policies (kernel-level callers: dispatch, tests,

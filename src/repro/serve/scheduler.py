@@ -190,6 +190,7 @@ class Scheduler:
         self.prefix_index = prefix_index
         self.waiting: deque[Request] = deque()
         self.hit_waiting: deque[tuple[Request, object]] = deque()
+        self.stream_waiting: deque[tuple[object, Request]] = deque()
         self.active_slots = 0
         self._ids = itertools.count()
         self._tickets: dict[int, AdmissionTicket] = {}
@@ -236,6 +237,72 @@ class Scheduler:
         if t is not None:
             t.outcome = "admitted"
 
+    # -- streaming lane -----------------------------------------------------
+    def submit_stream(self, session, max_new_tokens: int) -> AdmissionTicket:
+        """Queue a `StreamSession` whose prompt has not materialized yet.
+
+        The session waits in a third lane until its first event window
+        completes (`schedule_streams`), then is admitted into its own
+        cohort — the prompt grows in place as later windows land, so
+        streams never share a prefill bucket.  Returns the same structured
+        `AdmissionTicket` as `submit`; ``request.prompt`` starts empty and
+        is filled with the frame tokens as they are ingested."""
+        if self.closed:
+            raise self._reject(
+                "draining: admission closed for preemption; "
+                "resubmit to the successor engine"
+            )
+        if max_new_tokens < 1:
+            raise self._reject("non-positive max_new_tokens")
+        if max_new_tokens + 1 > self.max_len:
+            raise self._reject(
+                f"stream needs at least 1 frame + {max_new_tokens} generated"
+                f" > engine max_len {self.max_len}"
+            )
+        if self.queue_depth >= self.max_queue:
+            raise self._reject(f"queue full ({self.max_queue} waiting)")
+        req = Request(
+            next(self._ids), np.zeros((0,), np.int32), max_new_tokens
+        )
+        ticket = AdmissionTicket(request=req)
+        self.stream_waiting.append((session, req))
+        self._tickets[req.rid] = ticket
+        return ticket
+
+    def schedule_streams(self) -> list[tuple[object, Request]]:
+        """Pop stream sessions whose first window has landed, capped by
+        free slots (one session per cohort).  Sessions that closed without
+        ever producing a frame get a terminal ``rejected`` ticket."""
+        if self.closed or not self.stream_waiting:
+            return []
+        admitted: list[tuple[object, Request]] = []
+        kept: deque[tuple[object, Request]] = deque()
+        for session, req in self.stream_waiting:
+            try:
+                session.poll()
+            except Exception:
+                # budget backpressure mid-poll: frames materialized so far
+                # stand; producer-side push sees its own Backpressure
+                pass
+            if not session.frames:
+                if session.delivered:
+                    t = self._tickets.pop(req.rid, None)
+                    if t is not None:
+                        t.outcome = "rejected"
+                        t.reason = "stream closed with no frames"
+                    self.n_rejected += 1
+                else:
+                    kept.append((session, req))
+                continue
+            if self.free_slots > 0:
+                self.active_slots += 1
+                self._mark_admitted(req.rid)
+                admitted.append((session, req))
+            else:
+                kept.append((session, req))
+        self.stream_waiting = kept
+        return admitted
+
     def restore(self, req: Request) -> AdmissionTicket:
         """Re-enqueue a handed-off request PRESERVING its rid (the resume
         path, `serve/handoff.py`).  Capacity checks are skipped — the
@@ -280,8 +347,17 @@ class Scheduler:
         for req, entry in self.hit_waiting:
             entry.pins -= 1
             out.append((req, self._mark_drained(req.rid)))
+        for session, req in self.stream_waiting:
+            # best-effort: the handoff prompt is the frames completed so far
+            try:
+                session.poll()
+            except Exception:
+                pass
+            req.prompt = session.prompt_tokens()
+            out.append((req, self._mark_drained(req.rid)))
         self.waiting.clear()
         self.hit_waiting.clear()
+        self.stream_waiting.clear()
         return out
 
     def _mark_drained(self, rid: int) -> AdmissionTicket | None:
@@ -292,7 +368,11 @@ class Scheduler:
 
     @property
     def queue_depth(self) -> int:
-        return len(self.waiting) + len(self.hit_waiting)
+        return (
+            len(self.waiting)
+            + len(self.hit_waiting)
+            + len(self.stream_waiting)
+        )
 
     @property
     def free_slots(self) -> int:

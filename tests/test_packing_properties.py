@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from _hyp import given, settings, st
 from repro.core.packing import (
     MAX_T,
+    encode_event_window,
     mask_low_activity,
     mask_low_activity_timesteps,
     pack_spikes,
@@ -177,3 +178,115 @@ def test_mask_timesteps_preserves_bits_above_T():
 def test_timestep_popcount_rejects_T_over_max():
     with pytest.raises(ValueError):
         timestep_popcount(jnp.zeros((4,), jnp.uint32), MAX_T + 1)
+
+
+# ---------------------------------------------------------------------------
+# encode_event_window (the event-stream ingestion encoder, serve/streaming.py)
+# ---------------------------------------------------------------------------
+
+
+def _event_plane_oracle(ev, height, width, T, window_us, t0):
+    """Reference binning in plain numpy: a pixel fires at plane tau iff any
+    in-window, in-extent event lands in its bin."""
+    plane = np.zeros((T, height * width), np.float32)
+    for x, y, _p, t in ev:
+        rel = t - t0
+        if 0 <= rel < window_us and 0 <= x < width and 0 <= y < height:
+            plane[rel * T // window_us, y * width + x] = 1.0
+    return plane
+
+
+@settings(max_examples=25)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    n=st.integers(min_value=0, max_value=96),
+    window_us=st.sampled_from([1, 7, 100, 1000]),
+    t0_windows=st.integers(min_value=0, max_value=3),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_encode_event_window_roundtrip(T, n, window_us, t0_windows, seed):
+    """event -> packed -> unpack_spikes sets EXACTLY the bins of valid
+    events: every in-window in-extent event's (tau, pixel) bit is set, no
+    spurious bit appears, and out-of-window/out-of-extent rows (drawn past
+    the sensor and window on purpose) are ignored — the oracle is a plain
+    numpy re-binning."""
+    height, width = 5, 6
+    t0 = t0_windows * window_us
+    rng = np.random.default_rng(seed)
+    ev = np.stack(
+        [
+            rng.integers(-2, width + 2, n),       # x, some out of extent
+            rng.integers(-2, height + 2, n),      # y, some out of extent
+            rng.integers(0, 2, n),                # polarity (ignored)
+            rng.integers(max(0, t0 - window_us), t0 + 2 * window_us, n),
+        ],
+        axis=1,
+    ).astype(np.int64) if n else np.zeros((0, 4), np.int64)
+    words = encode_event_window(ev, height, width, T, window_us, t0=t0)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_spikes(words, T)),
+        _event_plane_oracle(ev, height, width, T, window_us, t0),
+    )
+
+
+@settings(max_examples=25)
+@given(
+    T=st.integers(min_value=1, max_value=MAX_T),
+    window_us=st.sampled_from([1, 13, 1000]),
+    t0_windows=st.integers(min_value=0, max_value=3),
+)
+def test_encode_event_window_boundary_exactness(T, window_us, t0_windows):
+    """Window edges are exact: t0 lands in plane 0 and t0 + window_us - 1
+    in the last occupied plane ``(window_us - 1) * T // window_us`` (== T-1
+    whenever T <= window_us), while t0 - 1 and t0 + window_us contribute
+    nothing."""
+    height = width = 4
+    t0 = t0_windows * window_us
+    inside = np.asarray(
+        [[1, 1, 0, t0], [2, 2, 1, t0 + window_us - 1]], np.int64
+    )
+    words = np.asarray(encode_event_window(
+        inside, height, width, T, window_us, t0=t0))
+    s = np.asarray(unpack_spikes(jnp.asarray(words), T))
+    last = (window_us - 1) * T // window_us
+    if T <= window_us:
+        assert last == T - 1
+    assert s[0, 1 * width + 1] == 1.0
+    assert s[last, 2 * width + 2] == 1.0
+    assert s.sum() == 2.0  # distinct pixels: nothing else fired
+    outside = np.asarray(
+        [[1, 1, 0, t0 - 1], [2, 2, 1, t0 + window_us]], np.int64
+    )
+    if t0 == 0:
+        outside = outside[1:]  # t=-1 is invalid input anyway
+    out_words = np.asarray(encode_event_window(
+        outside, height, width, T, window_us, t0=t0))
+    assert (out_words == 0).all()
+
+
+@settings(max_examples=10)
+@given(T=st.integers(min_value=1, max_value=MAX_T))
+def test_encode_event_window_empty_is_all_silent(T):
+    """An empty window encodes to the all-silent frame: zero words, zero
+    per-plane popcount, every plane scored inactive — the frame the
+    adaptive temporal policy skips for free."""
+    words = encode_event_window(
+        np.zeros((0, 4), np.int64), 4, 4, T, 1000, t0=0
+    )
+    assert (np.asarray(words) == 0).all()
+    np.testing.assert_array_equal(
+        np.asarray(timestep_popcount(words, T)), np.zeros((T,), np.int32)
+    )
+    assert not np.asarray(timestep_activity_map(words, T)).any()
+
+
+def test_encode_event_window_validation():
+    ev = np.zeros((0, 4), np.int64)
+    with pytest.raises(ValueError):
+        encode_event_window(ev, 4, 4, MAX_T + 1, 100)
+    with pytest.raises(ValueError):
+        encode_event_window(ev, 4, 4, 0, 100)
+    with pytest.raises(ValueError):
+        encode_event_window(ev, 0, 4, 4, 100)
+    with pytest.raises(ValueError):
+        encode_event_window(ev, 4, 4, 4, 0)

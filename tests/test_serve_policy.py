@@ -1,5 +1,4 @@
-"""ExecutionPolicy tests: construction-time validation, legacy-knob /
-legacy-entry-point deprecation shims (old == new, with a warning), the
+"""ExecutionPolicy tests: construction-time validation, the
 `ops.dispatch` front door, and the first capability the policy unlocks —
 approximate tensor parallelism (psum-TP attention/MLP on the model axis)
 with its drift-bound parity contract (`check_parity`).
@@ -8,7 +7,6 @@ Mesh-dependent tests run on the suite-wide 8 fake XLA devices
 (tests/conftest.py).
 """
 import dataclasses
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -17,7 +15,7 @@ import pytest
 from _data import mk_packed_and_weights as _mk
 
 from repro.configs import get_config, smoke_variant
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.kernels.join_plan import build_weight_plan
 from repro.models.registry import build_model
 from repro.serve import (
@@ -132,89 +130,6 @@ def test_for_arch_defaults_follow_the_config():
     assert pol.weight_sparsity == "dual_sparse"
     dense = ExecutionPolicy.for_arch(spiking, weight_sparsity="dense")
     assert dense.weight_sparsity == "dense"
-
-
-def test_engine_rejects_policy_plus_legacy_knobs():
-    cfg, model, params = _model()
-    with pytest.raises(ValueError, match="not both"):
-        Engine(model, params, max_len=16, policy=FLOAT_DENSE,
-               spiking_packed=False)
-
-
-# ---------------------------------------------------------------------------
-# deprecation shims: legacy knobs / entry points == the policy path, + warn
-# ---------------------------------------------------------------------------
-
-def test_engine_legacy_knobs_warn_and_match_policy_path():
-    """Engine(spiking_packed=..., dual_sparse=...) maps to the equivalent
-    ExecutionPolicy (DeprecationWarning) and stays token-identical to the
-    explicit-policy engine."""
-    cfg, model, params = _model(spiking_ffn=True, spiking_T=4,
-                                spiking_weight_density=0.3)
-    prompts = _prompts(cfg, [10, 10], seed=3)
-    from repro.models import layers as model_layers
-
-    try:
-        with pytest.warns(DeprecationWarning, match="policy=ExecutionPolicy"):
-            legacy = Engine(model, params, max_len=20, max_slots=2,
-                            spiking_packed=True)
-        assert legacy.policy.spike_format == "packed"
-        assert legacy.policy.weight_sparsity == "dual_sparse"
-        got_legacy = legacy.generate_batch(prompts, 5)
-        new = Engine(model, params, max_len=20, max_slots=2,
-                     policy=ExecutionPolicy.for_arch(cfg))
-        got_new = new.generate_batch(prompts, 5)
-    finally:
-        model_layers.set_spiking_ffn_mode("train")
-    for a, b in zip(got_legacy, got_new):
-        np.testing.assert_array_equal(a, b)
-
-
-def test_engine_legacy_mesh_knob_maps_to_placement():
-    cfg, model, params = _model()
-    mesh = make_serve_mesh("data=4,model=2")
-    with pytest.warns(DeprecationWarning, match="mesh"):
-        engine = Engine(model, params, max_len=16, mesh=mesh)
-    assert engine.policy.placement.mesh is mesh
-    assert engine.policy.token_identical
-
-
-@pytest.mark.parametrize("name,call", [
-    ("ftp_spmm", lambda a, w, plan, T: ops.ftp_spmm(a, w, T)),
-    ("ftp_spmm_fused_lif", lambda a, w, plan, T: ops.ftp_spmm_fused_lif(a, w, T)),
-    ("ftp_spmm_batched",
-     lambda a, w, plan, T: ops.ftp_spmm_batched(a[None], w, T)),
-    ("ftp_spmm_bsr",
-     lambda a, w, plan, T: ops.ftp_spmm_bsr(a, plan, T)),
-    ("ftp_spmm_bsr_batched",
-     lambda a, w, plan, T: ops.ftp_spmm_bsr_batched(a[None], plan, T)),
-    ("ftp_spmm_bsr_fused_lif",
-     lambda a, w, plan, T: ops.ftp_spmm_bsr_fused_lif(a, plan, T)),
-    ("ftp_spmm_dual_sparse",
-     lambda a, w, plan, T: ops.ftp_spmm_dual_sparse(np.asarray(a), w, T)),
-    ("ftp_spmm_sharded", lambda a, w, plan, T: ops.ftp_spmm_sharded(a, w, T)),
-])
-def test_legacy_ops_entry_points_warn(name, call):
-    """Every pre-policy kernel entry point still works — through a shim
-    that names its dispatch/policy replacement in a DeprecationWarning."""
-    rng = np.random.default_rng(5)
-    T, M, K, N = 4, 8, 32, 16
-    packed, w = _mk(rng, T, M, K, N, w_density=0.3)
-    plan = build_weight_plan(w)
-    with pytest.warns(DeprecationWarning, match="ops.dispatch"):
-        call(jnp.asarray(packed), jnp.asarray(w), plan, T)
-
-
-def test_legacy_bsr_shim_matches_dispatch():
-    rng = np.random.default_rng(6)
-    T, M, K, N = 4, 16, 64, 32
-    packed, w = _mk(rng, T, M, K, N, w_density=0.2)
-    plan = build_weight_plan(w)
-    a = jnp.asarray(packed)
-    want, _ = ops.dispatch(a, plan, PACKED_DUAL, T, n_out=N, fuse_lif=True)
-    with pytest.warns(DeprecationWarning):
-        got, _ = ops.ftp_spmm_bsr(a, plan, T, n_out=N, fuse_lif=True)
-    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
 # ---------------------------------------------------------------------------

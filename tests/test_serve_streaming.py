@@ -1,0 +1,490 @@
+"""Event-stream serving (`serve/streaming.py` + the engine's streaming
+lane) — incremental spike-frame ingestion.
+
+Contracts under test:
+
+* `EventStream` watermarks: a window is complete once a later-window event
+  arrives, the stream closes, or the idle-timeout tick fires; gap windows
+  come back empty; pushes must be time-ordered between calls; buffered
+  windows past ``max_buffered_windows`` raise `Backpressure`.
+* `StreamSession`: each complete window encodes (via
+  `core.packing.encode_event_window`) to a deterministic frame token;
+  the frame budget bound at `Engine.submit_stream` surfaces as
+  `Backpressure`, never cache overflow.
+* scheduler lane: sessions queue until their first window lands, admit
+  one-per-cohort capped by free slots, and a stream that closes without
+  ever producing a frame is rejected with a terminal ticket.
+* THE acceptance contract: feeding a session frame-by-frame across
+  `step()` calls is bitwise token-identical to submitting its frame
+  tokens as one prompt, across the whole
+  {sync,pipelined} x {dense,paged} x {single,mesh} x {full,adaptive_t}
+  matrix, with zero extra retraces after warmup.
+* `Engine.step()` with an empty queue and no cohorts is a guaranteed
+  cheap no-op (the regression this PR fixes): no dispatch, no retrace,
+  no metrics sample — streaming drivers tick the engine between frames.
+
+Mesh cells run on the suite-wide 8 fake XLA devices (tests/conftest.py).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core.packing import encode_event_window, timestep_popcount
+from repro.data.events import moving_blob_events, split_into_windows
+from repro.kernels import ops
+from repro.models.registry import build_model
+from repro.serve import (
+    AdmissionError,
+    Backpressure,
+    Engine,
+    EventStream,
+    ExecutionPolicy,
+    StreamSession,
+    make_serve_mesh,
+)
+from repro.serve.policy import Placement, adaptive_t, paged
+from repro.serve.scheduler import Scheduler
+
+H, W = 8, 8            # sensor extent (independent of the model's d_model:
+                       # only the frame TOKEN enters the model)
+WINDOW_US = 1000
+N_WIN = 4
+MAX_NEW = 6
+
+
+def _ev(x, y, p, t):
+    return np.asarray([[x, y, p, t]], np.int64)
+
+
+# ---------------------------------------------------------------------------
+# EventStream: watermarks, ordering, backpressure, idle timeout
+# ---------------------------------------------------------------------------
+
+
+def test_eventstream_watermark_semantics():
+    s = EventStream(WINDOW_US)
+    s.push(_ev(1, 1, 0, 10))
+    # window 0 is still open: an event at t=999 could still arrive
+    assert s.n_complete == 0 and s.pop_window() is None
+    s.push(_ev(2, 2, 1, WINDOW_US + 5))  # later-window event seals window 0
+    assert s.n_complete == 1
+    w0 = s.pop_window()
+    assert w0.shape == (1, 4) and int(w0[0, 3]) == 10
+    assert s.pop_window() is None        # window 1 still open
+    s.close()                            # end-of-stream: everything complete
+    assert s.n_complete == 2
+    w1 = s.pop_window()
+    assert w1.shape == (1, 4) and int(w1[0, 3]) == WINDOW_US + 5
+    assert s.exhausted
+
+
+def test_eventstream_gap_windows_come_back_empty():
+    s = EventStream(WINDOW_US)
+    s.push(_ev(0, 0, 0, 50))
+    s.push(_ev(3, 3, 1, 3 * WINDOW_US + 1))  # windows 0..2 complete
+    assert s.n_complete == 3
+    assert s.pop_window().shape == (1, 4)
+    for _ in range(2):                       # gap windows 1 and 2
+        gap = s.pop_window()
+        assert gap.shape == (0, 4)
+
+
+def test_eventstream_rejects_out_of_order_push():
+    s = EventStream(WINDOW_US)
+    s.push(_ev(0, 0, 0, 5000))
+    with pytest.raises(ValueError, match="out-of-order"):
+        s.push(_ev(0, 0, 0, 100))
+    with pytest.raises(ValueError, match="negative"):
+        EventStream(WINDOW_US).push(_ev(0, 0, 0, -1))
+
+
+def test_eventstream_push_after_close_raises():
+    s = EventStream(WINDOW_US)
+    s.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        s.push(_ev(0, 0, 0, 10))
+
+
+def test_eventstream_backpressure_on_buffered_windows():
+    s = EventStream(WINDOW_US, max_buffered_windows=2)
+    s.push(_ev(0, 0, 0, 10))
+    before = s.n_events
+    with pytest.raises(Backpressure):
+        s.push(_ev(0, 0, 0, 10 * WINDOW_US))  # would buffer 10 windows
+    assert s.n_events == before  # rejected push left no partial state
+    while s.pop_window() is not None:  # consuming relieves the pressure
+        pass
+    s.push(_ev(0, 0, 0, 2 * WINDOW_US + 1))   # now only 2 complete: fine
+
+
+def test_eventstream_idle_timeout_tick_is_deterministic():
+    s = EventStream(WINDOW_US, idle_timeout_us=500)
+    s.push(_ev(0, 0, 0, 100))
+    s.tick(400)                    # 300us of silence: still open
+    assert not s.closed
+    s.tick(600)                    # 500us past last event: auto-close
+    assert s.closed and s.n_complete == 1
+    # an event-less stream times out against creation time 0
+    empty = EventStream(WINDOW_US, idle_timeout_us=500)
+    empty.tick(499)
+    assert not empty.closed
+    empty.tick(500)
+    assert empty.closed and empty.n_complete == 0
+
+
+def test_eventstream_validation():
+    with pytest.raises(ValueError):
+        EventStream(0)
+    with pytest.raises(ValueError):
+        EventStream(100, idle_timeout_us=0)
+    with pytest.raises(ValueError):
+        EventStream(100, max_buffered_windows=0)
+
+
+# ---------------------------------------------------------------------------
+# StreamSession: encoding, determinism, frame budget
+# ---------------------------------------------------------------------------
+
+
+def test_stream_session_encodes_windows_deterministically():
+    events = moving_blob_events(N_WIN, height=H, width=W,
+                                window_us=WINDOW_US, events_per_window=32,
+                                seed=3, silent=(1,))
+    chunks = split_into_windows(events, N_WIN, WINDOW_US)
+
+    def run():
+        s = EventStream(WINDOW_US)
+        sess = StreamSession(s, height=H, width=W, T=4, vocab=997)
+        for c in chunks:
+            s.push(c)
+            sess.poll()
+        s.close()
+        sess.poll()
+        return sess
+
+    a, b = run(), run()
+    assert len(a.frames) == N_WIN and a.delivered
+    np.testing.assert_array_equal(a.prompt_tokens(), b.prompt_tokens())
+    # frame words ARE encode_event_window of the window's events
+    np.testing.assert_array_equal(
+        a.frames[0].words,
+        np.asarray(encode_event_window(chunks[0], H, W, 4, WINDOW_US, t0=0)),
+    )
+    # the silent window's frame: zero events, all-silent words
+    gap = a.frames[1]
+    assert gap.n_events == 0
+    assert (gap.words == 0).all()
+    assert (np.asarray(timestep_popcount(gap.words, 4)) == 0).all()
+    assert all(0 <= f.token < 997 for f in a.frames)
+
+
+def test_stream_session_frame_budget_backpressure():
+    events = moving_blob_events(4, height=H, width=W, window_us=WINDOW_US,
+                                events_per_window=8, seed=5)
+    s = EventStream(WINDOW_US)
+    sess = StreamSession(s, height=H, width=W, T=4, vocab=97)
+    sess.max_frames = 2
+    s.push(events)
+    s.close()
+    with pytest.raises(Backpressure, match="frame budget"):
+        sess.poll()
+    assert len(sess.frames) == 2  # frames up to the budget stand
+
+
+def test_stream_session_validation():
+    s = EventStream(WINDOW_US)
+    with pytest.raises(ValueError):
+        StreamSession(s, height=0, width=4, T=4, vocab=10)
+    with pytest.raises(ValueError):
+        StreamSession(s, height=4, width=4, T=0, vocab=10)
+    with pytest.raises(ValueError):
+        StreamSession(s, height=4, width=4, T=4, vocab=0)
+
+
+# ---------------------------------------------------------------------------
+# scheduler streaming lane
+# ---------------------------------------------------------------------------
+
+
+def _session(window_us=WINDOW_US, **kw):
+    stream = EventStream(window_us, **kw)
+    return stream, StreamSession(stream, height=H, width=W, T=4, vocab=97)
+
+
+def test_scheduler_stream_lane_admits_on_first_window():
+    sch = Scheduler(max_slots=1, max_queue=4, max_len=32)
+    stream, sess = _session()
+    ticket = sch.submit_stream(sess, 4)
+    assert ticket.outcome == "queued"
+    assert sch.schedule_streams() == []      # no complete window yet
+    stream.push(_ev(1, 1, 0, WINDOW_US + 1))  # seals window 0
+    sch.active_slots = 1                      # no free slot: stays queued
+    assert sch.schedule_streams() == []
+    sch.release(1)
+    admitted = sch.schedule_streams()
+    assert len(admitted) == 1 and admitted[0][0] is sess
+    assert ticket.outcome == "admitted"
+    assert sch.queue_depth == 0
+
+
+def test_scheduler_rejects_stream_closed_with_no_frames():
+    sch = Scheduler(max_slots=2, max_queue=4, max_len=32)
+    stream, sess = _session()
+    ticket = sch.submit_stream(sess, 4)
+    stream.close()
+    assert sch.schedule_streams() == []
+    assert ticket.outcome == "rejected"
+    assert "no frames" in ticket.reason
+    assert sch.n_rejected == 1 and sch.queue_depth == 0
+
+
+def test_submit_stream_admission_checks():
+    sch = Scheduler(max_slots=2, max_queue=1, max_len=8)
+    _, sess = _session()
+    with pytest.raises(AdmissionError, match="max_len"):
+        sch.submit_stream(sess, 8)           # 1 frame + 8 generated > 8
+    with pytest.raises(AdmissionError):
+        sch.submit_stream(sess, 0)
+    sch.submit_stream(sess, 4)
+    with pytest.raises(AdmissionError, match="queue full"):
+        sch.submit_stream(_session()[1], 4)
+
+
+# ---------------------------------------------------------------------------
+# engine: smoke model, reference runs
+# ---------------------------------------------------------------------------
+
+_MODEL_CACHE: dict = {}
+_REF_CACHE: dict = {}
+
+
+def _spiking_model():
+    if "m" not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config("llama3_2_1b"))
+        cfg = dataclasses.replace(cfg, spiking_ffn=True, spiking_T=4,
+                                  spiking_weight_density=0.3)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE["m"] = (cfg, model, params)
+    return _MODEL_CACHE["m"]
+
+
+def _reference(prompt: np.ndarray, max_new: int) -> np.ndarray:
+    """Tokens of the one-prompt submission every bitwise cell must equal —
+    computed once on the plain sync/dense/single/full engine (all matrix
+    cells carry a bitwise contract, so one reference serves them all AND
+    the comparison transitively asserts cross-cell identity)."""
+    key = (tuple(int(t) for t in prompt), max_new)
+    if key not in _REF_CACHE:
+        cfg, model, params = _spiking_model()
+        eng = Engine(model, params, max_len=24, max_slots=4,
+                     policy=ExecutionPolicy.for_arch(cfg))
+        _REF_CACHE[key] = eng.generate_batch(
+            [np.asarray(prompt, np.int32)], max_new)[0]
+    return _REF_CACHE[key]
+
+
+def _drive_stream(engine, *, seed, silent=(), n_win=N_WIN, max_new=MAX_NEW):
+    """Submit a session and feed it frame-by-frame, one `step()` per window
+    push (the streaming driver shape), then drain."""
+    cfg = engine.cfg
+    events = moving_blob_events(n_win, height=H, width=W,
+                                window_us=WINDOW_US, events_per_window=32,
+                                seed=seed, silent=silent)
+    stream = EventStream(WINDOW_US)
+    session = StreamSession(stream, height=H, width=W, T=cfg.spiking_T,
+                            vocab=cfg.vocab)
+    ticket = engine.submit_stream(session, max_new)
+    for chunk in split_into_windows(events, n_win, WINDOW_US):
+        stream.push(chunk)
+        engine.step()
+    stream.close()
+    out = engine.run()
+    return ticket, session, out[ticket.rid]
+
+
+# ---------------------------------------------------------------------------
+# THE acceptance matrix: frame-by-frame == one-prompt, zero extra retraces
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temporal", ["full", "adaptive"])
+@pytest.mark.parametrize("placement", ["single", "mesh"])
+@pytest.mark.parametrize("paging", ["dense", "paged"])
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+def test_stream_token_identity_matrix(execution, paging, placement, temporal):
+    """Frame-by-frame delivery is bitwise token-identical to submitting
+    the same frame tokens as one prompt, in every execution x paging x
+    placement x temporal cell — and after one warm-up session, a second
+    session with different frame content (different silent windows, so the
+    adaptive skip set moves too) adds ZERO retraces."""
+    cfg, model, params = _spiking_model()
+    mesh = make_serve_mesh("data,model") if placement == "mesh" else None
+    if placement == "mesh" and mesh is None:
+        pytest.skip("needs >= 2 fake devices")
+    engine = Engine(
+        model, params, max_len=24, max_slots=4,
+        policy=ExecutionPolicy.for_arch(
+            cfg,
+            execution=execution,
+            paging=paged(8) if paging == "paged" else None,
+            placement=Placement(mesh=mesh),
+            temporal=adaptive_t() if temporal == "adaptive" else None,
+        ),
+    )
+    _drive_stream(engine, seed=1, silent=(2,))  # warm every streaming trace
+    before = ops.BSR_TRACE_COUNT
+    ticket, session, got = _drive_stream(engine, seed=2, silent=(1,))
+    assert ops.BSR_TRACE_COUNT == before, (
+        "a second stream session caused a retrace"
+    )
+    assert ticket.outcome == "admitted"
+    assert len(session.frames) == N_WIN
+    np.testing.assert_array_equal(
+        got, _reference(session.prompt_tokens(), MAX_NEW)
+    )
+    assert engine.metrics.n_stream_sessions == 2
+    assert engine.metrics.n_stream_windows == 2 * N_WIN
+    assert len(engine.metrics.stream_frame_latency_s) == 2 * N_WIN
+    s = engine.summary()
+    assert s["frame_to_first_token_s_p50"] >= 0.0
+    assert s["frame_to_first_token_s_p99"] >= s["frame_to_first_token_s_p50"]
+    if temporal == "adaptive":
+        # the silent window's frame is all-silent: every plane skipped
+        assert engine.metrics.timesteps_skipped > 0
+
+
+def test_stream_interleaves_with_normal_requests():
+    """A stream session and a plain request serve concurrently: the
+    ingesting cohort never merges with the decode cohort, and both outputs
+    match their solo references."""
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=24, max_slots=4,
+                    policy=ExecutionPolicy.for_arch(cfg))
+    rng = np.random.default_rng(0)
+    prompt = np.asarray(rng.integers(0, cfg.vocab, size=(5,)), np.int32)
+    t_req = engine.submit(prompt, MAX_NEW)
+
+    events = moving_blob_events(N_WIN, height=H, width=W,
+                                window_us=WINDOW_US, events_per_window=32,
+                                seed=7)
+    stream = EventStream(WINDOW_US)
+    session = StreamSession(stream, height=H, width=W, T=cfg.spiking_T,
+                            vocab=cfg.vocab)
+    t_stream = engine.submit_stream(session, MAX_NEW)
+    for chunk in split_into_windows(events, N_WIN, WINDOW_US):
+        stream.push(chunk)
+        engine.step()
+    stream.close()
+    out = engine.run()
+    np.testing.assert_array_equal(out[t_req.rid], _reference(prompt, MAX_NEW))
+    np.testing.assert_array_equal(
+        out[t_stream.rid], _reference(session.prompt_tokens(), MAX_NEW)
+    )
+
+
+def test_submit_stream_rejects_temporal_axis_mismatch():
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=24,
+                    policy=ExecutionPolicy.for_arch(cfg))
+    stream = EventStream(WINDOW_US)
+    bad = StreamSession(stream, height=H, width=W, T=cfg.spiking_T + 1,
+                        vocab=cfg.vocab)
+    with pytest.raises(ValueError, match="spiking_T"):
+        engine.submit_stream(bad, 4)
+
+
+def test_submit_stream_binds_frame_budget():
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=24,
+                    policy=ExecutionPolicy.for_arch(cfg))
+    stream = EventStream(WINDOW_US)
+    session = StreamSession(stream, height=H, width=W, T=cfg.spiking_T,
+                            vocab=cfg.vocab)
+    engine.submit_stream(session, MAX_NEW)
+    assert session.max_frames == 24 - MAX_NEW
+
+
+def test_flush_never_emits_the_go_live_candidate():
+    """`Engine.flush()` mid-ingest must not land the pending go-live step:
+    it is a candidate, not an emitted token — only `_go_live` may emit it
+    (a flush that landed it would double-count the first token)."""
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=24,
+                    policy=ExecutionPolicy.for_arch(cfg,
+                                                    execution="pipelined"))
+    events = moving_blob_events(2, height=H, width=W, window_us=WINDOW_US,
+                                events_per_window=16, seed=9)
+    chunks = split_into_windows(events, 2, WINDOW_US)
+    stream = EventStream(WINDOW_US)
+    session = StreamSession(stream, height=H, width=W, T=cfg.spiking_T,
+                            vocab=cfg.vocab)
+    ticket = engine.submit_stream(session, MAX_NEW)
+    stream.push(chunks[0])
+    engine.step()               # window 0 still open: session waits
+    stream.push(chunks[1])
+    engine.step()               # window 0 sealed: admitted, frame 0 in
+    [cohort] = engine.cohorts
+    assert cohort.stream is session and len(cohort.pending) == 1
+    engine.flush()
+    assert len(cohort.pending) == 1, "flush landed the go-live candidate"
+    assert cohort.slots[0].generated == []
+    stream.close()
+    out = engine.run()
+    np.testing.assert_array_equal(
+        out[ticket.rid], _reference(session.prompt_tokens(), MAX_NEW)
+    )
+
+
+def test_drain_hands_off_mid_ingest_stream():
+    """`Engine.drain()` with an ingesting cohort terminates (its stream
+    can never close from inside the engine) and hands the frames completed
+    so far off as the successor request's prompt."""
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=24,
+                    policy=ExecutionPolicy.for_arch(cfg))
+    events = moving_blob_events(2, height=H, width=W, window_us=WINDOW_US,
+                                events_per_window=16, seed=11)
+    chunks = split_into_windows(events, 2, WINDOW_US)
+    stream = EventStream(WINDOW_US)
+    session = StreamSession(stream, height=H, width=W, T=cfg.spiking_T,
+                            vocab=cfg.vocab)
+    ticket = engine.submit_stream(session, MAX_NEW)
+    stream.push(chunks[0])
+    stream.push(chunks[1])      # seals window 0
+    engine.step()               # admitted: frame 0 prefilled, stream open
+    assert engine.cohorts and engine.cohorts[0].stream is session
+    handoff = engine.drain()    # must not spin on the open stream
+    [hr] = [r for r in handoff.requests if r.rid == ticket.rid]
+    assert hr.state == "inflight" and hr.generated.size == 0
+    np.testing.assert_array_equal(
+        hr.prompt, session.prompt_tokens()[: hr.prompt.shape[0]]
+    )
+    assert hr.prompt.shape[0] >= 1
+    assert engine.metrics.n_drained == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite regression: idle `step()` is a guaranteed cheap no-op
+# ---------------------------------------------------------------------------
+
+
+def test_idle_step_is_guaranteed_noop():
+    """Empty queue + no cohorts: `step()` must not dispatch, trace, or
+    even sample metrics — streaming drivers and trace replays tick the
+    engine as an arrival clock, so idle ticks must stay free."""
+    cfg, model, params = _spiking_model()
+    engine = Engine(model, params, max_len=16,
+                    policy=ExecutionPolicy.for_arch(cfg))
+    before = ops.BSR_TRACE_COUNT
+    for _ in range(5):
+        assert engine.step() == {"active": 0, "queued": 0, "cohorts": 0}
+    assert ops.BSR_TRACE_COUNT == before
+    m = engine.metrics
+    assert m.stage_s == {}
+    assert len(m.queue_depth_samples) == 0
+    assert m.wall_s == 0.0
+    assert m.n_prefill_batches == 0 and m.n_decode_batches == 0
