@@ -11,7 +11,9 @@ step amortizes one weight fetch over the whole batch (and, for spiking
 layers, over all T timesteps — the paper's FTP argument applied at the
 serving level).
 
-Extra rows (each an `ExecutionPolicy` variant): dual-sparse spiking
+Extra rows (each an `ExecutionPolicy` variant) are selected by NAME via
+``--rows``/``--skip-rows`` (``--rows all`` default; ``--rows speculative``
+runs just that row — see `ROW_BENCHES`): dual-sparse spiking
 (token-identical), sharded bitwise mesh serving (token-identical, with an
 ``hlo_attribution`` sub-dict from `repro.roofline.hlo_stats` attributing
 the compiled decode's flops/bytes/collective traffic per placement),
@@ -19,8 +21,11 @@ approximate-TP (``token_identical: false`` by contract, measured max logit
 drift vs. the bitwise reference recorded and bounded), pipelined
 execution (token-identical, with per-stage timing for both executors so
 the sync path's per-step host wait — ``sample_sync`` — is attributable),
-and adaptive temporal sparsity (token-identical at min_spikes=1, with the
-measured ``timesteps_skipped`` counter gated > 0).
+speculative decoding (>= 1.5x tok/s gate at ``token_identical: true``,
+acceptance accounting, and an ``hlo_attribution`` block splitting
+draft-propose vs target-verify flops/bytes), adaptive temporal sparsity
+(token-identical at min_spikes=1, with the measured ``timesteps_skipped``
+counter gated > 0), preemption drain/resume, and event-stream ingestion.
 """
 import argparse
 import dataclasses
@@ -51,7 +56,7 @@ def _decode_hlo_attribution(engine, batch: int) -> dict:
 
     from repro.kernels import ops
     from repro.models import layers as model_layers
-    from repro.roofline.hlo_stats import analyze
+    from repro.roofline.hlo_stats import attribution_summary
 
     cache = engine.model.init_cache(batch, engine.max_len)
     toks = jnp.zeros((batch, 1), jnp.int32)
@@ -72,10 +77,59 @@ def _decode_hlo_attribution(engine, batch: int) -> dict:
     finally:
         model_layers.set_spiking_ffn_mode(prev)
         ops.set_serve_mesh(prev_mesh)
-    st = analyze(hlo).asdict()
-    keep = ("flops", "bytes_accessed", "collective_bytes",
-            "n_collective_ops", "collectives")
-    return {k: st[k] for k in keep if k in st}
+    return attribution_summary(hlo)
+
+
+def _speculative_hlo_attribution(engine, batch: int, k: int) -> dict:
+    """Attribute the TWO dispatches of one speculative round separately:
+    the draft's fused k-step propose chain vs the target's (B, k+1)
+    verify decode (`repro.roofline.hlo_stats.attribution_summary`).
+
+    This is the honest cost split behind the row's speedup claim: the
+    flops/bytes ratio of propose to verify says how cheap the draft
+    actually is per round, independent of CPU wall-time noise.  Dense
+    single-device engines only (the bench row's configuration).
+    """
+    import jax.numpy as jnp
+
+    from repro.models import layers as model_layers
+    from repro.roofline.hlo_stats import attribution_summary
+
+    if engine.paged or engine.mesh is not None:
+        return {}
+    out = {}
+    prev = model_layers.get_spiking_ffn_mode()
+    # target-verify: one decode-shaped dispatch over all k+1 positions
+    cache = engine.model.init_cache(batch, engine.max_len)
+    toks = jnp.zeros((batch, k + 1), jnp.int32)
+    if engine.spiking_packed:
+        model_layers.set_spiking_ffn_mode("infer")
+    try:
+        hlo = (jax.jit(engine.model.decode)
+               .lower(engine.params, toks, cache).compile().as_text())
+    finally:
+        model_layers.set_spiking_ffn_mode(prev)
+    out["target_verify"] = attribution_summary(hlo)
+    # draft-propose: the fused chain (k chained steps, argmax feedback on
+    # device), traced under the draft's spiking mode
+    dcache = engine.model.init_cache(batch, engine.max_len)
+    chunk = jnp.zeros((batch, 1), jnp.int32)
+    dspec = engine.policy.speculation.draft
+    model_layers.set_spiking_ffn_mode(
+        "infer" if dspec.spike_format == "packed" else "train"
+    )
+    try:
+        hlo = (jax.jit(engine._make_propose_fn(1, k))
+               .lower(engine.draft_params, chunk, dcache)
+               .compile().as_text())
+    finally:
+        model_layers.set_spiking_ffn_mode(prev)
+    out["draft_propose"] = attribution_summary(hlo)
+    vf = out["target_verify"].get("flops", 0.0)
+    out["propose_verify_flop_ratio"] = (
+        out["draft_propose"].get("flops", 0.0) / vf if vf else 0.0
+    )
+    return out
 
 
 def bench_engine(arch: str, batches=(1, 2, 4, 8), prompt_len=32, gen=16):
@@ -438,6 +492,104 @@ def bench_pipelined(batch=8, prompt_len=32, gen=16, depth=2) -> dict:
     return out
 
 
+def bench_speculative(
+    k=6, batch=4, prompt_len=16, gen=24, weight_density=0.3, spiking_T=4,
+) -> dict:
+    """Speculative-decoding row: the dual-sparse spiking target engine
+    with a float-dense draft over the SAME weights proposing ``k`` tokens
+    per round, vs the identical engine without speculation.
+
+    Where the speedup comes from: each accepted round replaces up to
+    ``k + 1`` host-synced decode dispatches with TWO — one fused propose
+    (k chained steps, argmax feedback stays on device) and one (B, k+1)
+    verify — so the per-step host round-trip amortizes over the round.
+    The float draft shares the target's weights and the packed kernels
+    are bit-faithful to the float path, so the draft's argmax chain
+    agrees with the target's and acceptance sits near 1.0 — this row is
+    the speculation machinery's best case, not a draft-quality claim.
+
+    The gates this row doubles as (`SystemExit` on failure):
+    ``token_identical: true`` — emitted tokens are always the TARGET's
+    argmaxes, so speculation may never change the stream — and
+    ``acceptance_rate > 0`` (the draft actually lands proposals).
+    Alongside: full acceptance accounting and an ``hlo_attribution``
+    sub-dict splitting draft-propose vs target-verify flops/bytes.
+    """
+    from repro.configs import get_config, smoke_variant
+    from repro.models import layers as model_layers
+    from repro.models.registry import build_model
+    from repro.serve import Engine, ExecutionPolicy, draft
+    from repro.serve.metrics import EngineMetrics
+
+    cfg = smoke_variant(get_config("llama3_2_1b"))
+    cfg = dataclasses.replace(
+        cfg, spiking_ffn=True, spiking_T=spiking_T,
+        spiking_weight_density=weight_density,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [
+        np.asarray(rng.integers(0, cfg.vocab, size=(prompt_len,)), np.int32)
+        for _ in range(batch)
+    ]
+    float_draft = ExecutionPolicy.for_arch(
+        cfg, spike_format="float", weight_sparsity="dense"
+    )
+    policies = {
+        "baseline": ExecutionPolicy.for_arch(cfg),
+        "speculative": ExecutionPolicy.for_arch(
+            cfg, speculation=draft(float_draft, k=k)
+        ),
+    }
+    out = {"arch": "llama3_2_1b+spiking_ffn", "spiking_T": spiking_T,
+           "weight_density": weight_density, "batch": batch,
+           "prompt_len": prompt_len, "gen": gen, "k": k,
+           "draft": float_draft.describe()}
+    tokens = {}
+    try:
+        for key, pol in policies.items():
+            slack = k if pol.speculation.enabled else 0
+            engine = Engine(
+                model, params, max_len=prompt_len + gen + slack,
+                max_slots=batch, policy=pol,
+            )
+            engine.generate_batch(prompts, gen)   # warm-up: jit compiles
+            engine.metrics = EngineMetrics()
+            tokens[key] = engine.generate_batch(prompts, gen)
+            s = engine.summary()
+            out[f"{key}_tok_s"] = s["throughput_tok_s"]
+            out[f"{key}_decode_batches"] = s["decode_batches"]
+            if pol.speculation.enabled:
+                for k2 in ("speculative_rounds", "draft_batches",
+                           "draft_prefills", "tokens_proposed",
+                           "tokens_accepted", "tokens_rejected",
+                           "acceptance_rate"):
+                    out[k2] = s[k2]
+                out["hlo_attribution"] = _speculative_hlo_attribution(
+                    engine, batch, k
+                )
+    finally:
+        model_layers.set_spiking_ffn_mode("train")
+    out["speculative_speedup"] = (
+        out["speculative_tok_s"] / out["baseline_tok_s"]
+    )
+    out["token_identical"] = all(
+        np.array_equal(a, b)
+        for a, b in zip(tokens["baseline"], tokens["speculative"])
+    )
+    if not out["token_identical"]:  # the row doubles as a CI identity gate
+        raise SystemExit(
+            "speculative decoding broke token identity vs plain decode"
+        )
+    if out["acceptance_rate"] <= 0.0:
+        raise SystemExit(
+            "speculative row measured acceptance_rate == 0 — the draft "
+            "never landed a proposal; the row is not exercising acceptance"
+        )
+    return out
+
+
 def bench_prefix_cache(
     n_requests=12, prompt_len=16, gen=8, page_size=8, n_shared_prompts=3
 ) -> dict:
@@ -714,16 +866,160 @@ def bench_drain(
     return out
 
 
+def _row_spiking(report):
+    sp = bench_spiking_dual_sparse()
+    report["dual_sparse_spiking"] = sp
+    print(f"  spiking d={sp['weight_density']}: dual-sparse "
+          f"{sp['dual_sparse_tok_s']:.1f} tok/s vs dense-weight "
+          f"{sp['dense_weight_tok_s']:.1f} tok/s "
+          f"({sp['dual_sparse_speedup']:.2f}x, "
+          f"token_identical={sp['token_identical']})")
+
+
+def _row_sharded(report):
+    sh = bench_sharded_serving()
+    report["sharded_serving"] = sh
+    if "skipped" in sh:
+        print(f"  sharded row skipped: {sh['skipped']}")
+    else:
+        print(f"  sharded {sh['mesh']}: {sh['sharded_tok_s']:.1f} tok/s "
+              f"vs single-device {sh['single_device_tok_s']:.1f} tok/s "
+              f"(token_identical={sh['token_identical']}; fake-device "
+              "wall times are plumbing signals, not speedups)")
+
+
+def _row_approx(report):
+    axr = bench_approximate_tp()
+    report["approximate_tp"] = axr
+    if "skipped" in axr:
+        print(f"  approximate-TP row skipped: {axr['skipped']}")
+    else:
+        print(f"  approximate-TP {axr['mesh']}: "
+              f"{axr['approximate_tp_tok_s']:.1f} tok/s vs bitwise "
+              f"{axr['bitwise_tok_s']:.1f} tok/s; max logit drift "
+              f"{axr['max_logit_drift']:.3e} <= tol {axr['tol']} "
+              f"(token_identical=false by contract, measured match "
+              f"{axr['token_match_fraction']:.0%})")
+
+
+def _row_pipelined(report):
+    pl = bench_pipelined()
+    report["bench_pipelined"] = pl
+    print(f"  pipelined executor: {pl['pipelined_tok_s']:.1f} tok/s vs "
+          f"sync {pl['sync_tok_s']:.1f} tok/s "
+          f"({pl['pipelined_speedup']:.2f}x, "
+          f"token_identical={pl['token_identical']}; "
+          f"sync sample_sync {pl['sync_sample_sync_s']*1e3:.1f}ms vs "
+          f"pipelined {pl['pipelined_sample_sync_s']*1e3:.1f}ms)")
+
+
+def _row_speculative(report):
+    sv = bench_speculative()
+    report["bench_speculative"] = sv
+    print(f"  speculative (k={sv['k']}): {sv['speculative_tok_s']:.1f} "
+          f"tok/s vs plain {sv['baseline_tok_s']:.1f} tok/s "
+          f"({sv['speculative_speedup']:.2f}x, acceptance "
+          f"{sv['acceptance_rate']:.0%} over {sv['tokens_proposed']} "
+          f"proposals, token_identical={sv['token_identical']})")
+
+
+def _row_adaptive(report):
+    at = bench_adaptive_temporal()
+    report["bench_adaptive_t"] = at
+    print(f"  adaptive-T (min_spikes=1): {at['adaptive_tok_s']:.1f} "
+          f"tok/s vs full {at['full_tok_s']:.1f} tok/s "
+          f"({at['adaptive_speedup']:.2f}x, "
+          f"timesteps_skipped={at['timesteps_skipped']}, "
+          f"token_identical={at['token_identical']})")
+
+
+def _row_drain(report):
+    dr = bench_drain()
+    report["bench_drain"] = dr
+    print(f"  drain/resume: preempted after "
+          f"{dr['preempt_after_steps']} steps, grace "
+          f"{dr['drain_grace']} -> {dr['handoff']['finished']} finished "
+          f"+ {dr['handoff']['inflight']} in-flight "
+          f"({dr['tokens_preserved']} tokens preserved) + "
+          f"{dr['handoff']['waiting']} waiting; resume "
+          f"token_identical={dr['token_identical']}")
+
+
+def _row_streaming(report):
+    stm = bench_streaming()
+    report["bench_streaming"] = stm
+    bp, bb = stm["event_poisson"], stm["event_bursty"]
+    print(f"  streaming (event traces): poisson "
+          f"frame->first-token p50 "
+          f"{bp['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
+          f"{bp['frame_to_first_token_s_p99']*1e3:.1f}ms, bursty p50 "
+          f"{bb['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
+          f"{bb['frame_to_first_token_s_p99']*1e3:.1f}ms "
+          f"(bursty timesteps_skipped={bb['timesteps_skipped']}, "
+          f"token_identical={stm['token_identical']})")
+
+
+def _row_prefix(report):
+    pc = bench_prefix_cache()
+    report["bench_prefix_cache"] = pc
+    print(f"  prefix cache (shared-prompt trace): hit rate "
+          f"{pc['hit_rate']:.0%}, "
+          f"{pc['prefill_batches_saved']} prefill batches saved, "
+          f"ttft_p50 {pc['paged_prefix']['ttft_s_p50']*1e3:.1f}ms vs "
+          f"cold {pc['dense_cold']['ttft_s_p50']*1e3:.1f}ms "
+          f"(token_identical={pc['token_identical']}; poisson/bursty "
+          f"contrast hit rates {pc['poisson_hit_rate']:.0%}/"
+          f"{pc['bursty_hit_rate']:.0%})")
+
+
+# The policy-variant rows, in run order.  Selected with --rows/--skip-rows
+# (names, not flags) so adding a row is one dict entry, not a new CLI flag.
+ROW_BENCHES = {
+    "spiking": _row_spiking,
+    "sharded": _row_sharded,
+    "approx": _row_approx,
+    "pipelined": _row_pipelined,
+    "speculative": _row_speculative,
+    "adaptive": _row_adaptive,
+    "drain": _row_drain,
+    "streaming": _row_streaming,
+    "prefix": _row_prefix,
+}
+
+
+def select_rows(rows: str, skip_rows: str = "") -> list[str]:
+    """Resolve the --rows/--skip-rows selectors into an ordered run list.
+
+    ``rows``: ``"all"`` (default), ``"none"``, or comma-separated names
+    from `ROW_BENCHES`.  ``skip_rows``: comma-separated names removed from
+    the selection.  Unknown names fail loudly (a typo must not silently
+    drop a CI gate).  Run order is always the registry's, regardless of
+    the order names are given in.
+    """
+    if rows == "all":
+        want = set(ROW_BENCHES)
+    elif rows == "none":
+        want = set()
+    else:
+        want = {r for r in rows.split(",") if r}
+    skip = {r for r in skip_rows.split(",") if r}
+    unknown = (want | skip) - set(ROW_BENCHES)
+    if unknown:
+        raise SystemExit(
+            f"unknown bench row(s) {sorted(unknown)}; "
+            f"known: {', '.join(ROW_BENCHES)}"
+        )
+    return [name for name in ROW_BENCHES if name in want - skip]
+
+
 def rows():
     """CSV rows for benchmarks.run (reduced sweep; leaves the committed
     full-sweep BENCH_serve.json untouched)."""
-    rep = main(["--batches", "1,4", "--no-write", "--no-spiking-row",
-                "--no-sharded-row", "--no-approx-row", "--no-pipelined-row",
-                "--no-prefix-row", "--no-adaptive-row", "--no-drain-row",
-                "--no-streaming-row"])
+    rep = main(["--batches", "1,4", "--no-write", "--rows", "none"])
     r1 = rep["results"][0]["tok_s"]
     rb = rep["results"][-1]["tok_s"]
     sp = bench_spiking_dual_sparse()
+    sv = bench_speculative()
     return [(
         "serve/batched_vs_single_tok_s", 0.0,
         f"tok_s_b1={r1:.1f} tok_s_b{rep['results'][-1]['batch']}={rb:.1f} "
@@ -735,6 +1031,13 @@ def rows():
         f"speedup={sp['dual_sparse_speedup']:.2f}x "
         f"density={sp['weight_density']} "
         f"token_identical={sp['token_identical']} (XLA:CPU)",
+    ), (
+        "serve/speculative_tok_s", 0.0,
+        f"plain_tok_s={sv['baseline_tok_s']:.1f} "
+        f"speculative_tok_s={sv['speculative_tok_s']:.1f} "
+        f"speedup={sv['speculative_speedup']:.2f}x k={sv['k']} "
+        f"acceptance={sv['acceptance_rate']:.2f} "
+        f"token_identical={sv['token_identical']} (XLA:CPU)",
     )]
 
 
@@ -746,22 +1049,12 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--no-write", action="store_true",
                     help="skip writing BENCH_serve.json")
-    ap.add_argument("--no-spiking-row", action="store_true",
-                    help="skip the dual-sparse spiking-FFN serving row")
-    ap.add_argument("--no-sharded-row", action="store_true",
-                    help="skip the sharded-vs-single mesh serving row")
-    ap.add_argument("--no-approx-row", action="store_true",
-                    help="skip the approximate-TP (psum attention/MLP) row")
-    ap.add_argument("--no-pipelined-row", action="store_true",
-                    help="skip the pipelined-vs-sync executor row")
-    ap.add_argument("--no-prefix-row", action="store_true",
-                    help="skip the paged + prefix-reuse arrival-trace row")
-    ap.add_argument("--no-adaptive-row", action="store_true",
-                    help="skip the adaptive temporal-sparsity serving row")
-    ap.add_argument("--no-drain-row", action="store_true",
-                    help="skip the preemption drain/handoff/resume row")
-    ap.add_argument("--no-streaming-row", action="store_true",
-                    help="skip the event-stream ingestion row")
+    ap.add_argument("--rows", default="all",
+                    help="policy-variant rows to run: 'all' (default), "
+                         "'none', or comma-separated names from "
+                         f"{{{','.join(ROW_BENCHES)}}}")
+    ap.add_argument("--skip-rows", default="",
+                    help="comma-separated row names to exclude from --rows")
     ap.add_argument("--fake-devices", type=int, default=0,
                     help="force N fake XLA host devices (before jax init) "
                          "so the sharded row runs on CPU")
@@ -771,6 +1064,7 @@ def main(argv=None):
 
         force_fake_devices(args.fake_devices)
     batches = tuple(int(b) for b in args.batches.split(","))
+    selected = select_rows(args.rows, args.skip_rows)
 
     print(f"serve bench: {args.arch} prompt={args.prompt_len} gen={args.gen} "
           f"backend={jax.default_backend()}")
@@ -785,86 +1079,8 @@ def main(argv=None):
         "results": results,
         "batched_speedup_vs_1": results[-1]["tok_s"] / results[0]["tok_s"],
     }
-    if not args.no_spiking_row:
-        sp = bench_spiking_dual_sparse()
-        report["dual_sparse_spiking"] = sp
-        print(f"  spiking d={sp['weight_density']}: dual-sparse "
-              f"{sp['dual_sparse_tok_s']:.1f} tok/s vs dense-weight "
-              f"{sp['dense_weight_tok_s']:.1f} tok/s "
-              f"({sp['dual_sparse_speedup']:.2f}x, "
-              f"token_identical={sp['token_identical']})")
-    if not args.no_sharded_row:
-        sh = bench_sharded_serving()
-        report["sharded_serving"] = sh
-        if "skipped" in sh:
-            print(f"  sharded row skipped: {sh['skipped']}")
-        else:
-            print(f"  sharded {sh['mesh']}: {sh['sharded_tok_s']:.1f} tok/s "
-                  f"vs single-device {sh['single_device_tok_s']:.1f} tok/s "
-                  f"(token_identical={sh['token_identical']}; fake-device "
-                  "wall times are plumbing signals, not speedups)")
-    if not args.no_approx_row:
-        axr = bench_approximate_tp()
-        report["approximate_tp"] = axr
-        if "skipped" in axr:
-            print(f"  approximate-TP row skipped: {axr['skipped']}")
-        else:
-            print(f"  approximate-TP {axr['mesh']}: "
-                  f"{axr['approximate_tp_tok_s']:.1f} tok/s vs bitwise "
-                  f"{axr['bitwise_tok_s']:.1f} tok/s; max logit drift "
-                  f"{axr['max_logit_drift']:.3e} <= tol {axr['tol']} "
-                  f"(token_identical=false by contract, measured match "
-                  f"{axr['token_match_fraction']:.0%})")
-    if not args.no_pipelined_row:
-        pl = bench_pipelined()
-        report["bench_pipelined"] = pl
-        print(f"  pipelined executor: {pl['pipelined_tok_s']:.1f} tok/s vs "
-              f"sync {pl['sync_tok_s']:.1f} tok/s "
-              f"({pl['pipelined_speedup']:.2f}x, "
-              f"token_identical={pl['token_identical']}; "
-              f"sync sample_sync {pl['sync_sample_sync_s']*1e3:.1f}ms vs "
-              f"pipelined {pl['pipelined_sample_sync_s']*1e3:.1f}ms)")
-    if not args.no_adaptive_row:
-        at = bench_adaptive_temporal()
-        report["bench_adaptive_t"] = at
-        print(f"  adaptive-T (min_spikes=1): {at['adaptive_tok_s']:.1f} "
-              f"tok/s vs full {at['full_tok_s']:.1f} tok/s "
-              f"({at['adaptive_speedup']:.2f}x, "
-              f"timesteps_skipped={at['timesteps_skipped']}, "
-              f"token_identical={at['token_identical']})")
-    if not args.no_drain_row:
-        dr = bench_drain()
-        report["bench_drain"] = dr
-        print(f"  drain/resume: preempted after "
-              f"{dr['preempt_after_steps']} steps, grace "
-              f"{dr['drain_grace']} -> {dr['handoff']['finished']} finished "
-              f"+ {dr['handoff']['inflight']} in-flight "
-              f"({dr['tokens_preserved']} tokens preserved) + "
-              f"{dr['handoff']['waiting']} waiting; resume "
-              f"token_identical={dr['token_identical']}")
-    if not args.no_streaming_row:
-        stm = bench_streaming()
-        report["bench_streaming"] = stm
-        bp, bb = stm["event_poisson"], stm["event_bursty"]
-        print(f"  streaming (event traces): poisson "
-              f"frame->first-token p50 "
-              f"{bp['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
-              f"{bp['frame_to_first_token_s_p99']*1e3:.1f}ms, bursty p50 "
-              f"{bb['frame_to_first_token_s_p50']*1e3:.1f}ms / p99 "
-              f"{bb['frame_to_first_token_s_p99']*1e3:.1f}ms "
-              f"(bursty timesteps_skipped={bb['timesteps_skipped']}, "
-              f"token_identical={stm['token_identical']})")
-    if not args.no_prefix_row:
-        pc = bench_prefix_cache()
-        report["bench_prefix_cache"] = pc
-        print(f"  prefix cache (shared-prompt trace): hit rate "
-              f"{pc['hit_rate']:.0%}, "
-              f"{pc['prefill_batches_saved']} prefill batches saved, "
-              f"ttft_p50 {pc['paged_prefix']['ttft_s_p50']*1e3:.1f}ms vs "
-              f"cold {pc['dense_cold']['ttft_s_p50']*1e3:.1f}ms "
-              f"(token_identical={pc['token_identical']}; poisson/bursty "
-              f"contrast hit rates {pc['poisson_hit_rate']:.0%}/"
-              f"{pc['bursty_hit_rate']:.0%})")
+    for name in selected:
+        ROW_BENCHES[name](report)
     if not args.no_write:
         with open(OUT_PATH, "w") as f:
             json.dump(report, f, indent=2)

@@ -214,6 +214,27 @@ def build_weight_plan(
     return jax.tree.map(jnp.asarray, _build_weight_plan_host(w, bk=bk, bn=bn))
 
 
+def prune_to_density(w, density: float):
+    """Re-prune one (K, N) FFN weight to a lower block density — the
+    speculative-draft weight derivation (`ExecutionPolicy.speculation`'s
+    ``draft_weight_density``).
+
+    Uses the same block-magnitude criterion and `pick_plan_blocks` geometry
+    as `mlp_init`'s load-time prune, so the surviving blocks of the draft
+    plan are a subset-shaped structure the BSR kernel consumes unchanged;
+    the draft plan is then built by the ordinary `build_weight_plan` /
+    `build_sharded_weight_plan` path — one extra plan next to the target's,
+    zero new kernel code.
+    """
+    from repro.core.snn_layers import prune_by_magnitude
+
+    w = np.asarray(w)
+    K, N = w.shape
+    bk, bn = pick_plan_blocks(K, N)
+    block = (bk, bn) if (K % bk == 0 and N % bn == 0) else None
+    return np.asarray(prune_by_magnitude(jnp.asarray(w), density, block=block))
+
+
 def build_sharded_weight_plan(w: np.ndarray, shards: int) -> WeightJoinPlan:
     """Build a plan ready for `split_plan(plan, shards)`: shard-aware block
     sizes (`pick_shard_blocks`) plus zero-column padding so the column-block

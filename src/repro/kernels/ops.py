@@ -644,6 +644,45 @@ def dispatch(
                           bm=bm_, bk=bk_, bn=bn_, interpret=interpret)
 
 
+def dispatch_decode_window(
+    a,
+    weights_or_plan,
+    policy,
+    T: int,
+    **kwargs,
+):
+    """Decode-window entry for speculative verify: ``a`` is a packed
+    ``(B, S, K)`` operand — S = k+1 sequence positions of one speculative
+    round per batch row, instead of the usual (B, M, K) row-batched layout.
+
+    The window folds into the batched-rows BSR path (B*S rows), so the
+    weight plan / dense weight tiles stream from HBM ONCE per round instead
+    of once per token — the kernel-level reason one batched verify beats
+    k+1 chained single-token dispatches.  Because every kernel under
+    `dispatch` is row-parallel (each output row is an independent full-K
+    contraction), each position's output is bitwise identical to its own
+    (B, 1) dispatch — the property `policy.acceptance_lengths` relies on to
+    keep the verified stream token-identical.
+
+    Under ``temporal='adaptive'`` the activity score is pooled over the
+    folded window (a plane skips only when silent across every position of
+    every row), which preserves the min_spikes=1 bitwise guarantee
+    per-position.
+    """
+    if getattr(a, "ndim", None) != 3:
+        raise ValueError(
+            "dispatch_decode_window takes a packed (B, S, K) window, got "
+            f"shape {getattr(a, 'shape', None)} — use dispatch() for "
+            "unbatched or float operands"
+        )
+    if policy.spike_format != "packed":
+        raise ValueError(
+            "decode windows are packed-spike shaped; policy has "
+            f"spike_format={policy.spike_format!r}"
+        )
+    return dispatch(a, weights_or_plan, policy, T, **kwargs)
+
+
 # ---------------------------------------------------------------------------
 # Offline analysis helpers (not deprecated — no policy equivalent).
 # ---------------------------------------------------------------------------

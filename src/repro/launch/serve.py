@@ -30,6 +30,15 @@ third sparsity axis; bitwise at the default --min-spikes 1):
     PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
         --spiking --weight-density 0.3 --temporal adaptive --batch 4
 
+Speculative decoding (`--speculation draft`): a cheap draft policy over
+the same weights proposes ``--k`` tokens per round (one fused dispatch);
+the target verifies all ``k+1`` positions in one batched decode and emits
+the longest matching prefix — token-identical by construction, with
+acceptance accounting in the summary:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3_2_1b --smoke \
+        --spiking --weight-density 0.3 --speculation draft --k 4 --batch 4
+
 Event-stream serving (`--stream`): prompts arrive as DVS-style event
 windows instead of token arrays — each request is a `StreamSession` fed
 from a synthetic moving-blob sensor (`repro.data.events`), admitted once
@@ -107,6 +116,31 @@ def build_policy(args, cfg):
         if args.temporal == "adaptive"
         else Temporal()
     )
+    speculation = None
+    if getattr(args, "speculation", "none") == "draft":
+        from repro.serve import Speculation, draft
+
+        # the draft is its own full policy over the SAME arch: sync,
+        # unsharded, unpaged (the engine pages its state), free to be
+        # cheaper — harder-pruned weights (--draft-weight-density) and/or
+        # lossier timestep skipping (--draft-min-spikes).  A lossy draft
+        # only lowers acceptance; emitted tokens are always the target's.
+        d_temporal = (
+            adaptive_t(args.draft_min_spikes)
+            if args.draft_min_spikes else Temporal()
+        )
+        d_exactness = (
+            approximate(args.tol) if args.draft_min_spikes > 1 else bitwise()
+        )
+        draft_policy = ExecutionPolicy.for_arch(
+            cfg,
+            temporal=d_temporal,
+            exactness=d_exactness,
+        )
+        speculation = draft(
+            draft_policy, args.k,
+            draft_weight_density=args.draft_weight_density or None,
+        )
     return ExecutionPolicy.for_arch(
         cfg,
         spike_format=spike_format,
@@ -116,6 +150,7 @@ def build_policy(args, cfg):
         execution=args.execution,
         paging=paging,
         temporal=temporal,
+        speculation=speculation,
     )
 
 
@@ -227,6 +262,28 @@ def main(argv=None):
                          "walked under --temporal adaptive; 1 (default) "
                          "skips only all-silent planes and stays bitwise, "
                          ">1 requires --exactness approximate")
+    # -- speculative decoding (ExecutionPolicy.speculation) -------------------
+    ap.add_argument("--speculation", choices=("none", "draft"),
+                    default="none",
+                    help="policy.speculation: draft = a cheap draft policy "
+                         "over the SAME weights proposes --k tokens per "
+                         "round in one fused dispatch; the target verifies "
+                         "all k+1 positions in ONE batched decode and emits "
+                         "the longest matching prefix plus its own bonus "
+                         "token — bitwise token-identical to non-"
+                         "speculative decoding by construction")
+    ap.add_argument("--k", type=int, default=4,
+                    help="proposal length per speculative round under "
+                         "--speculation draft")
+    ap.add_argument("--draft-weight-density", type=float, default=0.0,
+                    help="prune the draft's FFN weights to this density "
+                         "(must be <= the target's --weight-density; 0 = "
+                         "share the target's weights unpruned)")
+    ap.add_argument("--draft-min-spikes", type=int, default=0,
+                    help="run the draft with temporal='adaptive' at this "
+                         "min-spikes threshold (0 = full temporal walk; "
+                         ">1 makes the DRAFT lossy, which only lowers "
+                         "acceptance — the verified stream stays bitwise)")
     # -- event-stream ingestion (serve/streaming.py + data/events.py) --------
     ap.add_argument("--stream", action="store_true",
                     help="serve event streams instead of token prompts: "
@@ -313,6 +370,10 @@ def main(argv=None):
     policy = build_policy(args, cfg)
     print(f"policy: {policy.describe()}")
     max_len = args.prompt_len + args.gen
+    if policy.speculation.enabled:
+        # verify windows may overhang a row's budget by up to k positions
+        # (rejected writes roll back); the scheduler reserves this slack
+        max_len += policy.speculation.k
     if policy.paging.enabled:
         # paged layout needs the cache sequence extent to divide into whole
         # pages; round capacity up (spare positions are masked, never read)
@@ -466,6 +527,11 @@ def main(argv=None):
     if policy.temporal.enabled:
         print(f"temporal: {policy.temporal.describe()} — "
               f"{s['timesteps_skipped']} timestep planes skipped")
+    if policy.speculation.enabled:
+        print(f"speculation: {policy.speculation.describe()} — "
+              f"{s['speculative_rounds']} rounds, "
+              f"{s['tokens_accepted']}/{s['tokens_proposed']} proposals "
+              f"accepted ({s['acceptance_rate']:.0%})")
     if args.stream:
         print(f"streamed {s['stream_sessions']} sessions / "
               f"{s['stream_windows']} frames — frame->first-token "

@@ -367,6 +367,46 @@ def attach_spiking_ffn_plans(
     return walk(params)
 
 
+def derive_draft_params(params: dict, cfg: ArchConfig, density: float) -> dict:
+    """Second param tree for `ExecutionPolicy.speculation` drafts: every
+    spiking-FFN weight pair re-pruned to ``density`` (< the target's
+    ``cfg.spiking_weight_density``), all other leaves SHARED with the target
+    tree (same arrays — the draft is the same model under a sparser plan,
+    and the extra host memory is just the pruned FFN copies).
+
+    Returns a plan-free tree; the caller attaches the draft's own
+    `WeightJoinPlan`s with the ordinary `attach_spiking_ffn_plans` (which
+    re-asserts the density contract — a further-pruned weight always
+    satisfies the target bound).
+    """
+    if not cfg.spiking_ffn:
+        raise ValueError("draft weight pruning needs a spiking-FFN arch")
+    from repro.kernels.join_plan import prune_to_density
+
+    def prune(w):
+        w = jnp.asarray(w)
+        if w.ndim == 2:
+            return jnp.asarray(prune_to_density(w, density))
+        import numpy as np
+
+        return jnp.asarray(
+            np.stack([prune_to_density(w[l], density) for l in range(w.shape[0])])
+        )
+
+    def walk(node):
+        if isinstance(node, dict):
+            if {"wu", "wd"} <= node.keys() and not {"wg", "router"} & node.keys():
+                out = {k: v for k, v in node.items()
+                       if k not in ("plan_in", "plan_out")}
+                out["wu"] = prune(node["wu"])
+                out["wd"] = prune(node["wd"])
+                return out
+            return {k: walk(v) for k, v in node.items()}
+        return node
+
+    return walk(params)
+
+
 def mlp_apply(p, x, cfg: ArchConfig):
     xc = x.astype(_ct(cfg))
     if cfg.spiking_ffn:

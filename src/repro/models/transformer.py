@@ -311,10 +311,20 @@ def prefill(p, cfg: ArchConfig, batch: dict, cache):
 
 
 def decode_step(p, cfg: ArchConfig, tokens, cache):
-    """One decode step: tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    """One decode step: tokens (B, S) -> (logits (B, S, V), new cache).
+
+    S is usually 1; S > 1 is the speculative-verify window (all k+1
+    positions of one round in one dispatch) and the event-stream frame
+    chunk.  Positions are absolute (``cache["pos"] + arange(S)``), so the
+    causal mask inside the window falls out of the standard
+    ``kv_pos <= query_pos`` comparison — per-position logits are bitwise
+    identical to S chained single-token steps.
+    """
     x = embed_tokens(p, cfg, tokens) if cfg.embed_inputs else tokens
-    B = x.shape[0]
-    positions = jnp.broadcast_to(cache["pos"][None, None], (B, 1))
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(
+        cache["pos"][None, None] + jnp.arange(S)[None, :], (B, S)
+    )
     x, new_cache = _stack_forward_cached(p["layers"], x, cfg, positions, cache)
     x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
     return unembed(p, cfg, x), new_cache

@@ -300,3 +300,30 @@ def analyze(hlo: str, entry: str | None = None) -> HloStats:
 
     visit(entry, 1.0, False)
     return stats
+
+
+# Summary keys benchmark rows embed as per-dispatch ``hlo_attribution``
+# sub-dicts (BENCH_serve.json): the compiled module's work and traffic,
+# without the long bytes_by_shape tail.
+ATTRIBUTION_KEYS = (
+    "flops", "bytes_accessed", "collective_bytes", "n_collective_ops",
+    "collectives",
+)
+
+
+def attribution_summary(hlo: str) -> dict:
+    """Compact per-dispatch attribution of one compiled module.
+
+    `analyze` trimmed to `ATTRIBUTION_KEYS` plus the derived arithmetic
+    intensity (flops per HBM byte).  This is the unit benchmark rows use
+    to attribute WHAT each dispatch does — e.g. the sharded serving row's
+    decode (collective traffic per placement) and the speculative row's
+    draft-propose vs target-verify split (relative flops/bytes of the two
+    dispatches a round issues) — where fake-device or CPU wall time would
+    be dishonest.
+    """
+    st = analyze(hlo).asdict()
+    out = {k: st[k] for k in ATTRIBUTION_KEYS if k in st}
+    ba = out.get("bytes_accessed", 0.0)
+    out["arithmetic_intensity"] = (out.get("flops", 0.0) / ba) if ba else 0.0
+    return out

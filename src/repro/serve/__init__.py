@@ -43,11 +43,14 @@ from .policy import (
     Paging,
     ParityError,
     Placement,
+    Speculation,
     Temporal,
+    acceptance_lengths,
     adaptive_t,
     approximate,
     bitwise,
     check_parity,
+    draft,
     drift_report,
     max_logit_drift,
     paged,
@@ -95,9 +98,11 @@ __all__ = [
     "RequestMetrics",
     "RequestState",
     "Scheduler",
+    "Speculation",
     "StreamSession",
     "SyncExecutor",
     "Temporal",
+    "acceptance_lengths",
     "adaptive_t",
     "approximate",
     "bitwise",
@@ -108,6 +113,7 @@ __all__ = [
     "cache_take",
     "capture_handoff",
     "check_parity",
+    "draft",
     "drift_report",
     "make_executor",
     "make_serve_mesh",

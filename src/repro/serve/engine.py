@@ -125,6 +125,16 @@ class Cohort:
     ingest chunk produced — the first generated token once the stream
     closes (executor ``_go_live``).  None for normal cohorts and after
     go-live.
+
+    ``draft_cache`` is the speculative draft policy's own cache for the
+    cohort (same layout as ``cache``, paged rows from the same CacheStore
+    under paging).  Built LAZILY at the cohort's first speculative round
+    from host-known history and dropped (None) whenever keeping it in sync
+    would need anything beyond a pure row edit — it is always
+    reconstructible, never authoritative.  ``draft_behind=1`` marks the
+    draft cache one position short of the target's (a fully-accepted round
+    never fed the draft its own last proposal); the next propose feeds a
+    2-token catch-up chunk.
     """
 
     slots: list[RequestState]
@@ -135,6 +145,8 @@ class Cohort:
     next_tokens: object | None = None
     pending: list = field(default_factory=list)
     stream: object | None = None
+    draft_cache: object | None = None
+    draft_behind: int = 0
 
 
 class Engine:
@@ -200,6 +212,34 @@ class Engine:
         self.merge_cohorts = merge_cohorts and self.row_independent
         self.metrics = EngineMetrics()
         self._axes = model.cache_axes()
+        # -- speculative decoding (ExecutionPolicy.speculation) --------------
+        # Rollback after a partially-accepted verify is a pure position
+        # rewind: stale KV slots keep kv_pos > every later query position,
+        # so absolute-position masking hides them until a genuine write
+        # overwrites slot + kv_pos.  That only works for caches whose ONLY
+        # cross-step carry is (seq slots, position counters) — a per-row
+        # recurrent state ("batch" leaf without "cache_seq") has no rewind.
+        self.speculative = policy.speculation.enabled
+        if self.speculative:
+            axes_leaves = jax.tree.leaves(
+                self._axes, is_leaf=lambda x: isinstance(x, tuple)
+            )
+            stateful = [
+                ax for ax in axes_leaves
+                if isinstance(ax, tuple) and "batch" in ax
+                and "cache_seq" not in ax
+            ]
+            if stateful:
+                raise ValueError(
+                    f"{cfg.name} carries non-rewindable per-row cache state "
+                    f"(leaf axes {stateful[0]}); speculative rollback cannot "
+                    "undo a recurrent update — use speculation='none'"
+                )
+            if not any(ax == () for ax in axes_leaves):
+                raise ValueError(
+                    f"{cfg.name}'s cache has no scalar position local to "
+                    "rewind; speculation needs one"
+                )
         # -- cache backend (ExecutionPolicy.paging) --------------------------
         # dense: per-cohort pytrees, eager concat/take/pad.  paged: page
         # tables into one engine-wide CacheStore; cohort membership changes
@@ -216,7 +256,8 @@ class Engine:
                 template, self._axes, policy.paging.page_size
             )
             n_rows = (page_pool_rows if page_pool_rows is not None
-                      else 2 * max_slots + 4)
+                      else (2 * max_slots + 4)
+                      * (2 if self.speculative else 1))
             self.store = CacheStore(
                 self._page_layout, n_rows, mesh=mesh, metrics=self.metrics
             )
@@ -249,6 +290,8 @@ class Engine:
         self.scheduler = Scheduler(
             max_slots=max_slots, max_queue=max_queue, max_len=max_len,
             bucket_align=bucket_align, prefix_index=self.prefix_index,
+            speculation_slack=(policy.speculation.k
+                               if self.speculative else 0),
         )
         self.cohorts: list[Cohort] = []
         self.results: dict[int, RequestState] = {}
@@ -349,6 +392,86 @@ class Engine:
                 self._page_layout.make_decode(self.model, mesh, self._axes),
                 donate_argnums=(2,),
             ))
+        if self.speculative:
+            self._configure_draft(policy)
+
+    def _configure_draft(self, policy: ExecutionPolicy) -> None:
+        """Derive the draft policy's params/plans/jits next to the target's.
+
+        The draft runs the SAME base weights on the SAME mesh placement;
+        what differs is the execution mode captured at trace time (spiking
+        float vs packed path) and, under ``draft_weight_density``, a
+        further-pruned FFN copy with its own (sparser) `WeightJoinPlan`s.
+        Rebuilt by every `_configure_placement` call, so `remesh` re-shards
+        the draft exactly like the target.  Propose jits are built lazily
+        per (catchup, k) — at most two trace shapes per k in steady state.
+        """
+        spec = policy.speculation
+        mesh = self.mesh
+        params = self._base_params
+        if spec.draft_weight_density is not None:
+            from repro.models.layers import derive_draft_params
+
+            params = derive_draft_params(
+                params, self.cfg, spec.draft_weight_density
+            )
+        if mesh is not None:
+            from .sharding import shard_params
+
+            params = shard_params(
+                params, self.model.axes(), mesh,
+                sharded_dims=policy.model_sharded_dims(),
+            )
+        if spec.draft.weight_sparsity == "dual_sparse":
+            from repro.models.layers import attach_spiking_ffn_plans
+
+            shards = mesh.shape.get("model", 1) if mesh is not None else 1
+            params = attach_spiking_ffn_plans(
+                params, self.cfg, model_shards=shards
+            )
+            if mesh is not None:
+                from .sharding import place_plans
+
+                params = place_plans(params, mesh)
+        self.draft_params = params
+        self._propose_jits: dict[tuple[int, int], object] = {}
+        self._draft_prefill = self._draft_scope(
+            jax.jit(self.model.prefill, donate_argnums=(2,))
+        )
+        if self.paged:
+            self._paged_draft_prefill = self._draft_scope(jax.jit(
+                self._page_layout.make_prefill(
+                    self.model, self.max_len, mesh, self._axes
+                ),
+                donate_argnums=(2,),
+            ))
+
+    def _draft_scope(self, fn):
+        """`_engine_scope`'s draft-policy twin: installs the DRAFT policy's
+        spiking mode at trace time (float drafts run the surrogate float
+        path even when the target serves packed — the forward values are
+        identical, which is what makes a float-dense draft a perfect-
+        acceptance proposal source) plus the shared serve mesh."""
+        draft = self.policy.speculation.draft
+
+        def scoped(*args):
+            from repro.kernels import ops
+            from repro.models import layers as model_layers
+
+            prev = model_layers.get_spiking_ffn_mode()
+            prev_mesh = ops.get_serve_mesh()
+            model_layers.set_spiking_ffn_mode(
+                "infer" if draft.spike_format == "packed" else "train"
+            )
+            if self.mesh is not None:
+                ops.set_serve_mesh(self.mesh)
+            try:
+                return fn(*args)
+            finally:
+                model_layers.set_spiking_ffn_mode(prev)
+                ops.set_serve_mesh(prev_mesh)
+
+        return scoped
 
     def _engine_scope(self, fn):
         """Run `fn` with the engine's trace-time context installed: the
@@ -604,6 +727,9 @@ class Engine:
         self.flush()
         for cohort in self.cohorts:
             cohort.next_tokens = None  # rebuilt from host state next decode
+            # draft caches are lazily reconstructible from host history;
+            # dropping them beats round-tripping a second cache per cohort
+            self.release_draft(cohort)
             if cohort.spikes is not None:
                 cohort.spikes._sync()
             # cohort device state still lives on the OLD device set; a jit
@@ -685,6 +811,10 @@ class Engine:
             return cohort.cache
         idx = list(range(len(cohort.slots)))
         cohort.n_dummy = 0
+        if cohort.draft_cache is not None:
+            # the draft cache mirrors the target's row set exactly (built
+            # with the same dummy rows), so dummy-dropping edits both
+            cohort.draft_cache = self.cache_ops.take(cohort.draft_cache, idx)
         return self.cache_ops.take(cohort.cache, idx)
 
     # -- model dispatch (cache-backend aware) -------------------------------
@@ -755,6 +885,172 @@ class Engine:
                     place_replicated(state_t, self.mesh))
         return jnp.asarray(seq_t), jnp.asarray(state_t)
 
+    # -- speculative dispatch (ExecutionPolicy.speculation) ------------------
+    def _make_propose_fn(self, catchup: int, k: int):
+        """Dense fused propose: ``catchup - 1`` feed positions + ``k``
+        chained greedy draft steps, argmax token feedback staying on device,
+        all in ONE dispatch (the Python loop unrolls at trace time — k and
+        catchup are static)."""
+        model = self.model
+
+        def propose(params, chunk, cache):
+            if catchup > 1:
+                _, cache = model.decode(params, chunk[:, : catchup - 1], cache)
+            tok = chunk[:, catchup - 1]
+            out = []
+            for _ in range(k):
+                logits, cache = model.decode(params, tok[:, None], cache)
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                out.append(tok)
+            return jnp.stack(out, axis=1), cache
+
+        return propose
+
+    def dispatch_propose(self, chunk, draft_cache, k: int):
+        """Draft-propose ``k`` tokens per row; returns ((B, k) device draft
+        tokens, draft_cache').  ``chunk`` is the (B, 1) pending token, or
+        (B, 2) [last-verified, pending] when the draft cache is one behind.
+        """
+        catchup = int(chunk.shape[1])
+        key = (catchup, k)
+        fn = self._propose_jits.get(key)
+        if not self.paged:
+            if fn is None:
+                fn = self._draft_scope(jax.jit(
+                    self._make_propose_fn(catchup, k), donate_argnums=(2,)
+                ))
+                self._propose_jits[key] = fn
+            if self.mesh is not None:
+                from .sharding import place_cache, place_tokens
+
+                draft_cache = place_cache(draft_cache, self._axes, self.mesh)
+                chunk = place_tokens(chunk, self.mesh)
+            return fn(self.draft_params, chunk, draft_cache)
+        if fn is None:
+            fn = self._draft_scope(jax.jit(
+                self._page_layout.make_propose(
+                    self.model, k, catchup, self.mesh, self._axes
+                ),
+                donate_argnums=(2,),
+            ))
+            self._propose_jits[key] = fn
+        if self.mesh is not None:
+            from .sharding import place_tokens
+
+            chunk = place_tokens(chunk, self.mesh)
+        seq_dev, state_dev = self._tables_dev(
+            draft_cache.seq_table, draft_cache.state_table
+        )
+        draft_tokens, pools, locals_ = fn(
+            self.draft_params, chunk, self.store.pools, seq_dev, state_dev,
+            draft_cache.locals,
+        )
+        self.store.pools = pools
+        draft_cache.locals = locals_
+        return draft_tokens, draft_cache
+
+    def dispatch_draft_prefill(self, tokens: np.ndarray):
+        """Build a draft cache by prefilling host-known history under the
+        draft policy (the lazy draft-cache rebuild — see `Cohort`).  Returns
+        the cache only; the prefill logits are the draft's opinion of the
+        NEXT token and the verified stream never consults it outside a
+        propose."""
+        self.metrics.n_draft_prefills += 1
+        if not self.paged:
+            cache = self.model.init_cache(tokens.shape[0], self.max_len)
+            tokens_dev = jnp.asarray(tokens)
+            if self.mesh is not None:
+                from .sharding import place_cache, place_tokens
+
+                cache = place_cache(cache, self._axes, self.mesh)
+                tokens_dev = place_tokens(tokens_dev, self.mesh)
+            _, cache = self._draft_prefill(
+                self.draft_params, {"tokens": tokens_dev}, cache
+            )
+            return cache
+        from .paging import PagedCache
+
+        seq_t, state_t = self.store.alloc_rows(tokens.shape[0])
+        tokens_dev = jnp.asarray(tokens)
+        if self.mesh is not None:
+            from .sharding import place_tokens
+
+            tokens_dev = place_tokens(tokens_dev, self.mesh)
+        seq_dev, state_dev = self._tables_dev(seq_t, state_t)
+        _, pools, locals_ = self._paged_draft_prefill(
+            self.draft_params, tokens_dev, self.store.pools, seq_dev,
+            state_dev,
+        )
+        self.store.pools = pools
+        return PagedCache(self.store, seq_t, state_t, locals_)
+
+    def rewind_cache(self, cache, steps: int):
+        """Rewind a cache's position counters by ``steps`` — the rollback
+        of rejected speculative writes.  Stale KV *content* past the
+        rewound position needs no copy-back: the next genuine decode
+        overwrites slot data and kv_pos alike.  Rejected PAGES need no
+        decref either: the rewound position re-covers the same pages the
+        over-write touched (span-clamped, row-private), so the row's page
+        set is unchanged.
+
+        The ``kv_pos`` ring-slot vectors ARE restored, not just masked:
+        entries ``>= new_pos`` are reset to ``-1`` (the empty-slot init
+        marker).  That is an *exact* rollback, not an approximation — the
+        scheduler's admission bound keeps every position below ``max_len
+        == seq_extent``, so the ring never wraps and a slot above the
+        rewound position can only have been written by the rejected
+        round itself (it held ``-1`` before, inductively).  Restoring it
+        keeps cache locals a pure function of sequence length, which is
+        what lets `CacheOps.concat`'s locals-equality check merge
+        cohorts with different speculative acceptance histories."""
+        if steps <= 0:
+            return cache
+
+        def _is_int(x, nd):
+            return (getattr(x, "ndim", None) == nd
+                    and jnp.issubdtype(x.dtype, jnp.integer))
+
+        if self.paged:
+            new_pos = next(x - steps for x in cache.locals if _is_int(x, 0))
+            cache.locals = [
+                x - steps if _is_int(x, 0)
+                else jnp.where(x >= new_pos, -1, x) if _is_int(x, 1)
+                else x
+                for x in cache.locals
+            ]
+            return cache
+
+        al = jax.tree.leaves(self._axes, is_leaf=lambda x: isinstance(x, tuple))
+        new_pos = next(
+            leaf - steps
+            for leaf, ax in zip(jax.tree.leaves(cache), al)
+            if ax == () and _is_int(leaf, 0)
+        )
+
+        def fix(leaf, ax):
+            if ax == () and _is_int(leaf, 0):
+                return leaf - steps
+            if ax == (None,) and _is_int(leaf, 1):
+                return jnp.where(leaf >= new_pos, -1, leaf)
+            return leaf
+
+        return jax.tree.map(
+            fix, cache, self._axes,
+            is_leaf=lambda x: isinstance(x, tuple),
+        )
+
+    def release_draft(self, cohort: Cohort) -> None:
+        """Drop a cohort's draft cache (paged rows decref'd).  Cheap and
+        always safe — the draft cache is a pure function of host-known
+        history and lazily rebuilds at the next speculative round."""
+        if cohort.draft_cache is None:
+            cohort.draft_behind = 0
+            return
+        if self.paged:
+            cohort.draft_cache.release()
+        cohort.draft_cache = None
+        cohort.draft_behind = 0
+
     # -- prefix reuse -------------------------------------------------------
     def publish_prefix(self, cohort: Cohort) -> None:
         """Publish each just-prefilled row's full prompt into the radix
@@ -823,6 +1119,7 @@ class Engine:
     def release_cohort(self, cohort: Cohort) -> None:
         """Return a fully-retired cohort's backing storage to the pools
         (dense cohorts are garbage-collected with their arrays)."""
+        self.release_draft(cohort)
         if self.paged and cohort.cache is not None:
             cohort.cache.release()
         if self.paged and cohort.spikes is not None:
@@ -925,4 +1222,5 @@ class Engine:
             )
             s["dual_sparse"] = self.spiking_dual_sparse
         s["temporal"] = self.policy.temporal.describe()
+        s["speculation"] = self.policy.speculation.describe()
         return s

@@ -66,6 +66,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .batching import bucket_key, pad_batch
+from .policy import acceptance_lengths
 from .scheduler import Request, RequestState, rebalance_pad
 
 
@@ -314,6 +315,19 @@ class SyncExecutor:
                 cohort.spikes = group[0].spikes
                 for c in group[1:]:
                     cohort.spikes.merge(c.spikes)
+            if e.speculative:
+                # draft caches ride the merge only when every member has
+                # one at the SAME catch-up offset (locals must agree for
+                # concat); otherwise drop them — lazily rebuilt
+                if (all(c.draft_cache is not None for c in group)
+                        and len({c.draft_behind for c in group}) == 1):
+                    cohort.draft_cache = e.cache_ops.concat(
+                        [c.draft_cache for c in group]
+                    )
+                    cohort.draft_behind = group[0].draft_behind
+                else:
+                    for c in group:
+                        e.release_draft(c)
             merged.append(cohort)
             e.metrics.n_merges += len(group) - 1
         e.cohorts = merged
@@ -322,6 +336,8 @@ class SyncExecutor:
         """decode -> sample -> encode for one cohort (sync: the sample
         host-sync completes before the next cohort/step dispatches)."""
         e = self.engine
+        if self._maybe_speculative(cohort):
+            return
         with self._clock("decode"):
             logits = self._dispatch_decode(cohort)
         with self._clock("sample_sync"):
@@ -350,6 +366,164 @@ class SyncExecutor:
         ).astype(jnp.int32)
         cohort.length += 1
         return logits
+
+    # -- speculative decoding (``ExecutionPolicy.speculation``) --------------
+    def _spec_k(self, cohort) -> int:
+        """Largest useful proposal length this round.  Bounded by the
+        policy's ``k``, by the furthest live row's remaining token budget
+        (the verify step always lands at least one bonus target token,
+        hence the ``- 1``; shorter rows clip their surplus in
+        `RequestState.emit_many`), and by the cache extent (the verify
+        window writes ``k + 1`` positions; the scheduler's
+        ``speculation_slack`` reserved room for exactly this)."""
+        e = self.engine
+        budgets = [
+            st.request.max_new_tokens - len(st.generated)
+            for st in cohort.slots if not st.done
+        ]
+        if not budgets:
+            return 0
+        k = min(
+            e.policy.speculation.k,
+            max(budgets) - 1,
+            e.max_len - 1 - cohort.length,
+        )
+        return max(k, 0)
+
+    def _maybe_speculative(self, cohort) -> bool:
+        """Run one propose/verify round instead of a normal decode when
+        the policy speculates and the cohort can still use a proposal
+        window.  A normal decode desynchronizes the draft cache (the
+        draft never sees that token), so falling back releases the draft
+        — it lazily rebuilds if a later round speculates again."""
+        e = self.engine
+        if not e.speculative or cohort.stream is not None:
+            return False
+        k = self._spec_k(cohort)
+        if k < 1:
+            e.release_draft(cohort)
+            return False
+        self.speculative_round(cohort, k)
+        return True
+
+    def _ensure_draft(self, cohort) -> None:
+        """(Re)build the draft cache from host-known history.  The draft
+        state is a pure function of each row's prompt + ``generated[:-1]``
+        (everything already FED to the target; the pending last token is
+        what the propose chunk feeds), so it can be dropped at any point
+        — merge mismatch, remesh, fallback — and reconstructed here with
+        one batched draft prefill.  Done and dummy rows get zero-padded
+        garbage rows: their proposals are discarded, never emitted."""
+        e = self.engine
+        if cohort.draft_cache is not None:
+            return
+        B = len(cohort.slots) + cohort.n_dummy
+        L = cohort.length
+        tokens = np.zeros((B, L), np.int32)
+        for i, st in enumerate(cohort.slots):
+            gen = st.generated[:-1] if st.generated else []
+            gen = gen[-L:] if len(gen) > L else gen
+            Pb = max(0, L - len(gen))
+            prompt = np.asarray(st.request.prompt, np.int32)[:Pb]
+            tokens[i, : len(prompt)] = prompt
+            tokens[i, Pb : Pb + len(gen)] = gen
+        cohort.draft_cache = e.dispatch_draft_prefill(tokens)
+        cohort.draft_behind = 0
+
+    def _draft_chunk(self, cohort, pending):
+        """(B, catchup) token chunk for the propose dispatch: the pending
+        token alone, or — when a fully accepted round left the draft one
+        position behind — preceded by the previous emitted token so the
+        draft catches up inside the same fused dispatch."""
+        if cohort.draft_behind == 0:
+            return pending[:, None]
+        prev = [
+            st.generated[-2] if len(st.generated) >= 2 else 0
+            for st in cohort.slots
+        ]
+        prev += [0] * cohort.n_dummy
+        return jnp.stack([jnp.asarray(prev, jnp.int32), pending], axis=1)
+
+    def speculative_round(self, cohort, k: int) -> None:
+        """One speculative round: draft proposes ``k`` tokens in a single
+        fused dispatch (`Engine.dispatch_propose` — k chained decode steps
+        with on-device argmax feedback), the target verifies all ``k + 1``
+        positions in ONE batched decode, and the longest target-matching
+        proposal prefix is emitted plus the bonus target token.
+
+        Emitted tokens are always the TARGET's argmaxes, so the verified
+        stream is bitwise identical to non-speculative decoding by
+        construction — the draft only decides how many target tokens land
+        per dispatch.  Cohort rows share scalar position locals, so the
+        cohort advance is the MIN acceptance over live rows; rejected
+        positions roll back via `Engine.rewind_cache` (a position/kv_pos
+        edit — no page or slot data is copied).  Rounds are synchronous
+        even under the pipelined executor (flush first, emit immediately):
+        acceptance is a host decision, and only verified tokens ever reach
+        `RequestState` — a drain/handoff can never capture half-verified
+        speculative progress."""
+        e = self.engine
+        self.flush(cohort)  # host state authoritative (no-op in sync)
+        with self._clock("propose"):
+            self._ensure_draft(cohort)
+            if cohort.next_tokens is not None:
+                pending = cohort.next_tokens
+            else:  # membership changed since the last step
+                last = [st.generated[-1] for st in cohort.slots]
+                last += [0] * cohort.n_dummy
+                pending = jnp.asarray(last, jnp.int32)
+            chunk = self._draft_chunk(cohort, pending)
+            draft_dev, cohort.draft_cache = e.dispatch_propose(
+                chunk, cohort.draft_cache, k
+            )
+            e.metrics.n_draft_batches += 1
+        with self._clock("decode"):
+            verify = jnp.concatenate([pending[:, None], draft_dev], axis=1)
+            logits, cohort.cache = e.dispatch_decode(verify, cohort.cache)
+            e.metrics.n_decode_batches += 1
+            e.metrics.n_decode_rows += len(cohort.slots)
+        with self._clock("sample_sync"):
+            tgt = np.asarray(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            )
+            drafts = np.asarray(draft_dev)
+            acc = acceptance_lengths(drafts, tgt)
+            live = [i for i, st in enumerate(cohort.slots) if not st.done]
+            A = int(min((int(acc[i]) for i in live), default=k))
+            n_live = len(live)
+            e.metrics.n_speculative_rounds += 1
+            e.metrics.n_tokens_proposed += k * n_live
+            e.metrics.n_tokens_accepted += A * n_live
+            e.metrics.n_tokens_rejected += (k - A) * n_live
+            if e.capture_logits:
+                # one capture+emit per landed position, token-major: the
+                # trace grows exactly one row per emitted token, same as
+                # the step-at-a-time path
+                lg = np.asarray(logits[:, : A + 1], np.float32)
+                for j in range(A + 1):
+                    e._capture(cohort.slots, lg[:, j : j + 1])
+                    for i, st in enumerate(cohort.slots):
+                        st.emit(int(tgt[i, j]), e.eos_id)
+            else:
+                for i, st in enumerate(cohort.slots):
+                    st.emit_many(tgt[i, : A + 1], e.eos_id)
+            cohort.cache = e.rewind_cache(cohort.cache, k - A)
+            if A < k:
+                # draft positions past the acceptance point consumed
+                # rejected tokens; rewind to one short of the target (the
+                # bonus token is pending, not yet fed anywhere)
+                cohort.draft_cache = e.rewind_cache(
+                    cohort.draft_cache, k - A - 1
+                )
+                cohort.draft_behind = 0
+            else:
+                # full acceptance: the draft never consumed its own last
+                # proposal — the next propose chunk catches it up
+                cohort.draft_behind = 1
+            cohort.length += A + 1
+            cohort.next_tokens = jnp.asarray(tgt[:, A], jnp.int32)
+        with self._clock("encode"):
+            self.encode(cohort)
 
     def encode(self, cohort) -> None:
         """Per-step packed-spike re-encode of each slot's newest token."""
@@ -382,6 +556,12 @@ class SyncExecutor:
                 e.release_cohort(cohort)  # paged: pages back to the pool
                 continue
             cohort.cache = e.cache_ops.take(cohort.cache, alive_idx)
+            if cohort.draft_cache is not None:
+                # same row set as the target cache: gather survivors (paged
+                # draft rows for retired requests decref here)
+                cohort.draft_cache = e.cache_ops.take(
+                    cohort.draft_cache, alive_idx
+                )
             cohort.slots = [cohort.slots[i] for i in alive_idx]
             cohort.n_dummy = 0
             cohort.next_tokens = None  # membership changed: host rebuilds
@@ -483,6 +663,10 @@ class PipelinedExecutor(SyncExecutor):
             with self._clock("sample_sync"):
                 self.flush(cohort)
             return
+        if self._maybe_speculative(cohort):
+            # speculative rounds are synchronous (see `speculative_round`):
+            # no PendingStep enters the window
+            return
         with self._clock("decode"):
             logits = self._dispatch_decode(cohort)
             cohort.pending.append(PendingStep(
@@ -578,6 +762,10 @@ class PipelinedExecutor(SyncExecutor):
         if pad == 0:
             return
         cohort.cache = e.cache_ops.pad_rows(cohort.cache, pad)
+        if cohort.draft_cache is not None:
+            # keep the draft's row set mirroring the target's (dummy draft
+            # rows propose garbage that is never emitted)
+            cohort.draft_cache = e.cache_ops.pad_rows(cohort.draft_cache, pad)
         cohort.n_dummy = pad
         e.metrics.n_rebalances += 1
         e.metrics.n_padded_rows += pad

@@ -74,6 +74,18 @@ class EngineMetrics:
     n_stream_sessions: int = 0
     n_stream_windows: int = 0
     stream_frame_latency_s: list = field(default_factory=list)
+    # speculation=draft(...) counters: per live row, each round proposes
+    # k_eff draft tokens; `acceptance_lengths` accepts a longest prefix and
+    # the rest are rejected (proposed == accepted + rejected always).  The
+    # round still emits accepted+1 verified tokens per row (the bonus token
+    # is the target's own argmax, not a proposal, so it is never "accepted"
+    # or "rejected").  acceptance_rate = accepted / proposed in `summary()`.
+    n_speculative_rounds: int = 0
+    n_draft_batches: int = 0      # fused k-step propose dispatches
+    n_draft_prefills: int = 0     # lazy draft-cache (re)builds
+    n_tokens_proposed: int = 0
+    n_tokens_accepted: int = 0
+    n_tokens_rejected: int = 0
     # fault-tolerance counters (serve/handoff.py + Engine.drain/remesh and
     # the pipelined executor's straggler fold)
     n_drained: int = 0            # requests handed off unfinished at drain
@@ -149,6 +161,15 @@ class EngineMetrics:
             "prefix_hits": self.n_prefix_hits,
             "prefix_tokens_reused": self.n_prefix_tokens_reused,
             "timesteps_skipped": self.timesteps_skipped,
+            "speculative_rounds": self.n_speculative_rounds,
+            "draft_batches": self.n_draft_batches,
+            "draft_prefills": self.n_draft_prefills,
+            "tokens_proposed": self.n_tokens_proposed,
+            "tokens_accepted": self.n_tokens_accepted,
+            "tokens_rejected": self.n_tokens_rejected,
+            "acceptance_rate": (
+                self.n_tokens_accepted / max(1, self.n_tokens_proposed)
+            ),
             "stream_sessions": self.n_stream_sessions,
             "stream_windows": self.n_stream_windows,
             "frame_to_first_token_s_p50": _percentile(

@@ -195,25 +195,40 @@ class PageLayout:
                 pools[key] = pools[key].at[state_table].set(x)
         return pools
 
-    def _scatter_step(self, pools, cache, seq_table, state_table, pos):
-        """Write back one decode step: the single active sequence page per
-        row (located from the traced ring position — the only page the
-        ring write touched) plus the state pages (rewritten every step)."""
+    def _scatter_step(self, pools, cache, seq_table, state_table, pos,
+                      span: int = 1):
+        """Write back one decode dispatch: the sequence pages the write of
+        ``span`` positions starting at the traced ring position can have
+        touched, plus the state pages (rewritten every dispatch).
+
+        ``span`` is static at trace time (the decode window: 1 for plain
+        decode, k+1 for a speculative verify, the chain length for a fused
+        propose).  Worst-case page-boundary alignment makes a span of S
+        straddle ``(S-1)//page_size + 2`` pages; page indices past the row
+        end are clamped to the last page, whose extra write is idempotent
+        (the gathered view equals pool content wherever the model wrote
+        nothing), and clamping only ever aims HIGHER pages — never the
+        low-index pages a shared prefix lives in."""
         leaves = jax.tree.leaves(cache)
         pools = dict(pools)
         if self.seq_extent:
             slot = pos.astype(jnp.int32) % self.seq_extent
-            active = slot // self.page_size
-            ids = jnp.take(seq_table, active, axis=1)   # (B,) distinct pages
+            first = slot // self.page_size
+            n_pages = min(self.pages_per_row,
+                          (int(span) - 1) // self.page_size + 2)
         for i, kind in enumerate(self.kinds):
             key = f"l{i}"
             if kind[0] == "seq":
                 _, b, s, sp = kind
                 x = jnp.moveaxis(leaves[i], b, 0)
-                chunk = jax.lax.dynamic_slice_in_dim(
-                    x, active * self.page_size, self.page_size, axis=1 + sp
-                )
-                pools[key] = pools[key].at[ids].set(chunk)
+                for j in range(n_pages):
+                    active = jnp.minimum(first + j, self.pages_per_row - 1)
+                    ids = jnp.take(seq_table, active, axis=1)  # (B,) pages
+                    chunk = jax.lax.dynamic_slice_in_dim(
+                        x, active * self.page_size, self.page_size,
+                        axis=1 + sp,
+                    )
+                    pools[key] = pools[key].at[ids].set(chunk)
             elif kind[0] == "state":
                 x = jnp.moveaxis(leaves[i], kind[1], 0)
                 pools[key] = pools[key].at[state_table].set(x)
@@ -237,7 +252,9 @@ class PageLayout:
 
     def make_decode(self, model, mesh=None, axes_tree=None):
         """(params, tokens, pools, seq_table, state_table, locals) ->
-        (logits, pools, locals)."""
+        (logits, pools, locals).  Tokens may be (B, 1) plain decode or a
+        wider (B, S) window (speculative verify / stream frame chunk) — the
+        span scatter covers every page the window wrote."""
         constrain = _view_constrainer(mesh, axes_tree)
 
         def fn(params, tokens, pools, seq_table, state_table, locals_):
@@ -247,9 +264,44 @@ class PageLayout:
                    if self._pos_local is not None else None)
             logits, cache = model.decode(params, tokens, cache)
             pools = self._scatter_step(
-                pools, cache, seq_table, state_table, pos
+                pools, cache, seq_table, state_table, pos,
+                span=tokens.shape[1],
             )
             return logits, pools, self._locals_of(cache)
+
+        return fn
+
+    def make_propose(self, model, k: int, catchup: int, mesh=None,
+                     axes_tree=None):
+        """Paged fused draft-propose: (params, chunk, pools, seq_table,
+        state_table, locals) -> (draft_tokens (B, k), pools, locals).
+
+        ``chunk`` is (B, catchup) host-known tokens: the pending token,
+        preceded by the already-verified catch-up token when the draft cache
+        is one position behind (the previous round accepted everything).
+        One gather, ``catchup - 1`` catch-up positions + ``k`` chained
+        greedy steps with on-device argmax feedback, one span scatter — a
+        single dispatch regardless of k."""
+        constrain = _view_constrainer(mesh, axes_tree)
+        span = k + catchup - 1
+
+        def fn(params, chunk, pools, seq_table, state_table, locals_):
+            cache = self._gather_leaves(pools, seq_table, state_table, locals_)
+            cache = constrain(cache)
+            pos = (locals_[self._pos_local]
+                   if self._pos_local is not None else None)
+            if catchup > 1:
+                _, cache = model.decode(params, chunk[:, : catchup - 1], cache)
+            tok = chunk[:, catchup - 1]
+            out = []
+            for _ in range(k):
+                logits, cache = model.decode(params, tok[:, None], cache)
+                tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                out.append(tok)
+            pools = self._scatter_step(
+                pools, cache, seq_table, state_table, pos, span=span
+            )
+            return jnp.stack(out, axis=1), pools, self._locals_of(cache)
 
         return fn
 

@@ -28,6 +28,12 @@ execution choice is one frozen, hashable dataclass-pytree with four axes:
   spike encode double-buffers against the next decode, and mesh cohorts
   re-pack on load skew).  Orthogonal to exactness: a bitwise pipelined
   policy is still token-identical — only the host/device overlap changes.
+* ``speculation``     — speculative decoding: ``"none"``, or ``draft(policy,
+  k)`` where a full (cheaper) draft `ExecutionPolicy` proposes ``k`` tokens
+  per slot in one fused chained dispatch and the target policy verifies all
+  ``k+1`` positions in one batched decode; the longest verified-token prefix
+  advances, so the emitted stream is bitwise identical to non-speculative
+  decoding by construction (`check_parity` is the free acceptance oracle).
 * ``temporal``        — which timesteps the FTP kernels walk: ``"full"``
   (every plane, the folded kernel) or ``"adaptive"`` (a device-side
   popcount scorer gates each timestep bit-plane in-kernel; min_spikes=1
@@ -64,6 +70,7 @@ EXACTNESS_MODES = ("bitwise", "approximate")
 EXECUTION_MODES = ("sync", "pipelined")
 PAGING_MODES = ("none", "paged")
 TEMPORAL_MODES = ("full", "adaptive")
+SPECULATION_MODES = ("none", "draft")
 
 
 # ---------------------------------------------------------------------------
@@ -265,6 +272,115 @@ def adaptive_t(min_spikes: int = 1) -> Temporal:
     return Temporal("adaptive", min_spikes)
 
 
+@register_static
+@dataclass(frozen=True)
+class Speculation:
+    """Speculative decoding: a cheap draft `ExecutionPolicy` proposes ``k``
+    tokens per slot, the target policy verifies all ``k+1`` positions in ONE
+    batched decode dispatch, and the longest verified-token prefix advances.
+
+    The draft is the SAME weights under a cheaper policy (float-dense, a
+    more aggressively pruned dual-sparse plan, or a lossy adaptive-temporal
+    walk) — the LoAS argument that dual/temporal sparsity make a pass of the
+    same weights nearly free, applied to make that pass a draft model.
+    Acceptance compares draft tokens against the target's greedy argmax at
+    each position, so the verified stream is bitwise token-identical to
+    non-speculative decoding of the target policy *by construction*:
+    `check_parity` is the acceptance oracle and `drift_report` its
+    diagnostics, both for free.
+
+    ``draft_weight_density``: optionally prune the draft's FFN weights
+    further than the target (a second, sparser `WeightJoinPlan` is built
+    once at load next to the target plan).  Requires a dual-sparse draft.
+
+    Arch-independent validation happens here; same-arch/same-T holds by
+    construction (one engine, one param tree), and the row-independence /
+    rewindable-cache checks live in `ExecutionPolicy.validate_for` plus the
+    engine (where the cache layout is known).
+    """
+
+    mode: str = "none"
+    draft: "ExecutionPolicy | None" = None
+    k: int = 0
+    draft_weight_density: float | None = None
+
+    def __post_init__(self):
+        if self.mode not in SPECULATION_MODES:
+            raise ValueError(
+                f"speculation mode {self.mode!r} not in {SPECULATION_MODES}"
+            )
+        if self.mode == "none":
+            if self.draft is not None or self.k or self.draft_weight_density:
+                raise ValueError(
+                    "speculation='none' takes no draft policy / k / "
+                    "draft_weight_density — use speculation=draft(policy, k)"
+                )
+            return
+        if not isinstance(self.draft, ExecutionPolicy):
+            raise ValueError(
+                "speculation='draft' needs a full draft ExecutionPolicy, "
+                f"got {self.draft!r}"
+            )
+        if self.k < 1:
+            raise ValueError(
+                f"speculation needs a proposal length k >= 1, got {self.k}"
+            )
+        if self.draft.speculation.enabled:
+            raise ValueError("draft policies cannot themselves speculate")
+        if self.draft.execution != "sync":
+            raise ValueError(
+                "the draft proposes k chained steps fused in one dispatch; "
+                "its execution axis must be 'sync' (got "
+                f"{self.draft.execution!r})"
+            )
+        if self.draft.paging.enabled:
+            raise ValueError(
+                "draft cache paging is owned by the ENGINE (the draft state "
+                "rides the target CacheStore as a second page-table column); "
+                "leave the draft policy's paging axis at 'none'"
+            )
+        if self.draft.placement.mesh is not None:
+            raise ValueError(
+                "draft placement is inherited from the target policy (the "
+                "draft runs on the same serve mesh); leave the draft "
+                "policy's placement unset"
+            )
+        if self.draft_weight_density is not None:
+            if not 0.0 < self.draft_weight_density <= 1.0:
+                raise ValueError(
+                    "draft_weight_density must be in (0, 1], got "
+                    f"{self.draft_weight_density}"
+                )
+            if self.draft.weight_sparsity != "dual_sparse":
+                raise ValueError(
+                    "draft_weight_density prunes the draft's join plan; it "
+                    "requires a dual-sparse draft policy (got "
+                    f"weight_sparsity={self.draft.weight_sparsity!r})"
+                )
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode == "draft"
+
+    def describe(self) -> str:
+        if self.mode == "none":
+            return "none"
+        d = self.draft
+        dd = (f", draft_weight_density={self.draft_weight_density}"
+              if self.draft_weight_density is not None else "")
+        return (f"draft(k={self.k}, spike_format={d.spike_format!r}, "
+                f"weight_sparsity={d.weight_sparsity!r}, "
+                f"temporal={d.temporal.describe()}{dd})")
+
+
+def draft(policy: "ExecutionPolicy", k: int = 4, *,
+          draft_weight_density: float | None = None) -> Speculation:
+    """Speculative decoding with ``policy`` as the draft proposing ``k``
+    tokens per round."""
+    return Speculation("draft", policy, k,
+                       draft_weight_density=draft_weight_density)
+
+
 # ---------------------------------------------------------------------------
 # the policy
 # ---------------------------------------------------------------------------
@@ -287,6 +403,7 @@ class ExecutionPolicy:
     execution: str = "sync"
     paging: Paging = field(default_factory=Paging)
     temporal: Temporal = field(default_factory=Temporal)
+    speculation: Speculation = field(default_factory=Speculation)
 
     def __post_init__(self):
         if self.execution not in EXECUTION_MODES:
@@ -336,6 +453,17 @@ class ExecutionPolicy:
                 "unless temporal=adaptive_t(min_spikes>1) supplies the "
                 "approximation being bounded."
             )
+        if self.speculation.enabled and not self.token_identical:
+            # Acceptance compares draft tokens against the target argmax; the
+            # "verified stream == non-speculative stream" guarantee IS the
+            # bitwise contract, so an approximate target has nothing to
+            # verify against.  (The DRAFT may be as lossy as it likes — a
+            # wrong proposal just lowers the acceptance rate.)
+            raise ValueError(
+                "speculation requires a bitwise target policy: the verified "
+                "stream is defined as the target's own greedy stream, which "
+                "exactness='approximate' explicitly relaxes"
+            )
         if (self.exactness.mode == "bitwise"
                 and self.placement.model_dims is not None):
             breaking = set(self.placement.model_dims) - MODEL_SHARDED_DIMS
@@ -374,7 +502,8 @@ class ExecutionPolicy:
                 f"placement={self.placement.describe()}, exactness={ex}, "
                 f"execution={self.execution!r}, "
                 f"paging={self.paging.describe()}, "
-                f"temporal={self.temporal.describe()}")
+                f"temporal={self.temporal.describe()}, "
+                f"speculation={self.speculation.describe()}")
 
     # -- arch-aware validation / construction -------------------------------
     def validate_for(self, cfg) -> "ExecutionPolicy":
@@ -394,6 +523,33 @@ class ExecutionPolicy:
                     "init (spiking_weight_density < 1) or use "
                     "weight_sparsity='dense'"
                 )
+        if self.speculation.enabled:
+            spec = self.speculation
+            # Same arch/T by construction: the draft is validated against the
+            # SAME cfg (one engine, one param tree, one spiking_T).
+            spec.draft.validate_for(cfg)
+            if getattr(cfg, "n_experts", 0):
+                raise ValueError(
+                    "speculation needs row-independent decode (acceptance "
+                    f"rolls individual rows back), but {cfg.name} routes "
+                    f"across {cfg.n_experts} experts — capacity routing "
+                    "couples batch rows"
+                )
+            if getattr(cfg, "attn", "causal") != "causal":
+                raise ValueError(
+                    "speculative rollback rewinds the cache position and "
+                    "relies on absolute-position masking to hide stale "
+                    f"slots; {cfg.name} uses attn={cfg.attn!r} (a windowed/"
+                    "ring cache wraps, so rejected writes may have evicted "
+                    "live history)"
+                )
+            if (spec.draft_weight_density is not None
+                    and spec.draft_weight_density > cfg.spiking_weight_density):
+                raise ValueError(
+                    "draft_weight_density must prune AT LEAST as hard as "
+                    f"the target ({spec.draft_weight_density} > "
+                    f"cfg.spiking_weight_density={cfg.spiking_weight_density})"
+                )
         return self
 
     @classmethod
@@ -403,11 +559,12 @@ class ExecutionPolicy:
                  exactness: Exactness | None = None,
                  execution: str | None = None,
                  paging: Paging | None = None,
-                 temporal: Temporal | None = None) -> "ExecutionPolicy":
+                 temporal: Temporal | None = None,
+                 speculation: Speculation | None = None) -> "ExecutionPolicy":
         """Arch-aware constructor with ``None`` = the natural default:
         packed spikes for spiking archs, dual-sparse when weights are
         pruned, single-device bitwise placement, sync execution, dense
-        (non-paged) cache storage, full temporal walk."""
+        (non-paged) cache storage, full temporal walk, no speculation."""
         if spike_format is None:
             spike_format = "packed" if cfg.spiking_ffn else "float"
         if weight_sparsity is None:
@@ -424,6 +581,7 @@ class ExecutionPolicy:
             execution=execution if execution is not None else "sync",
             paging=paging if paging is not None else Paging(),
             temporal=temporal if temporal is not None else Temporal(),
+            speculation=speculation if speculation is not None else Speculation(),
         )
         return pol.validate_for(cfg)
 
@@ -438,6 +596,44 @@ PACKED_DUAL = ExecutionPolicy(spike_format="packed",
 PACKED_DUAL_ADAPTIVE = ExecutionPolicy(spike_format="packed",
                                        weight_sparsity="dual_sparse",
                                        temporal=adaptive_t())
+
+
+# ---------------------------------------------------------------------------
+# speculative acceptance (longest verified-token prefix)
+# ---------------------------------------------------------------------------
+
+def acceptance_lengths(draft_tokens, target_tokens) -> np.ndarray:
+    """Per-row longest accepted prefix of a speculative round.
+
+    ``draft_tokens``: (B, k) proposals.  ``target_tokens``: (B, >=k) greedy
+    argmax of the target's verify logits at the same positions (column j of
+    the verify output is the target's next-token choice GIVEN the stream up
+    through draft position j-1).  Row i accepts ``a_i = max a such that
+    draft[i, :a] == target[i, :a]`` — exactly the `check_parity` token-
+    identity criterion applied per position, which is why the verified
+    stream is the target's own greedy stream by construction: every emitted
+    token (the a_i accepted ones AND the bonus token ``target[i, a_i]``) is
+    a target argmax computed from previously verified inputs.
+
+    Invariants (property-tested): ``0 <= a_i <= k``; all-reject rounds have
+    ``a_i = 0`` yet still advance one verified token (the bonus); ``k = 0``
+    degenerates to non-speculative decoding.
+    """
+    d = np.asarray(draft_tokens)
+    if d.ndim != 2:
+        raise ValueError(f"draft_tokens must be (B, k), got shape {d.shape}")
+    t = np.asarray(target_tokens)[:, : d.shape[1]]
+    if t.shape != d.shape:
+        raise ValueError(
+            f"target must cover every proposed position: draft {d.shape} "
+            f"vs target {np.asarray(target_tokens).shape}"
+        )
+    if d.shape[1] == 0:
+        return np.zeros(d.shape[0], dtype=np.int64)
+    mismatch = d != t
+    any_mm = mismatch.any(axis=1)
+    first = np.where(any_mm, mismatch.argmax(axis=1), d.shape[1])
+    return first.astype(np.int64)
 
 
 # ---------------------------------------------------------------------------

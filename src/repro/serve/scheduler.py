@@ -77,6 +77,20 @@ class RequestState:
         elif len(self.generated) >= self.request.max_new_tokens:
             self.finish_reason, self.finish_time = "length", now
 
+    def emit_many(self, tokens, eos_id: int | None) -> int:
+        """Emit a verified speculative prefix; returns how many tokens were
+        actually recorded.  Stops at the first finish (EOS or length budget)
+        — positions past a mid-round finish were computed against a stream
+        the request never emitted, and are discarded exactly like PR 5's
+        late-EOS speculation."""
+        n = 0
+        for t in tokens:
+            if self.done:
+                break
+            self.emit(int(t), eos_id)
+            n += 1
+        return n
+
 
 def rebalance_pad(n_rows: int, data_axis: int) -> int:
     """Dummy rows needed to re-pack a cohort of ``n_rows`` live requests
@@ -180,12 +194,23 @@ class Scheduler:
         max_len: int,
         bucket_align: int = 1,
         prefix_index=None,
+        speculation_slack: int = 0,
     ):
         if max_slots < 1:
             raise ValueError("max_slots must be >= 1")
+        if speculation_slack < 0:
+            raise ValueError("speculation_slack must be >= 0")
         self.max_slots = max_slots
         self.max_queue = max_queue
         self.max_len = max_len
+        # Extra cache headroom reserved per request under a speculative
+        # policy (= the proposal length k): a speculative round writes up to
+        # k+1 positions before acceptance is known, so keeping k slack past
+        # `bucket + max_new` lets every round run the full-k propose/verify
+        # traces instead of retracing shrunken tails near max_len.  The
+        # executor still clamps k_eff against max_len — the slack is a
+        # compile-stability reservation, not a correctness requirement.
+        self.speculation_slack = speculation_slack
         self.bucket_align = bucket_align
         self.prefix_index = prefix_index
         self.waiting: deque[Request] = deque()
@@ -211,10 +236,14 @@ class Scheduler:
             )
         if prompt.shape[0] < 1 or max_new_tokens < 1:
             raise self._reject("empty prompt or non-positive max_new_tokens")
-        need = bucket_key(prompt.shape[0], self.bucket_align) + max_new_tokens
+        need = (bucket_key(prompt.shape[0], self.bucket_align)
+                + max_new_tokens + self.speculation_slack)
         if need > self.max_len:
             raise self._reject(
-                f"request needs {need} cache slots > engine max_len {self.max_len}"
+                f"request needs {need} cache slots"
+                + (f" (incl. speculation_slack={self.speculation_slack})"
+                   if self.speculation_slack else "")
+                + f" > engine max_len {self.max_len}"
             )
         if len(self.waiting) + len(self.hit_waiting) >= self.max_queue:
             raise self._reject(f"queue full ({self.max_queue} waiting)")

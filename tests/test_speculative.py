@@ -1,0 +1,394 @@
+"""Speculative-decoding tests (`policy.speculation` + the executor round).
+
+The contract under test: speculation is a pure PERFORMANCE axis.  The
+verified stream is defined as the target's own greedy stream (every
+emitted token is a target argmax computed from previously verified
+inputs), so any draft — float surrogate, harder-pruned, or adversarially
+wrong — must leave tokens bitwise identical to non-speculative decoding
+and only move the acceptance rate.  Mesh cells run on the suite-wide
+8 fake XLA devices (tests/conftest.py).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models.registry import build_model
+from repro.serve import (
+    DenseCacheOps,
+    Engine,
+    EngineMetrics,
+    ExecutionPolicy,
+    Placement,
+    Speculation,
+    acceptance_lengths,
+    draft,
+    make_serve_mesh,
+    paged,
+)
+
+from _hyp import given, settings, st
+
+_MODEL_CACHE: dict = {}
+
+
+def _model(**overrides):
+    key = tuple(sorted(overrides.items()))
+    if key not in _MODEL_CACHE:
+        cfg = smoke_variant(get_config("llama3_2_1b"))
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _MODEL_CACHE[key] = (cfg, model, params)
+    return _MODEL_CACHE[key]
+
+
+def _spiking_model():
+    return _model(spiking_ffn=True, spiking_T=4, spiking_weight_density=0.5)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [np.asarray(rng.integers(0, cfg.vocab, size=(L,)), np.int32)
+            for L in lens]
+
+
+def _float_draft(cfg):
+    return ExecutionPolicy.for_arch(
+        cfg, spike_format="float", weight_sparsity="dense"
+    )
+
+
+# ---------------------------------------------------------------------------
+# longest-accepted-prefix properties (the acceptance oracle)
+# ---------------------------------------------------------------------------
+
+def _reference_prefix(d_row, t_row):
+    a = 0
+    while a < len(d_row) and d_row[a] == t_row[a]:
+        a += 1
+    return a
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=5),
+    k=st.integers(min_value=1, max_value=8),
+    vocab=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_prop_acceptance_is_longest_matching_prefix(b, k, vocab, seed):
+    rng = np.random.default_rng(seed)
+    # tiny vocab forces frequent partial matches, exercising every prefix len
+    d = rng.integers(0, vocab, size=(b, k))
+    t = rng.integers(0, vocab, size=(b, k + 1))  # extra bonus column trimmed
+    acc = acceptance_lengths(d, t)
+    assert acc.shape == (b,)
+    assert np.all(acc >= 0) and np.all(acc <= k)
+    for i in range(b):
+        a = int(acc[i])
+        assert a == _reference_prefix(d[i], t[i])
+        assert np.array_equal(d[i, :a], t[i, :a])
+        assert a == k or d[i, a] != t[i, a]
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_prop_all_reject_accepts_zero(b, k, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, 100, size=(b, k))
+    t = d.copy()
+    t[:, 0] += 1  # first proposal wrong in every row
+    acc = acceptance_lengths(d, t)
+    assert np.all(acc == 0)
+    # an all-reject round still advances: the executor emits acc + 1 tokens
+    # per row (the bonus target token), so progress is >= 1 regardless
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=6),
+    k=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=10_000),
+)
+def test_prop_all_accept_takes_k(b, k, seed):
+    rng = np.random.default_rng(seed)
+    d = rng.integers(0, 100, size=(b, k))
+    assert np.all(acceptance_lengths(d, d) == k)
+
+
+def test_acceptance_k0_degenerates_to_plain_decode():
+    acc = acceptance_lengths(np.zeros((3, 0), np.int32),
+                             np.zeros((3, 0), np.int32))
+    assert acc.shape == (3,) and np.all(acc == 0)
+
+
+def test_acceptance_shape_validation():
+    with pytest.raises(ValueError, match=r"\(B, k\)"):
+        acceptance_lengths(np.zeros(4, np.int32), np.zeros((4, 4), np.int32))
+    with pytest.raises(ValueError, match="cover every proposed"):
+        acceptance_lengths(np.zeros((2, 4), np.int32),
+                           np.zeros((2, 3), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# policy axis: construction + validation
+# ---------------------------------------------------------------------------
+
+def test_speculation_axis_defaults_off():
+    cfg, _, _ = _spiking_model()
+    pol = ExecutionPolicy.for_arch(cfg)
+    assert not pol.speculation.enabled
+    assert "speculation=none" in pol.describe()
+
+
+def test_draft_helper_builds_validated_axis():
+    cfg, _, _ = _spiking_model()
+    spec = draft(_float_draft(cfg), k=3)
+    assert spec.enabled and spec.k == 3
+    pol = ExecutionPolicy.for_arch(cfg, speculation=spec)
+    assert "draft" in pol.describe() and "k=3" in pol.describe()
+
+
+def test_speculation_rejects_bad_construction():
+    cfg, _, _ = _spiking_model()
+    fd = _float_draft(cfg)
+    with pytest.raises(ValueError, match="k >= 1"):
+        draft(fd, k=0)
+    with pytest.raises(ValueError, match="full draft ExecutionPolicy"):
+        Speculation(mode="draft", draft="float", k=4)
+    with pytest.raises(ValueError, match="cannot themselves speculate"):
+        draft(ExecutionPolicy.for_arch(cfg, speculation=draft(fd, k=2)), k=2)
+    with pytest.raises(ValueError, match="execution axis must be 'sync'"):
+        draft(ExecutionPolicy.for_arch(cfg, execution="pipelined"), k=2)
+    with pytest.raises(ValueError, match="owned by the ENGINE"):
+        draft(ExecutionPolicy.for_arch(cfg, paging=paged(page_size=8)), k=2)
+
+
+def test_speculation_requires_bitwise_target():
+    cfg, _, _ = _spiking_model()
+    from repro.serve import adaptive_t, approximate
+
+    with pytest.raises(ValueError, match="bitwise target"):
+        ExecutionPolicy.for_arch(
+            cfg, temporal=adaptive_t(min_spikes=2),
+            exactness=approximate(tol=0.5),
+            speculation=draft(_float_draft(cfg), k=4),
+        )
+
+
+def test_draft_density_must_prune_at_least_as_hard():
+    cfg, _, _ = _spiking_model()  # target density 0.5
+    with pytest.raises(ValueError, match="prune AT LEAST as hard"):
+        ExecutionPolicy.for_arch(
+            cfg,
+            speculation=draft(ExecutionPolicy.for_arch(cfg), k=4,
+                              draft_weight_density=0.8),
+        )
+
+
+# ---------------------------------------------------------------------------
+# token-identity matrix: {sync,pipelined} x {dense,paged} x {single,mesh}
+# ---------------------------------------------------------------------------
+
+_LENS = (8, 12, 8, 8)
+_GENS = (6, 5, 4, 7)
+_ARRIVALS = (0, 0, 1, 2)
+
+
+def _run(model, params, policy, max_slots=4, lens=_LENS, gens=_GENS,
+         arrivals=_ARRIVALS, seed=3):
+    cfg = model.cfg
+    eng = Engine(model, params, max_len=48, max_slots=max_slots,
+                 batch_align=2, policy=policy)
+    prompts = _prompts(cfg, lens, seed=seed)
+    reqs, i, step = [], 0, 0
+    while not (eng.idle and i == len(prompts)):
+        while i < len(prompts) and arrivals[i] <= step:
+            reqs.append(eng.submit(prompts[i], gens[i]))
+            i += 1
+        eng.step()
+        step += 1
+    out = [np.asarray(eng.results[r.rid].generated, np.int32) for r in reqs]
+    return out, eng.summary()
+
+
+@pytest.fixture(scope="module")
+def spec_reference():
+    cfg, model, params = _spiking_model()
+    out, _ = _run(model, params, ExecutionPolicy.for_arch(cfg))
+    return out
+
+
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+@pytest.mark.parametrize("paging_mode", ["dense", "paged"])
+@pytest.mark.parametrize("placement", ["single", "mesh"])
+def test_speculative_token_identity_matrix(
+    execution, paging_mode, placement, spec_reference
+):
+    cfg, model, params = _spiking_model()
+    kw = {"speculation": draft(_float_draft(cfg), k=4)}
+    if execution == "pipelined":
+        kw["execution"] = "pipelined"
+    if paging_mode == "paged":
+        kw["paging"] = paged(page_size=8)
+    if placement == "mesh":
+        kw["placement"] = Placement(mesh=make_serve_mesh("data=4,model=2"))
+    out, s = _run(model, params, ExecutionPolicy.for_arch(cfg, **kw))
+    for want, got in zip(spec_reference, out):
+        np.testing.assert_array_equal(want, got)
+    # acceptance accounting: every proposal is adjudicated exactly once
+    assert s["speculative_rounds"] > 0
+    assert s["tokens_proposed"] > 0
+    assert s["tokens_proposed"] == s["tokens_accepted"] + s["tokens_rejected"]
+    assert s["acceptance_rate"] > 0
+    assert s["draft_batches"] >= s["speculative_rounds"]
+
+
+def test_partial_acceptance_still_token_identical():
+    """A harder-pruned packed draft disagrees with the target on some
+    proposals — the rejected-suffix rewind path must preserve identity."""
+    cfg, model, params = _spiking_model()
+    lens, gens, arrivals = (8, 8, 12, 8, 12, 8), (6, 6, 5, 4, 5, 8), \
+        (0, 0, 0, 1, 2, 3)
+    want, _ = _run(model, params, ExecutionPolicy.for_arch(cfg),
+                   lens=lens, gens=gens, arrivals=arrivals, seed=1)
+    pol = ExecutionPolicy.for_arch(
+        cfg,
+        speculation=draft(ExecutionPolicy.for_arch(cfg), k=3,
+                          draft_weight_density=0.2),
+    )
+    out, s = _run(model, params, pol,
+                  lens=lens, gens=gens, arrivals=arrivals, seed=1)
+    for a, b in zip(want, out):
+        np.testing.assert_array_equal(a, b)
+    assert s["tokens_proposed"] == s["tokens_accepted"] + s["tokens_rejected"]
+    # the pruned draft is numerically different from the target, so at
+    # least one proposal must have been rejected for this test to mean
+    # anything (if this ever flakes to 0, harden the pruning instead)
+    assert s["tokens_rejected"] > 0
+
+
+# ---------------------------------------------------------------------------
+# rewind exactness: the rollback must be bitwise, not just length-correct
+# ---------------------------------------------------------------------------
+
+def test_rewind_restores_exact_cache_locals():
+    """A cohort that speculated (verify window + rewind) must hold cache
+    locals bit-equal to one that never speculated — that is what lets
+    CacheOps.concat merge cohorts with different acceptance histories."""
+    cfg, model, params = _spiking_model()
+    prompts = _prompts(cfg, (8, 8), seed=7)
+    pol = ExecutionPolicy.for_arch(
+        cfg, speculation=draft(_float_draft(cfg), k=4)
+    )
+    eng = Engine(model, params, max_len=48, max_slots=2, policy=pol)
+    for p in prompts:
+        eng.submit(p, 12)
+    eng.step()
+    cohort = eng.cohorts[0]
+    ref_eng = Engine(model, params, max_len=48, max_slots=2,
+                     policy=ExecutionPolicy.for_arch(cfg))
+    for p in prompts:
+        ref_eng.submit(p, 12)
+    ref_eng.step()
+    ref = ref_eng.cohorts[0]
+    while ref.length < cohort.length:
+        ref_eng.step()
+    assert cohort.length == ref.length
+    al = jax.tree.leaves(eng._axes, is_leaf=lambda x: isinstance(x, tuple))
+    for leaf, rleaf, ax in zip(jax.tree.leaves(cohort.cache),
+                               jax.tree.leaves(ref.cache), al):
+        if "batch" not in ax:
+            np.testing.assert_array_equal(
+                np.asarray(leaf), np.asarray(rleaf),
+                err_msg=f"position-like locals diverge for axes {ax}",
+            )
+    # and concat accepts the speculated cache against the virgin one
+    DenseCacheOps(model.cache_axes()).concat([cohort.cache, ref.cache])
+
+
+# ---------------------------------------------------------------------------
+# metrics window + drain/handoff interaction
+# ---------------------------------------------------------------------------
+
+def test_metrics_reset_covers_speculation_counters():
+    m = EngineMetrics()
+    m.n_speculative_rounds = 3
+    m.n_draft_batches = 4
+    m.n_draft_prefills = 2
+    m.n_tokens_proposed = 12
+    m.n_tokens_accepted = 9
+    m.n_tokens_rejected = 3
+    m.reset()
+    s = m.summary()
+    assert s["speculative_rounds"] == 0
+    assert s["draft_batches"] == 0
+    assert s["draft_prefills"] == 0
+    assert s["tokens_proposed"] == 0
+    assert s["tokens_accepted"] == 0
+    assert s["tokens_rejected"] == 0
+    assert s["acceptance_rate"] == 0
+
+
+@pytest.mark.parametrize("execution", ["sync", "pipelined"])
+def test_drain_discards_half_verified_speculative_progress(execution):
+    """Preempting a speculative engine mid-serve must hand off only
+    VERIFIED tokens: every in-flight token is a prefix of the reference
+    stream, and deterministic replay on resume reproduces it exactly
+    (`Engine.resume` asserts handed-off progress against the replay)."""
+    cfg, model, params = _spiking_model()
+    prompts = _prompts(cfg, _LENS, seed=3)
+    base = Engine(model, params, max_len=48, max_slots=4, batch_align=2,
+                  policy=ExecutionPolicy.for_arch(cfg))
+    reference = base.generate_batch(prompts, 12)
+    pol = ExecutionPolicy.for_arch(
+        cfg, execution=execution, speculation=draft(_float_draft(cfg), k=4)
+    )
+    eng = Engine(model, params, max_len=48, max_slots=4, batch_align=2,
+                 policy=pol)
+    reqs = [eng.submit(p, 12) for p in prompts]
+    eng.step()
+    eng.step()
+    handoff = eng.drain(step_budget=0)
+    inflight = [hr for hr in handoff.requests if hr.state == "inflight"]
+    assert inflight, "expected live requests at preemption"
+    by_rid = {r.rid: i for i, r in enumerate(reqs)}
+    for hr in inflight:
+        want = reference[by_rid[hr.rid]]
+        got = np.asarray(hr.generated, np.int32)
+        # no half-verified overhang: the handoff carries a verified prefix
+        np.testing.assert_array_equal(got, want[: len(got)])
+    successor = Engine.resume(model, params, handoff, policy=pol)
+    out = successor.run()
+    for r in reqs:
+        np.testing.assert_array_equal(out[r.rid], reference[by_rid[r.rid]])
+
+
+def test_generate_batch_speculative_identity_and_counters():
+    cfg, model, params = _spiking_model()
+    prompts = _prompts(cfg, (12, 12, 12), seed=11)
+    base = Engine(model, params, max_len=40, max_slots=4,
+                  policy=ExecutionPolicy.for_arch(cfg))
+    want = base.generate_batch(prompts, 8)
+    pol = ExecutionPolicy.for_arch(
+        cfg, speculation=draft(_float_draft(cfg), k=4)
+    )
+    eng = Engine(model, params, max_len=40, max_slots=4, policy=pol)
+    assert eng.speculative
+    got = eng.generate_batch(prompts, 8)
+    for a, b in zip(want, got):
+        np.testing.assert_array_equal(a, b)
+    s = eng.summary()
+    assert s["tokens_proposed"] == s["tokens_accepted"] + s["tokens_rejected"]
+    # the float-dense draft shares the target's weights, so acceptance
+    # should be essentially perfect — and decode dispatch count collapses
+    assert s["acceptance_rate"] > 0.5
+    assert s["decode_batches"] < base.summary()["decode_batches"]
